@@ -1,0 +1,69 @@
+"""Render §Dry-run / §Roofline markdown tables into EXPERIMENTS.md from the
+JSON artifacts (placeholders: <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE -->).
+
+    PYTHONPATH=src python benchmarks/render_tables.py
+"""
+
+import json
+import re
+
+
+def gb(x):
+    return f"{(x or 0)/2**30:.2f}"
+
+
+def dryrun_table(path="dryrun_results.json"):
+    with open(path) as f:
+        recs = json.load(f)["records"]
+    lines = ["| cell | mesh | FLOPs/dev | bytes/dev | coll GiB/dev (top op) "
+             "| arg GiB/dev | temp GiB/dev |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mesh = "×".join(str(v) for v in r["mesh"].values())
+        coll = r["collective_bytes"]
+        top = max(coll, key=coll.get) if coll else "-"
+        tot = sum(coll.values())
+        mem = r["mem_per_device"]
+        lines.append(
+            f"| {r['cell']} | {mesh} | {r['flops']:.2e} | {r['bytes_accessed']:.2e} "
+            f"| {tot/2**30:.2f} ({top}) | {gb(mem['argument_bytes'])} "
+            f"| {gb(mem['temp_bytes'])} |")
+    return "\n".join(lines)
+
+
+def roofline_table(path="roofline.json"):
+    with open(path) as f:
+        rows = json.load(f)
+    lines = ["| cell | compute (s) | memory (s) | collective (s) | dominant "
+             "| MODEL_FLOPS | useful/HLO |",
+             "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        ur = r["useful_ratio"]
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+            f"| {r['model_flops']:.2e} | {ur and round(ur, 3)} |")
+    return "\n".join(lines)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    try:
+        doc = doc.replace("<!-- DRYRUN_TABLE -->",
+                          "<details><summary>All 84 cell records "
+                          "(both meshes)</summary>\n\n"
+                          + dryrun_table() + "\n\n</details>")
+    except FileNotFoundError:
+        print("dryrun_results.json missing; skipped")
+    try:
+        doc = doc.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    except FileNotFoundError:
+        print("roofline.json missing; skipped")
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline-term extraction for every (arch × shape) cell — §Roofline.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. All compiled-artifact quantities below are PER-DEVICE
+(the post-SPMD module), so the assignment's three terms reduce to:
+
+    compute    = flops_dev / 197e12          (= HLO_FLOPs / (chips · peak))
+    memory     = bytes_dev / 819e9
+    collective = coll_bytes_dev / 50e9
+
+**Scan correction.** XLA's cost_analysis counts a while-loop body ONCE
+(verified empirically in this repo), so a 96-layer scanned transformer would
+be undercounted 96×. We therefore compile each LM/recsys cell at TWO small
+depths with the layer scan UNROLLED (`scan_unroll=True` — exact counting),
+and extrapolate linearly: f(K) = a + b·K with b = f(2u) − f(u),
+a = 2f(u) − f(2u). Linearity is exact because scanned layers are
+homogeneous. GNN cells have no scans — their full-config dry-run numbers are
+already exact. The commongraph engine's fixpoint loop is data-dependent:
+terms are reported PER RELAXATION SWEEP (the natural unit; measured sweep
+counts come from the evolving-graph benchmarks).
+
+MODEL_FLOPS (useful work): 6·N_active·tokens for LM training (2· for
+forward-only), analytic matmul counts for GNN/DIEN — formulas inline. The
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/padding overhead.
+
+Run standalone (own process — the XLA flag must precede jax init):
+    PYTHONPATH=src python benchmarks/roofline.py --json roofline.json \
+        --dryrun dryrun_results.json --markdown roofline.md
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import math              # noqa: E402
+import sys               # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax               # noqa: E402
+
+from repro.configs import ARCH_IDS, get_arch, shapes_for              # noqa: E402
+from repro.configs.base import named, with_sharding                   # noqa: E402
+from repro.launch.dryrun import collective_bytes, dryrun_cell         # noqa: E402
+from repro.launch.mesh import make_production_mesh                    # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+
+# -- per-cell compiled measurement (small-depth, unrolled) ---------------------
+
+def _measure(cell, mesh):
+    args = with_sharding(mesh, cell.in_specs, cell.args)
+    out_shardings = named(mesh, cell.out_specs) if cell.out_specs is not None else None
+    jitted = jax.jit(cell.fn, out_shardings=out_shardings,
+                     donate_argnums=cell.donate)
+    with jax.sharding.set_mesh(mesh):
+        compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll": sum(coll.values()),
+        "coll_by_op": coll,
+    }
+
+
+def _extrapolate(m1, m2, k_total):
+    """f(k) = a + b·k from f(1), f(2) in layer-units; evaluate at k_total."""
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        b = m2[key] - m1[key]
+        a = 2 * m1[key] - m2[key]
+        out[key] = max(a + b * k_total, 0.0)
+    return out
+
+
+def lm_cell_terms(arch, shape, mesh):
+    from repro.configs.lm_family import make_lm_cell
+    cfg, _ = get_arch(arch)
+    u = 2 if cfg.moe_every == 2 else 1          # depth unit (super-layer)
+    k_total = cfg.n_layers // u
+    ms = []
+    for k in (1, 2):
+        cfg_k = dataclasses.replace(cfg, n_layers=k * u, scan_unroll=True)
+        cell = make_lm_cell(cfg_k, shape, mesh)
+        ms.append(_measure(cell, mesh))
+    return _extrapolate(ms[0], ms[1], k_total)
+
+
+def recsys_cell_terms(arch, shape, mesh):
+    from repro.configs.recsys_family import make_recsys_cell
+    cfg, _ = get_arch(arch)
+    s_total = cfg.seq_len
+    ms = []
+    for s in (2, 4):
+        cfg_s = dataclasses.replace(cfg, seq_len=s, scan_unroll=True)
+        cell = make_recsys_cell(cfg_s, shape, mesh)
+        ms.append(_measure(cell, mesh))
+    # seq-units of 2: f(1u)=seq2, f(2u)=seq4 -> evaluate at seq_len/2 units
+    return _extrapolate(ms[0], ms[1], s_total / 2)
+
+
+# -- MODEL_FLOPS (useful work) -------------------------------------------------
+
+def lm_model_flops(arch, shape):
+    from repro.configs.lm_family import LM_SHAPES
+    cfg, _ = get_arch(arch)
+    n_total = cfg.param_count()
+    if cfg.is_moe:
+        active_cfg = dataclasses.replace(cfg, n_experts=cfg.top_k)
+        n_active = active_cfg.param_count()
+    else:
+        n_active = n_total
+    sh = LM_SHAPES[shape]
+    if sh["kind"] == "train":
+        tokens = sh["batch"] * sh["seq"]
+        return 6.0 * n_active * tokens, n_total, n_active
+    if sh["kind"] == "prefill":
+        tokens = sh["batch"] * sh["seq"]
+        return 2.0 * n_active * tokens, n_total, n_active
+    # decode: one token per sequence per step
+    return 2.0 * n_active * sh["batch"], n_total, n_active
+
+
+def gnn_model_flops(arch, shape):
+    """Analytic matmul counts (×3 for train fwd+bwd): formulas per arch."""
+    from repro.configs.gnn_family import GNN_SHAPES, _arch_shape_cfg
+    from repro.graph.sampler import subgraph_shapes
+    cfg0, _ = get_arch(arch)
+    cfg = _arch_shape_cfg(cfg0, shape)
+    sh = GNN_SHAPES[shape]
+    if sh["kind"] == "minibatch":
+        n, e = subgraph_shapes(sh["batch_nodes"], sh["fanout"])
+    elif sh["kind"] == "molecule":
+        n, e = sh["batch"] * sh["n_nodes"], sh["batch"] * sh["n_edges"]
+    else:
+        n, e = sh["n_nodes"], sh["n_edges"]
+    d = cfg.d_hidden
+    if cfg.arch == "gcn":
+        f = 2 * n * cfg.d_in * d + 2 * n * d * cfg.d_out
+    elif cfg.arch == "pna":
+        per_layer = 2 * n * (13 * d) * d + 2 * n * d * d
+        f = 2 * n * cfg.d_in * d + cfg.n_layers * per_layer + 4 * n * d * d
+    elif cfg.arch == "meshgraphnet":
+        mlp2 = lambda a, b: 2 * (a * d + d * d + d * b)  # 2-hidden MLP matmuls
+        per_block = e * mlp2(3 * d, d) + n * mlp2(2 * d, d)
+        f = (n * mlp2(cfg.d_in, d) + e * mlp2(cfg.d_edge, d)
+             + cfg.n_layers * per_block + n * 2 * (d * d + d * cfg.d_out))
+    else:  # graphcast
+        m = max(n // 4, 42)
+        em = 4 * m
+        mlp1 = lambda a, b: 2 * (a * d + d * b)
+        per_block = em * mlp1(3 * d, d) + m * mlp1(2 * d, d)
+        f = (n * mlp1(cfg.n_vars, d) + e * mlp1(cfg.d_edge, d)
+             + cfg.n_layers * per_block + e * mlp1(cfg.d_edge, d)
+             + n * mlp1(2 * d, d) + n * 2 * (d * d + d * cfg.n_vars))
+    return 3.0 * f  # train: fwd + bwd(2x)
+
+
+def recsys_model_flops(arch, shape):
+    from repro.configs.recsys_family import RECSYS_SHAPES
+    cfg, _ = get_arch(arch)
+    sh = RECSYS_SHAPES[shape]
+    d, dh, s = cfg.d_behavior, cfg.gru_dim, cfg.seq_len
+    gru = 2 * (d * 3 * dh + dh * 3 * dh)                # per step
+    att = 2 * ((dh + d) * 80 + 80)
+    mlp = 2 * ((dh + 2 * d) * 200 + 200 * 80 + 80 * 2)
+    aux = 2 * 2 * ((dh + d) * 100 + 100)
+    per_user = s * (2 * gru + att) + mlp
+    if sh["kind"] == "train":
+        return 3.0 * sh["batch"] * (per_user + (s - 1) * aux)
+    if sh["kind"] == "serve":
+        return 1.0 * sh["batch"] * per_user
+    c = sh["n_candidates"]
+    return 1.0 * (s * gru + c * (s * (gru + att) + mlp))
+
+
+# -- assembly -------------------------------------------------------------------
+
+def terms_from(meas):
+    return {
+        "compute_s": meas["flops"] / PEAK_FLOPS,
+        "memory_s": meas["bytes"] / HBM_BW,
+        "collective_s": meas["coll"] / ICI_BW,
+    }
+
+
+def dominant(terms):
+    return max(terms, key=lambda k: terms[k])
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dryrun", default="dryrun_results.json")
+    p.add_argument("--json", default="roofline.json")
+    p.add_argument("--markdown", default=None)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    args = p.parse_args(argv)
+
+    with open(args.dryrun) as f:
+        dry = {(r["cell"], len(r["mesh"])): r for r in json.load(f)["records"]}
+
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+    for arch in ([args.arch] if args.arch else ARCH_IDS):
+        cfg, family = get_arch(arch)
+        for shape in ([args.shape] if args.shape else shapes_for(arch)):
+            cell_name = f"{cfg.name}/{shape}"
+            try:
+                if family == "lm":
+                    meas = lm_cell_terms(arch, shape, mesh)
+                    mf, n_tot, n_act = lm_model_flops(arch, shape)
+                elif family == "recsys":
+                    meas = recsys_cell_terms(arch, shape, mesh)
+                    mf, n_tot, n_act = recsys_model_flops(arch, shape), None, None
+                else:
+                    rec = dry[(cell_name, 2)]
+                    meas = {"flops": rec["flops"], "bytes": rec["bytes_accessed"],
+                            "coll": sum(rec["collective_bytes"].values())}
+                    mf, n_tot, n_act = gnn_model_flops(arch, shape), None, None
+            except Exception as e:  # noqa: BLE001
+                print(f"[roofline] FAIL {cell_name}: {e}")
+                import traceback; traceback.print_exc()
+                continue
+            t = terms_from(meas)
+            hlo_global = meas["flops"] * CHIPS["single"]
+            row = {
+                "cell": cell_name,
+                "family": family,
+                **{k: round(v, 6) for k, v in t.items()},
+                "dominant": dominant(t),
+                "hlo_flops_dev": meas["flops"],
+                "hlo_bytes_dev": meas["bytes"],
+                "coll_bytes_dev": meas["coll"],
+                "model_flops": mf,
+                "useful_ratio": (mf / hlo_global) if hlo_global else None,
+                "peak_bytes_dev": dry.get((cell_name, 2), {}).get(
+                    "mem_per_device", {}).get("peak_bytes"),
+            }
+            rows.append(row)
+            print(f"[roofline] {cell_name:45s} comp {t['compute_s']:.4f}s "
+                  f"mem {t['memory_s']:.4f}s coll {t['collective_s']:.4f}s "
+                  f"dom={row['dominant']:<12s} useful={row['useful_ratio'] and round(row['useful_ratio'],3)}")
+
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write("| cell | compute (s) | memory (s) | collective (s) | dominant "
+                    "| MODEL_FLOPS | useful/HLO |\n|---|---|---|---|---|---|---|\n")
+            for r in rows:
+                f.write(f"| {r['cell']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+                        f"| {r['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+                        f"| {r['model_flops']:.3e} "
+                        f"| {r['useful_ratio'] and round(r['useful_ratio'], 3)} |\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

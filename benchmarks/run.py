@@ -1,0 +1,112 @@
+"""Benchmark harness entry: one function per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+Scales are container-sized (DESIGN.md §7.4); pass --full for larger graphs.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def bench_table1(full: bool):
+    from benchmarks.table1 import run_table1
+    graphs = {"RM-20k": (20_000, 200_000)} if not full else \
+        {"RM-100k": (100_000, 1_000_000), "RM-20k": (20_000, 200_000)}
+    t0 = time.perf_counter()
+    rows = run_table1(graphs, num_snapshots=6 if not full else 12,
+                      batch_changes=6_000 if not full else 20_000)
+    dt = time.perf_counter() - t0
+    out = []
+    for r in rows:
+        assert r.verified, f"table1 row {r.graph}/{r.alg} failed verification"
+        out.append((f"table1/{r.graph}/{r.alg}/ks", r.ks_time_s * 1e6,
+                    f"dh={r.dh_speedup:.2f}x ws={r.ws_speedup:.2f}x "
+                    f"dhb={r.dhb_speedup:.2f}x"))
+    spe = [r.ws_speedup for r in rows]
+    out.append(("table1/summary", dt * 1e6,
+                f"ws-speedup-range={min(spe):.2f}x..{max(spe):.2f}x"))
+    return out
+
+
+def bench_del_vs_add(full: bool):
+    from benchmarks.del_vs_add import run_del_vs_add
+    out = []
+    for alg in ("bfs", "sssp", "sswp", "ssnp", "viterbi"):
+        r = run_del_vs_add(alg=alg, n=10_000, e=100_000, k=3_000,
+                           repeats=2 if not full else 5)
+        assert r["verified"], f"del_vs_add {alg} verification failed"
+        out.append((f"del_vs_add/{alg}", r["t_del_s"] * 1e6,
+                    f"del/add-time={r['ratio_time']:.2f}x work={r['ratio_work']:.2f}x"))
+    return out
+
+
+def bench_tg_sharing(full: bool):
+    from benchmarks.tg_sharing import run_tg_sharing
+    rows = run_tg_sharing(n=10_000, e=100_000, batch_changes=4_000,
+                          windows=(4, 8, 16) if not full else (4, 8, 16, 32))
+    return [(f"tg_sharing/window{r['window']}", 0.0,
+             f"dh={r['dh_edges']} opt={r['optimal_edges']} "
+             f"saving={r['optimal_saving']:.1%}") for r in rows]
+
+
+def bench_kernels(full: bool):
+    """Interpret-mode kernels vs jnp oracle: correctness + oracle timing."""
+    import jax
+    import numpy as np
+    from repro.kernels import edge_relax
+    from repro.kernels.edge_relax.ref import edge_relax_ref
+
+    n, e = 5_000, 60_000
+    key = jax.random.PRNGKey(0)
+    vals = jax.random.uniform(key, (n,)) * 10
+    src = jax.random.randint(jax.random.PRNGKey(1), (e,), 0, n)
+    dst = jax.random.randint(jax.random.PRNGKey(2), (e,), 0, n)
+    w = jax.random.uniform(jax.random.PRNGKey(3), (e,)) + 0.01
+    out = []
+    for op in ("min_plus", "max_min"):
+        a = edge_relax(vals, src, dst, w, op=op, num_nodes=n)
+        b = edge_relax_ref(vals, src, dst, w, op=op, num_nodes=n)
+        fin = np.isfinite(np.asarray(b))
+        assert np.allclose(np.asarray(a)[fin], np.asarray(b)[fin], rtol=1e-6)
+        t0 = time.perf_counter()
+        edge_relax_ref(vals, src, dst, w, op=op, num_nodes=n).block_until_ready()
+        dt = time.perf_counter() - t0
+        out.append((f"kernels/edge_relax/{op}", dt * 1e6, "allclose=1"))
+    return out
+
+
+BENCHES = {
+    "table1": bench_table1,
+    "del_vs_add": bench_del_vs_add,
+    "tg_sharing": bench_tg_sharing,
+    "kernels": bench_kernels,
+}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default=None, choices=list(BENCHES))
+    args = p.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn(args.full):
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as exc:  # noqa: BLE001
+            ok = False
+            print(f"{name},NaN,FAILED:{exc}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

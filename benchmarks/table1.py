@@ -1,0 +1,107 @@
+"""Paper Table 1 reproduction: KickStarter vs CommonGraph DH / WS.
+
+Protocol (paper §3, scaled to this container per DESIGN.md §7.4): n
+snapshots separated by batches of edge changes split 50/50 between
+additions and deletions; five benchmarks (BFS, SSSP, SSWP, SSNP, Viterbi);
+average execution time for the whole window, reported as KS time and
+DH / WS speedups — the same table layout as the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (
+    SnapshotStore,
+    optimal_plan,
+    run_direct_hop,
+    run_direct_hop_batched,
+    run_kickstarter_stream,
+    run_plan,
+)
+from repro.graph import make_evolving_sequence, run_to_fixpoint
+from repro.graph.semiring import ALL_SEMIRINGS
+
+ALG_ORDER = ["bfs", "sssp", "sswp", "ssnp", "viterbi"]
+
+
+@dataclasses.dataclass
+class Table1Row:
+    graph: str
+    alg: str
+    ks_time_s: float
+    dh_speedup: float
+    dhb_speedup: float
+    ws_speedup: float
+    verified: bool
+
+
+def run_table1(
+    graphs: dict[str, tuple[int, int]] | None = None,
+    num_snapshots: int = 8,
+    batch_changes: int = 10_000,
+    source: int = 0,
+    seed: int = 0,
+    verify: bool = True,
+    repeats: int = 1,
+    warmup: bool = True,
+) -> list[Table1Row]:
+    if graphs is None:
+        graphs = {"RM-50k": (50_000, 400_000), "RM-10k": (10_000, 100_000)}
+    rows = []
+    for gname, (n, e) in graphs.items():
+        seq = make_evolving_sequence(n, e, num_snapshots, batch_changes, seed=seed)
+        store = SnapshotStore(seq)
+        plan = optimal_plan(store)
+        for alg in ALG_ORDER:
+            sr = ALL_SEMIRINGS[alg]
+            t_ks = t_dh = t_dhb = t_ws = 0.0
+            if warmup:  # compile everything once, untimed (steady-state times)
+                run_kickstarter_stream(store, sr, source)
+                run_direct_hop(store, sr, source)
+                run_direct_hop_batched(store, sr, source)
+                run_plan(store, plan, sr, source)
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                ks_res, _ = run_kickstarter_stream(store, sr, source)
+                t_ks += time.perf_counter() - t0
+                dh = run_direct_hop(store, sr, source)
+                t_dh += dh.wall_s
+                dhb = run_direct_hop_batched(store, sr, source)
+                t_dhb += dhb.wall_s
+                ws = run_plan(store, plan, sr, source)
+                t_ws += ws.wall_s
+            ok = True
+            if verify:
+                for i in range(num_snapshots):
+                    ref = run_to_fixpoint(store.snapshot_view(i), sr, source).values
+                    for res in (ks_res[i], dh.results[i], dhb.results[i],
+                                ws.results[i]):
+                        ok &= bool(np.allclose(np.asarray(res), np.asarray(ref),
+                                               rtol=1e-6, equal_nan=True))
+            rows.append(Table1Row(gname, alg, t_ks / repeats,
+                                  t_ks / t_dh, t_ks / t_dhb, t_ks / t_ws, ok))
+    return rows
+
+
+def print_table(rows: list[Table1Row]):
+    print(f"{'G':10s} {'Alg':8s} {'KS time':>9s} {'DH spe.':>8s} "
+          f"{'DH-batch':>9s} {'WS spe.':>8s} {'ok':>3s}")
+    for r in rows:
+        print(f"{r.graph:10s} {r.alg:8s} {r.ks_time_s:8.2f}s {r.dh_speedup:7.2f}x "
+              f"{r.dhb_speedup:8.2f}x {r.ws_speedup:7.2f}x {'Y' if r.verified else 'N':>3s}")
+
+
+if __name__ == "__main__":
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--snapshots", type=int, default=8)
+    p.add_argument("--changes", type=int, default=10_000)
+    p.add_argument("--nodes", type=int, default=None)
+    p.add_argument("--edges", type=int, default=None)
+    a = p.parse_args()
+    graphs = ({"custom": (a.nodes, a.edges)} if a.nodes else None)
+    print_table(run_table1(graphs, a.snapshots, a.changes))

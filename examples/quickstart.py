@@ -1,0 +1,53 @@
+"""Quickstart: the paper in 40 lines.
+
+Build an evolving graph, answer an SSSP query on every snapshot three ways
+(KickStarter streaming, CommonGraph Direct-Hop, TG work-sharing), verify
+they agree, and show the deletion-free schedules' work saving.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    SnapshotStore,
+    optimal_plan,
+    plan_added_edges,
+    run_direct_hop,
+    run_kickstarter_stream,
+    run_plan,
+)
+from repro.graph import make_evolving_sequence, run_to_fixpoint
+from repro.graph.semiring import SSSP
+
+# 1. an evolving graph: 8 snapshots, each 2000 edge changes (50% deletions)
+seq = make_evolving_sequence(num_nodes=5_000, num_edges=50_000,
+                             num_snapshots=8, batch_changes=2_000, seed=0)
+store = SnapshotStore(seq)
+print(f"snapshots: {seq.num_snapshots}, CommonGraph edges: "
+      f"{store.window_size(0, 7):,} of {seq.snapshot_keys[0].shape[0]:,}")
+
+# 2. baseline: KickStarter streams additions AND deletions in sequence
+ks_results, ks_stats = run_kickstarter_stream(store, SSSP, source=0)
+print(f"KickStarter: {sum(s.wall_s for s in ks_stats):.2f}s, "
+      f"edge work {sum(s.edge_work for s in ks_stats):,.0f}")
+
+# 3. CommonGraph Direct-Hop: deletions become additions from the apex
+dh = run_direct_hop(store, SSSP, source=0)
+print(f"Direct-Hop:  {dh.wall_s:.2f}s, "
+      f"edge work {dh.base_stats.edge_work + sum(h.edge_work for h in dh.hop_stats):,.0f}")
+
+# 4. Triangular-Grid work sharing (DP-optimal plan)
+plan = optimal_plan(store)
+ws = run_plan(store, plan, SSSP, source=0)
+print(f"Work-Share:  {ws.wall_s:.2f}s, Δ-edges {ws.added_edges:,} "
+      f"(Direct-Hop would stream "
+      f"{plan_added_edges(store, __import__('repro.core', fromlist=['direct_hop_plan']).direct_hop_plan(n=8)):,})")
+
+# 5. all three agree with from-scratch on every snapshot
+for i in range(8):
+    ref = run_to_fixpoint(store.snapshot_view(i), SSSP, 0).values
+    np.testing.assert_allclose(np.asarray(ks_results[i]), np.asarray(ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dh.results[i]), np.asarray(ref), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ws.results[i]), np.asarray(ref), rtol=1e-6)
+print("all modes exact on all snapshots ✓")

@@ -1,0 +1,88 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests.
+
+10 assigned architectures + the paper's own engine (``commongraph``).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import Cell, MeshAxes
+
+ARCH_IDS = [
+    "qwen3-moe-30b-a3b",
+    "llama4-maverick-400b-a17b",
+    "llama3.2-3b",
+    "nemotron-4-340b",
+    "stablelm-1.6b",
+    "pna",
+    "graphcast",
+    "gcn-cora",
+    "meshgraphnet",
+    "dien",
+]
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "llama3.2-3b": "llama3_2_3b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "pna": "pna",
+    "graphcast": "graphcast",
+    "gcn-cora": "gcn_cora",
+    "meshgraphnet": "meshgraphnet",
+    "dien": "dien",
+}
+
+
+def get_arch(arch_id: str):
+    """Returns (config, family) for an architecture id."""
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG, mod.FAMILY
+
+
+def shapes_for(arch_id: str) -> list[str]:
+    _, family = get_arch(arch_id)
+    if family == "lm":
+        from repro.configs.lm_family import LM_SHAPES
+        return list(LM_SHAPES)
+    if family == "gnn":
+        from repro.configs.gnn_family import GNN_SHAPES
+        return list(GNN_SHAPES)
+    if family == "recsys":
+        from repro.configs.recsys_family import RECSYS_SHAPES
+        return list(RECSYS_SHAPES)
+    raise ValueError(family)
+
+
+def make_cell(arch_id: str, shape_id: str, mesh) -> Cell:
+    cfg, family = get_arch(arch_id)
+    if family == "lm":
+        from repro.configs.lm_family import make_lm_cell
+        return make_lm_cell(cfg, shape_id, mesh)
+    if family == "gnn":
+        from repro.configs.gnn_family import make_gnn_cell
+        return make_gnn_cell(cfg, shape_id, mesh)
+    if family == "recsys":
+        from repro.configs.recsys_family import make_recsys_cell
+        return make_recsys_cell(cfg, shape_id, mesh)
+    raise ValueError(family)
+
+
+def reduced_config(arch_id: str):
+    cfg, family = get_arch(arch_id)
+    if family == "lm":
+        from repro.configs.lm_family import reduced_lm_config
+        return reduced_lm_config(cfg), family
+    if family == "gnn":
+        from repro.configs.gnn_family import reduced_gnn_config
+        return reduced_gnn_config(cfg), family
+    if family == "recsys":
+        from repro.configs.recsys_family import reduced_recsys_config
+        return reduced_recsys_config(cfg), family
+    raise ValueError(family)
+
+
+def all_cells(mesh) -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in shapes_for(a)]

@@ -1,0 +1,78 @@
+"""Config-layer plumbing: mesh-axis handles and dry-run cells.
+
+A *cell* = (architecture × input shape): a step function, abstract arguments
+(ShapeDtypeStructs — never allocated), and PartitionSpecs for every input /
+output. launch/dryrun.py jits each cell with its specs and lower+compiles it
+on the production mesh; launch/train.py runs the same cells concretely on
+whatever mesh is actually available (1 CPU device in the smoke tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis handles; batch may span ('pod', 'data') or just ('data',)."""
+    batch: tuple[str, ...] = ("data",)
+    fsdp: str = "data"
+    model: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        if "pod" in names:
+            return MeshAxes(batch=("pod", "data"))
+        return MeshAxes(batch=("data",))
+
+    def n_batch_shards(self, mesh) -> int:
+        return math.prod(mesh.shape[a] for a in self.batch)
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-runnable (arch × shape) computation."""
+    name: str
+    fn: Callable                 # jit target
+    args: tuple                  # abstract ShapeDtypeStructs (or concrete arrays)
+    in_specs: Any                # pytree of PartitionSpec matching args
+    out_specs: Any = None        # optional pytree of PartitionSpec
+    donate: tuple[int, ...] = ()
+    static_argnums: tuple[int, ...] = ()
+
+
+def named(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def with_sharding(mesh, spec_tree, struct_tree):
+    """Attach shardings to a ShapeDtypeStruct pytree (for .lower())."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda struct, spec: jax.ShapeDtypeStruct(
+            struct.shape, struct.dtype,
+            sharding=NamedSharding(mesh, spec if spec is not None else P())),
+        struct_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def make_constrainer(mesh, spec: P):
+    """Residual-stream re-annotation (Megatron-SP posture) for layer scans."""
+    from jax.sharding import NamedSharding
+    ns = NamedSharding(mesh, spec)
+    def con(x):
+        return jax.lax.with_sharding_constraint(x, ns)
+    return con

@@ -1,0 +1,67 @@
+"""The paper's own engine as a production-mesh config (``--arch commongraph``).
+
+The batched Direct-Hop/TG executor: snapshot axis over (pod, data) — the
+parallelism CommonGraph unlocks by removing the sequential dependence — and
+the node-state/segment-reduce axis over `model`. One dry-run cell per
+protocol scale. This is the cell used for the paper-representative
+hillclimb in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, MeshAxes
+from repro.graph.edgeset import EdgeBlock
+from repro.graph.engine import batched_incremental
+from repro.graph.semiring import SSSP
+
+COMMONGRAPH_SHAPES = {
+    # snapshots  nodes        CG edges      Δ edges (per snapshot)
+    "window_64x": dict(n_snapshots=64, n_nodes=8_388_608, cg_edges=67_108_864,
+                       delta_edges=1_048_576),
+    "window_32x": dict(n_snapshots=32, n_nodes=1_048_576, cg_edges=16_777_216,
+                       delta_edges=262_144),
+}
+
+
+def make_commongraph_cell(shape_id: str, mesh, max_iters: int = 64) -> Cell:
+    ax = MeshAxes.for_mesh(mesh)
+    sh = COMMONGRAPH_SHAPES[shape_id]
+    s, n = sh["n_snapshots"], sh["n_nodes"]
+    e_cg, e_d = sh["cg_edges"], sh["delta_edges"]
+    S = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    semiring = SSSP
+
+    values = S((s, n), f32)
+    parent = S((s, n), i32)
+    cg = EdgeBlock(S((e_cg,), i32), S((e_cg,), i32), S((e_cg,), f32))
+    delta = EdgeBlock(S((s, e_d), i32), S((s, e_d), i32), S((s, e_d), f32))
+
+    bd = ax.batch
+    # snapshots over (pod, data); node state replicated within a snapshot
+    # shard; edges over model (partial segment-reduce + semiring all-reduce).
+    state_spec = P(bd, None)
+    cg_spec = EdgeBlock(P(ax.model), P(ax.model), P(ax.model))
+    delta_spec = EdgeBlock(P(bd, ax.model), P(bd, ax.model), P(bd, ax.model))
+
+    def evolve_step(values, parent, cg_block, delta_block):
+        # track_parents=False: the deletion-free schedule never trims, so
+        # dependence tracking is dead weight — measured −50% flops/bytes and
+        # −49.9% collective per sweep on this cell (EXPERIMENTS.md §Perf A).
+        res = batched_incremental(
+            semiring, n, max_iters, values, parent, (cg_block,), (delta_block,),
+            track_parents=False)
+        return res.values, res.parent, res.iterations, res.edge_work
+
+    return Cell(
+        name=f"commongraph/{shape_id}",
+        fn=evolve_step,
+        args=(values, parent, cg, delta),
+        in_specs=(state_spec, state_spec, cg_spec, delta_spec),
+        out_specs=(state_spec, state_spec, P(bd), P(bd)),
+        donate=(0, 1),
+    )

@@ -1,0 +1,208 @@
+"""GNN-family cells: full_graph_sm / minibatch_lg / ogb_products / molecule.
+
+Sharding plan (DESIGN.md §5): edge arrays shard over every mesh axis
+(message compute is embarrassingly edge-parallel); node arrays shard over
+(data, model); tiny MLP params replicate; the minibatch feature table
+row-shards like an embedding. The segment-sum scatter across node shards is
+the collective the roofline sees (the same pattern as the paper engine's
+semiring reduce).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, MeshAxes, make_constrainer
+from repro.graph.sampler import subgraph_shapes
+from repro.models.gnn import (
+    GNNConfig,
+    gnn_loss,
+    init_gnn_params,
+    latent_constrainer,
+)
+from repro.optim import adamw_init, adamw_update
+from repro.optim.adamw import AdamWState
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="full", n_nodes=2_708, n_edges=10_556, d_feat=1_433),
+    "minibatch_lg": dict(kind="minibatch", n_nodes=232_965, n_edges=114_615_892,
+                         batch_nodes=1_024, fanout=(15, 10), d_feat=602),
+    "ogb_products": dict(kind="full", n_nodes=2_449_029, n_edges=61_859_140,
+                         d_feat=100),
+    "molecule": dict(kind="molecule", n_nodes=30, n_edges=64, batch=128, d_feat=32),
+}
+
+# jit-boundary shardings need even divisibility: node arrays pad to 1024
+# (so the derived graphcast mesh n/4 still divides the 256-way node sharding)
+# and edge arrays to 512 (the multi-pod edge sharding degree). Padded edges
+# carry the sentinel dst == n (the substrate's standard convention); padded
+# labels are -1 (masked by the CE loss).
+NODE_PAD, EDGE_PAD = 1024, 512
+
+
+def _pad(n: int, g: int) -> int:
+    return ((n + g - 1) // g) * g
+
+
+def _arch_shape_cfg(cfg: GNNConfig, shape_id: str) -> GNNConfig:
+    """Bind the generic shape's feature dims into the arch config."""
+    sh = GNN_SHAPES[shape_id]
+    d_in = cfg.n_vars if cfg.arch == "graphcast" else sh["d_feat"]
+    d_out = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47,
+             "molecule": 1}[shape_id]
+    task = cfg.task
+    if cfg.arch == "graphcast":
+        d_out, task = cfg.n_vars, "node_reg"
+    elif shape_id == "molecule":
+        task = "graph_reg"
+    feature_table = (_pad(sh["n_nodes"], NODE_PAD)
+                     if sh["kind"] == "minibatch" else 0)
+    return dataclasses.replace(cfg, d_in=d_in, d_out=d_out, task=task,
+                               feature_table=feature_table)
+
+
+def _graph_input_specs(cfg: GNNConfig, shape_id: str, ax: MeshAxes):
+    """(abstract batch, batch PartitionSpecs) for one shape cell."""
+    sh = GNN_SHAPES[shape_id]
+    all_axes = ax.batch + (ax.model,)
+    nodeP = P((ax.fsdp, ax.model))
+    edgeP = P(all_axes)
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+
+    if sh["kind"] == "minibatch":
+        n_local, n_edges = subgraph_shapes(sh["batch_nodes"], sh["fanout"])
+        n_local, n_edges = _pad(n_local, NODE_PAD), _pad(n_edges, EDGE_PAD)
+        batch = {
+            "nodes": S((n_local,), i32),
+            "node_valid": S((n_local,), jnp.bool_),
+            "src": S((n_edges,), i32),
+            "dst": S((n_edges,), i32),
+            "edge_feat": S((n_edges, cfg.d_edge), f32),
+            "n_seeds": S((), i32),
+        }
+        specs = {
+            "nodes": nodeP, "node_valid": nodeP,
+            "src": edgeP, "dst": edgeP, "edge_feat": P(all_axes, None),
+            "n_seeds": P(),
+        }
+        if cfg.task == "node_class":
+            batch["labels"] = S((sh["batch_nodes"],), i32)
+            specs["labels"] = P((ax.fsdp,))
+        else:
+            batch["targets"] = S((sh["batch_nodes"], cfg.d_out), f32)
+            specs["targets"] = P((ax.fsdp,), None)
+        n_nodes_model = n_local
+    elif sh["kind"] == "molecule":
+        n = _pad(sh["batch"] * sh["n_nodes"], NODE_PAD)
+        e = _pad(sh["batch"] * sh["n_edges"], EDGE_PAD)
+        batch = {
+            "x": S((n, cfg.d_in), f32),
+            "src": S((e,), i32), "dst": S((e,), i32),
+            "edge_feat": S((e, cfg.d_edge), f32),
+            "graph_id": S((n,), i32),
+            "graph_targets": S((sh["batch"], cfg.d_out), f32),
+        }
+        specs = {
+            "x": P((ax.fsdp, ax.model), None),
+            "src": edgeP, "dst": edgeP, "edge_feat": P(all_axes, None),
+            "graph_id": nodeP,
+            "graph_targets": P((ax.fsdp,), None),
+        }
+        n_nodes_model = n
+    else:  # full graph
+        n, e = _pad(sh["n_nodes"], NODE_PAD), _pad(sh["n_edges"], EDGE_PAD)
+        batch = {
+            "x": S((n, cfg.d_in), f32),
+            "src": S((e,), i32), "dst": S((e,), i32),
+            "edge_feat": S((e, cfg.d_edge), f32),
+        }
+        specs = {
+            "x": P((ax.fsdp, ax.model), None),
+            "src": edgeP, "dst": edgeP, "edge_feat": P(all_axes, None),
+        }
+        if cfg.task == "node_class":
+            batch["labels"] = S((n,), i32)
+            specs["labels"] = nodeP
+        else:
+            batch["targets"] = S((n, cfg.d_out), f32)
+            specs["targets"] = P((ax.fsdp, ax.model), None)
+        n_nodes_model = n
+
+    if cfg.arch == "graphcast":
+        # derived mesh graph (DESIGN.md §4): grid=the shape's graph
+        m = max(n_nodes_model // 4, 42)
+        em = 4 * m
+        e_g2m = batch["src"].shape[0]
+        batch.update({
+            "mesh_valid": S((m,), jnp.bool_),
+            "g2m_src": batch.pop("src"), "g2m_dst": batch.pop("dst"),
+            "g2m_feat": batch.pop("edge_feat"),
+            "mesh_src": S((em,), i32), "mesh_dst": S((em,), i32),
+            "mesh_feat": S((em, cfg.d_edge), f32),
+            "m2g_src": S((e_g2m,), i32), "m2g_dst": S((e_g2m,), i32),
+            "m2g_feat": S((e_g2m, cfg.d_edge), f32),
+        })
+        specs.update({
+            "mesh_valid": nodeP,
+            "g2m_src": specs.pop("src"), "g2m_dst": specs.pop("dst"),
+            "g2m_feat": specs.pop("edge_feat"),
+            "mesh_src": edgeP, "mesh_dst": edgeP, "mesh_feat": P(all_axes, None),
+            "m2g_src": edgeP, "m2g_dst": edgeP, "m2g_feat": P(all_axes, None),
+        })
+        # graphcast regresses grid vars; retarget shape-specific labels
+        for k in ("labels", "targets"):
+            batch.pop(k, None); specs.pop(k, None)
+        batch["targets"] = S((n_nodes_model, cfg.n_vars), f32)
+        specs["targets"] = P((ax.fsdp, ax.model), None)
+    return batch, specs
+
+
+def gnn_param_specs(cfg: GNNConfig, params, ax: MeshAxes):
+    """Replicate MLP params; row-shard the feature table if present."""
+    specs = jax.tree.map(lambda a: P(*((None,) * a.ndim)), params)
+    if cfg.feature_table:
+        specs["features"] = P((ax.fsdp, ax.model), None)
+    return specs
+
+
+def make_gnn_cell(cfg: GNNConfig, shape_id: str, mesh) -> Cell:
+    ax = MeshAxes.for_mesh(mesh)
+    cfg = _arch_shape_cfg(cfg, shape_id)
+    batch, bspecs = _graph_input_specs(cfg, shape_id, ax)
+    params = jax.eval_shape(lambda: init_gnn_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: adamw_init(params))
+    pspecs = gnn_param_specs(cfg, params, ax)
+    ospecs = AdamWState(m=pspecs, v=pspecs, count=P())
+
+    # rows-over-(data, model) annotation for internal [rows, d] latents —
+    # without it the partitioner replicates multi-GiB node/edge hidden
+    # states per device at ogb_products scale (§Perf addendum D).
+    lat_con = make_constrainer(mesh, P((ax.fsdp, ax.model), None))
+
+    def train_step(params, opt_state, batch):
+        with latent_constrainer(lat_con):
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn_loss(cfg, p, batch))(params)
+        new_p, new_o, gnorm = adamw_update(grads, opt_state, params, lr=1e-3,
+                                           weight_decay=0.0)
+        return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+    return Cell(
+        name=f"{cfg.name}/{shape_id}",
+        fn=train_step,
+        args=(params, opt, batch),
+        in_specs=(pspecs, ospecs, bspecs),
+        out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
+        donate=(0, 1),
+    )
+
+
+def reduced_gnn_config(cfg: GNNConfig) -> GNNConfig:
+    return dataclasses.replace(
+        cfg, n_layers=min(cfg.n_layers, 2), d_hidden=16,
+        n_vars=8 if cfg.arch == "graphcast" else cfg.n_vars)

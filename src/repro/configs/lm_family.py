@@ -1,0 +1,254 @@
+"""LM-family cells: train_4k / prefill_32k / decode_32k / long_500k.
+
+Sharding plan (DESIGN.md §5):
+* params — FSDP over `data` × tensor-parallel over `model` (Megatron
+  row/col splits); experts over `model` (EP); embeddings vocab over `model`.
+* train activations — batch over (pod, data); the residual carry is
+  re-annotated with sequence over `model` (Megatron-SP) so the L× saved
+  activations of the remat'd scan stay sharded.
+* decode — KV cache: batch over (pod, data), sequence over `model`
+  (flash-style partial-softmax combine is one all-reduce). long_500k
+  (batch=1) relies on the sequence shards entirely; O(S) per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, MeshAxes, make_constrainer
+from repro.models.transformer import (
+    LMConfig,
+    init_kv_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_loss,
+    lm_prefill,
+)
+from repro.optim import adamw_init, adamw_update
+from repro.optim.adamw import AdamWState
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+# -- param specs --------------------------------------------------------------
+
+def lm_param_specs(cfg: LMConfig, ax: MeshAxes, tp_size: int = 16):
+    f, m = ax.fsdp, ax.model
+    if cfg.n_heads % tp_size == 0:
+        # Megatron head-parallel attention
+        attn = {
+            "wq": P(None, f, m, None),
+            "wk": P(None, f, None, None),
+            "wv": P(None, f, None, None),
+            "wo": P(None, m, None, f),
+        }
+    else:
+        # head_dim-parallel fallback (llama4 40H, llama3.2 24H): contractions
+        # over Dh produce partial sums + one all-reduce; interleaved RoPE
+        # keeps the rotation shard-local.
+        attn = {
+            "wq": P(None, f, None, m),
+            "wk": P(None, f, None, m),
+            "wv": P(None, f, None, m),
+            "wo": P(None, None, m, f),
+        }
+    attn.update({
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+    })
+    specs = {
+        "embed": P(m, f),
+        "attn": attn,
+        "final_ln": P(None),
+        "lm_head": P(f, m),
+    }
+    kinds = cfg.layer_kinds()
+    if any(k == "dense" for k in kinds):
+        ffn = {"w_up": P(None, f, m), "w_down": P(None, m, f)}
+        if cfg.activation == "swiglu":
+            ffn["w_gate"] = P(None, f, m)
+        specs["ffn"] = ffn
+    if any(k == "moe" for k in kinds):
+        if cfg.expert_zero1:
+            # §Perf hillclimb B iter-2: expert weights over model only (no
+            # per-layer FSDP gathers); optimizer state keeps the data dim
+            # sharded (see lm_opt_specs) = ZeRO-1, one gather per step.
+            moe = {
+                "router": P(None, f, None),
+                "w_gate": P(None, m, None, None),
+                "w_up": P(None, m, None, None),
+                "w_down": P(None, m, None, None),
+            }
+        else:
+            moe = {
+                "router": P(None, f, None),
+                "w_gate": P(None, m, f, None),
+                "w_up": P(None, m, f, None),
+                "w_down": P(None, m, None, f),
+            }
+        if cfg.n_shared_experts:
+            moe["shared"] = {"w_gate": P(None, f, m), "w_up": P(None, f, m),
+                             "w_down": P(None, m, f)}
+        specs["moe"] = moe
+    return specs
+
+
+def lm_opt_specs(param_specs, cfg: LMConfig | None = None, ax: MeshAxes | None = None):
+    state_specs = param_specs
+    if cfg is not None and cfg.expert_zero1 and "moe" in param_specs:
+        # fp32 m/v for experts re-shard the D dim over data (ZeRO-1)
+        import copy
+        state_specs = dict(param_specs)
+        moe = dict(param_specs["moe"])
+        for k in ("w_gate", "w_up"):
+            moe[k] = P(None, ax.model, ax.fsdp, None)
+        moe["w_down"] = P(None, ax.model, None, ax.fsdp)
+        state_specs["moe"] = moe
+    return AdamWState(m=state_specs, v=state_specs, count=P())
+
+
+def abstract_lm_state(cfg: LMConfig, with_opt: bool):
+    params = jax.eval_shape(lambda: init_lm_params(jax.random.PRNGKey(0), cfg))
+    if not with_opt:
+        return params, None
+    opt = jax.eval_shape(lambda: adamw_init(params))
+    return params, opt
+
+
+# -- cells --------------------------------------------------------------------
+
+def make_lm_cell(cfg: LMConfig, shape_id: str, mesh) -> Cell:
+    ax = MeshAxes.for_mesh(mesh)
+    sh = LM_SHAPES[shape_id]
+    b, s = sh["batch"], sh["seq"]
+    pspecs = lm_param_specs(cfg, ax, tp_size=mesh.shape[ax.model])
+    bd = ax.batch
+    n_groups = ax.n_batch_shards(mesh)
+    # Residual carry stays sequence-sharded (Megatron-SP posture). A
+    # "block_in" re-gather constraint was tried and REFUTED (§Perf hillclimb
+    # B iter-3: it duplicates activations through remat, +8% collective,
+    # +48% memory) — the partitioner's own placement wins; hook left in place.
+    # "weights"/"logits" constraints are §Perf hillclimb C (nemotron).
+    def _degather(spec: P) -> P:
+        dims = list(spec)[1:]  # drop the stacked-layer dim
+        return P(*[None if d == ax.fsdp else d for d in dims])
+
+    _wspecs = {}
+    for grp in ("attn", "ffn"):
+        for k2, spec in pspecs.get(grp, {}).items():
+            _wspecs[k2] = _degather(spec)
+    _wcons = {k2: make_constrainer(mesh, s) for k2, s in _wspecs.items()}
+
+    def weights_con(lp: dict):
+        return {k2: (_wcons[k2](v) if k2 in _wcons else v)
+                for k2, v in lp.items()}
+
+    constrain = {
+        "residual": make_constrainer(mesh, P(bd, ax.model, None)),
+        "weights": weights_con,
+        "logits": make_constrainer(mesh, P(bd, None, ax.model)),
+    }
+
+    if sh["kind"] == "train":
+        params, opt = abstract_lm_state(cfg, with_opt=True)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        ospecs = lm_opt_specs(pspecs, cfg, ax)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                return lm_loss(cfg, p, batch["tokens"], batch["labels"],
+                               n_groups=n_groups, constrain=constrain)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            # (bf16 grad-sync was tried and REFUTED here — §Perf hillclimb C
+            # iter-2: the fp32 dW reductions happen inside the backward
+            # contraction, before any post-hoc cast can narrow them.)
+            new_p, new_o, gnorm = adamw_update(grads, opt_state, params)
+            return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+        return Cell(
+            name=f"{cfg.name}/{shape_id}",
+            fn=train_step,
+            args=(params, opt, batch),
+            in_specs=(pspecs, ospecs, {"tokens": P(bd, None), "labels": P(bd, None)}),
+            out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
+            donate=(0, 1),
+        )
+
+    if sh["kind"] == "prefill":
+        if cfg.attn_chunk == 0:
+            # 32k prefill cannot materialize [S, S] scores (17 GB/device):
+            # online-softmax chunking is load-bearing here, not an optimization.
+            import dataclasses as _dc
+            cfg = _dc.replace(cfg, attn_chunk=2048)
+        params, _ = abstract_lm_state(cfg, with_opt=False)
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        cache_spec = {"k": P(None, bd, ax.model, None, None),
+                      "v": P(None, bd, ax.model, None, None)}
+
+        def prefill_step(params, tokens):
+            return lm_prefill(cfg, params, tokens, n_groups=n_groups,
+                              constrain=constrain)
+
+        return Cell(
+            name=f"{cfg.name}/{shape_id}",
+            fn=prefill_step,
+            args=(params, tokens),
+            in_specs=(pspecs, P(bd, None)),
+            out_specs=(P(bd, ax.model), cache_spec),
+        )
+
+    # decode
+    params, _ = abstract_lm_state(cfg, with_opt=False)
+    cache = jax.eval_shape(lambda: init_kv_cache(cfg, b, s))
+    batch_sharded = b % ax.n_batch_shards(mesh) == 0
+    if batch_sharded:
+        cbatch, cseq = bd, ax.model
+    else:  # long_500k: batch=1 — spend both axes on the sequence dim
+        cbatch, cseq = None, (ax.fsdp, ax.model)
+    cache_spec = {"k": P(None, cbatch, cseq, None, None),
+                  "v": P(None, cbatch, cseq, None, None)}
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, cache, tokens, pos):
+        return lm_decode_step(cfg, params, cache, tokens, pos)
+
+    return Cell(
+        name=f"{cfg.name}/{shape_id}",
+        fn=decode_step,
+        args=(params, cache, tokens, pos),
+        in_specs=(pspecs, cache_spec, P(cbatch, None), P()),
+        out_specs=(P(cbatch, ax.model), cache_spec),
+        donate=(1,),
+    )
+
+
+def reduced_lm_config(cfg: LMConfig) -> LMConfig:
+    """Same family, smoke-testable on one CPU core."""
+    import dataclasses as dc
+    return dc.replace(
+        cfg,
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_head=16,
+        d_ff=128,
+        moe_d_ff=64 if cfg.is_moe else 0,
+        n_experts=4 if cfg.is_moe else 0,
+        top_k=min(cfg.top_k, 2) if cfg.is_moe else 0,
+        vocab=256,
+        param_dtype=jnp.float32,
+        # drop-free routing so decode == forward exactly in equivalence tests
+        capacity_factor=8.0,
+    )

@@ -1,0 +1,122 @@
+"""Recsys (DIEN) cells: train_batch / serve_p99 / serve_bulk / retrieval_cand.
+
+Sharding plan: embedding tables row-shard over `model` (the classic recsys
+table sharding — lookups become cross-shard gathers); request batch over
+(pod, data); the 10⁶-candidate retrieval axis shards over (data, model) with
+the user's GRU states computed once and broadcast (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Cell, MeshAxes
+from repro.models.dien import (
+    DIENConfig,
+    dien_forward,
+    dien_loss,
+    dien_score_candidates,
+    init_dien_params,
+)
+from repro.optim import adamw_init, adamw_update
+from repro.optim.adamw import AdamWState
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+def dien_param_specs(cfg: DIENConfig, params, ax: MeshAxes):
+    specs = jax.tree.map(lambda a: P(*((None,) * a.ndim)), params)
+    specs["item_emb"] = P(ax.model, None)     # 2²³ rows — row-sharded
+    specs["cat_emb"] = P(None, None)          # 10⁴ rows — replicated
+    return specs
+
+
+def _batch_specs(ax: MeshAxes):
+    bd = ax.batch
+    return {
+        "hist_items": P(bd, None), "hist_cats": P(bd, None),
+        "hist_mask": P(bd, None),
+        "target_item": P(bd), "target_cat": P(bd),
+        "label": P(bd),
+    }
+
+
+def _abstract_batch(cfg: DIENConfig, b: int, with_label=True):
+    S = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    d = {
+        "hist_items": S((b, cfg.seq_len), i32),
+        "hist_cats": S((b, cfg.seq_len), i32),
+        "hist_mask": S((b, cfg.seq_len), jnp.bool_),
+        "target_item": S((b,), i32),
+        "target_cat": S((b,), i32),
+    }
+    if with_label:
+        d["label"] = S((b,), i32)
+    return d
+
+
+def make_recsys_cell(cfg: DIENConfig, shape_id: str, mesh) -> Cell:
+    ax = MeshAxes.for_mesh(mesh)
+    sh = RECSYS_SHAPES[shape_id]
+    params = jax.eval_shape(lambda: init_dien_params(jax.random.PRNGKey(0), cfg))
+    pspecs = dien_param_specs(cfg, params, ax)
+    name = f"{cfg.name}/{shape_id}"
+
+    if sh["kind"] == "train":
+        opt = jax.eval_shape(lambda: adamw_init(params))
+        ospecs = AdamWState(m=pspecs, v=pspecs, count=P())
+        batch = _abstract_batch(cfg, sh["batch"])
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: dien_loss(cfg, p, batch))(params)
+            new_p, new_o, gnorm = adamw_update(grads, opt_state, params, lr=1e-3,
+                                               weight_decay=0.0)
+            return new_p, new_o, {"loss": loss, "grad_norm": gnorm}
+
+        return Cell(name, train_step, (params, opt, batch),
+                    in_specs=(pspecs, ospecs, _batch_specs(ax)),
+                    out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
+                    donate=(0, 1))
+
+    if sh["kind"] == "serve":
+        batch = _abstract_batch(cfg, sh["batch"], with_label=False)
+        bspecs = {k: v for k, v in _batch_specs(ax).items() if k != "label"}
+
+        def serve_step(params, batch):
+            logits, *_ = dien_forward(cfg, params, batch)
+            return logits
+
+        return Cell(name, serve_step, (params, batch),
+                    in_specs=(pspecs, bspecs), out_specs=P(ax.batch, None))
+
+    # retrieval: 1 user × n_candidates (padded to the 512-way sharding;
+    # pad-candidate scores are discarded by the caller)
+    c = ((sh["n_candidates"] + 511) // 512) * 512
+    S = jax.ShapeDtypeStruct
+    batch = _abstract_batch(cfg, 1, with_label=False)
+    batch["cand_items"] = S((c,), jnp.int32)
+    batch["cand_cats"] = S((c,), jnp.int32)
+    bspecs = {k: P(None, None) if v.ndim == 2 else P(None)
+              for k, v in batch.items() if k.startswith("hist") or k.startswith("target")}
+    bspecs["cand_items"] = P((ax.fsdp, ax.model))
+    bspecs["cand_cats"] = P((ax.fsdp, ax.model))
+
+    def retrieval_step(params, batch):
+        return dien_score_candidates(cfg, params, batch)
+
+    return Cell(name, retrieval_step, (params, batch),
+                in_specs=(pspecs, bspecs), out_specs=P((ax.fsdp, ax.model)))
+
+
+def reduced_recsys_config(cfg: DIENConfig) -> DIENConfig:
+    return dataclasses.replace(cfg, n_items=1_000, n_cats=50, seq_len=10)

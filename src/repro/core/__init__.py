@@ -1,0 +1,37 @@
+"""CommonGraph core — the paper's contribution as a composable JAX module.
+
+Layers:
+  snapshots    mutation-free window/Δ representation (shared edge blocks)
+  kickstarter  the streaming baseline (deletions + trimming) we compare to
+  directhop    CommonGraph Direct-Hop schedule (deletion-free, star plan)
+  trigrid      Triangular Grid + work-sharing plans (DP-optimal / bisection)
+"""
+
+from repro.core.snapshots import SnapshotStore
+from repro.core.kickstarter import StreamStats, run_kickstarter_stream
+from repro.core.directhop import DirectHopRun, run_direct_hop, run_direct_hop_batched
+from repro.core.trigrid import (
+    PlanNode,
+    WorkSharingRun,
+    bisection_plan,
+    direct_hop_plan,
+    optimal_plan,
+    plan_added_edges,
+    run_plan,
+)
+
+__all__ = [
+    "SnapshotStore",
+    "StreamStats",
+    "run_kickstarter_stream",
+    "DirectHopRun",
+    "run_direct_hop",
+    "run_direct_hop_batched",
+    "PlanNode",
+    "WorkSharingRun",
+    "bisection_plan",
+    "direct_hop_plan",
+    "optimal_plan",
+    "plan_added_edges",
+    "run_plan",
+]

@@ -1,0 +1,135 @@
+"""Snapshot store: window intersections, Δ-batches, mutation-free views.
+
+This is the paper's graph representation (§2, third contribution): the
+CommonGraph of any window plus immutable Δ-batches. Key facts exploited:
+
+* For nested windows ``[i..j] ⊇ [a..b]``: ``T(i,j) ⊆ T(a,b)`` — a wider
+  window's common graph is a subgraph of a narrower one's. Hence descending
+  the Triangular Grid only ever *adds* edges, and
+  ``|Δ(T(i,j) → T(a,b))| = |T(a,b)| − |T(i,j)|``.
+* Snapshots are the diagonal: ``S_i = T(i,i)``.
+
+Set algebra runs host-side on sorted int64 key arrays (this is the part of
+the system that, at cluster scale, becomes a distributed sort/merge over the
+ingest pipeline; on one host numpy's merge-based set ops are the right tool).
+Device-side execution consumes only the padded immutable blocks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.edgeset import EdgeBlock, EdgeView, keys_to_edges, make_block
+from repro.graph.generators import EvolvingSequence
+
+
+class SnapshotStore:
+    """Caches window common-graphs T(i,j) (key arrays) and device blocks."""
+
+    def __init__(self, seq: EvolvingSequence, granule: int = 4096,
+                 pad_pow2: bool = True):
+        self.seq = seq
+        self.num_nodes = seq.num_nodes
+        self.granule = granule
+        self.pad_pow2 = pad_pow2
+        self._t: dict[tuple[int, int], np.ndarray] = {
+            (i, i): seq.snapshot_keys[i] for i in range(seq.num_snapshots)
+        }
+        self._blocks: dict[tuple, EdgeBlock] = {}
+
+    # -- window intersections -------------------------------------------------
+
+    def window_keys(self, i: int, j: int) -> np.ndarray:
+        """Sorted keys of T(i,j) = ⋂_{k∈[i..j]} S_k (cached, built left-to-right)."""
+        if (i, j) in self._t:
+            return self._t[(i, j)]
+        cur = self.window_keys(i, j - 1)
+        out = np.intersect1d(cur, self.seq.snapshot_keys[j], assume_unique=True)
+        self._t[(i, j)] = out
+        return out
+
+    def window_size(self, i: int, j: int) -> int:
+        return int(self.window_keys(i, j).shape[0])
+
+    def delta_keys(self, parent: tuple[int, int], child: tuple[int, int]) -> np.ndarray:
+        """Edges added when descending T(parent) → T(child); child ⊆ parent window."""
+        pi, pj = parent
+        ci, cj = child
+        if not (pi <= ci and cj <= pj):
+            raise ValueError(f"child window {child} not nested in parent {parent}")
+        return np.setdiff1d(self.window_keys(ci, cj), self.window_keys(pi, pj),
+                            assume_unique=True)
+
+    # -- device blocks ---------------------------------------------------------
+
+    def block_for_keys(self, keys: np.ndarray, tag: tuple) -> EdgeBlock:
+        """Immutable padded device block for a key set (cached by tag)."""
+        if tag in self._blocks:
+            return self._blocks[tag]
+        src, dst = keys_to_edges(keys, self.num_nodes)
+        w = self.seq.weights_for(keys)
+        blk = make_block(src, dst, w, self.num_nodes, granule=self.granule,
+                         pad_pow2=self.pad_pow2)
+        self._blocks[tag] = blk
+        return blk
+
+    def window_block(self, i: int, j: int) -> EdgeBlock:
+        return self.block_for_keys(self.window_keys(i, j), ("T", i, j))
+
+    def window_view_split(self, i: int, j: int, n_blocks: int) -> EdgeView:
+        """Window view split into src-contiguous sub-blocks.
+
+        Keys are src-major, so each sub-block covers a narrow source range —
+        which makes the engine's block gating (frontier ∩ block sources)
+        highly selective during incremental hops (EXPERIMENTS.md §Perf).
+        """
+        keys = self.window_keys(i, j)
+        chunks = np.array_split(keys, n_blocks)
+        blocks = tuple(
+            self.block_for_keys(c, ("Ts", i, j, n_blocks, k))
+            for k, c in enumerate(chunks) if c.size)
+        return EdgeView(blocks, self.num_nodes)
+
+    def delta_block(self, parent: tuple[int, int], child: tuple[int, int]) -> EdgeBlock:
+        return self.block_for_keys(self.delta_keys(parent, child),
+                                   ("D", parent, child))
+
+    def snapshot_view(self, i: int) -> EdgeView:
+        """Standalone single-block view of S_i (used by from-scratch baselines)."""
+        return EdgeView((self.window_block(i, i),), self.num_nodes)
+
+    def common_graph_view(self, i: int = 0, j: int | None = None) -> EdgeView:
+        if j is None:
+            j = self.seq.num_snapshots - 1
+        return EdgeView((self.window_block(i, j),), self.num_nodes)
+
+    # -- change batches (for the KickStarter streaming baseline) ---------------
+
+    def addition_block(self, t: int) -> EdgeBlock:
+        """Edges added at transition t → t+1."""
+        return self.block_for_keys(self.seq.additions[t], ("A", t))
+
+    def deletion_keys(self, t: int) -> np.ndarray:
+        return self.seq.deletions[t]
+
+    # -- sliding windows (full-paper feature) -----------------------------------
+    #
+    # Sliding [i..j] → [i+1..j+1] is NOT deletion-free from the old apex:
+    # T(i,j) ⊄ T(i+1,j+1) in general (an old-CG edge may be absent from
+    # S_{j+1}). The sound anchor is any SUPER-window apex — widest available
+    # is the global CG, which is ⊆ every window's CG — from which every new
+    # window apex is reachable by additions only. ``slide_block`` packages
+    # that hop; it is just delta_block with the anchor made explicit, so all
+    # nesting validation and caching carry over.
+
+    def slide_block(self, new_window: tuple[int, int],
+                    anchor: tuple[int, int] | None = None) -> EdgeBlock:
+        """Addition batch hopping the anchor apex state to ``new_window``'s apex.
+
+        ``anchor`` defaults to the global window (always a valid super-window).
+        The anchor's query state warm-starts the new apex exactly (monotone
+        additions only) — see tests/test_core.py::test_sliding_window_hop.
+        """
+        if anchor is None:
+            anchor = (0, self.seq.num_snapshots - 1)
+        return self.delta_block(anchor, new_window)

@@ -1,0 +1,18 @@
+"""Deterministic synthetic data pipeline.
+
+Every feeder is a pure function of (seed, step) so that (a) restarts resume
+bit-identically from a checkpointed cursor and (b) every data-parallel shard
+can regenerate its slice without host I/O — the property a 1000-node data
+pipeline needs for elastic restarts (runtime/).
+"""
+
+from repro.data.pipeline import (
+    lm_batch,
+    gnn_full_batch,
+    gnn_molecule_batch,
+    dien_batch,
+    DataCursor,
+)
+
+__all__ = ["lm_batch", "gnn_full_batch", "gnn_molecule_batch", "dien_batch",
+           "DataCursor"]

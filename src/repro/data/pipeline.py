@@ -1,0 +1,79 @@
+"""Synthetic batch feeders (seed+step deterministic; see package docstring)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataCursor:
+    """Checkpointable pipeline position."""
+    seed: int
+    step: int
+
+    def key(self) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), self.step)
+
+
+def lm_batch(cursor: DataCursor, batch: int, seq: int, vocab: int):
+    """Token/label pair; labels are next-token shifted (last position masked)."""
+    key = cursor.key()
+    toks = jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)
+    labels = jnp.concatenate(
+        [toks[:, 1:], jnp.full((batch, 1), -1, jnp.int32)], axis=1)
+    return {"tokens": toks, "labels": labels}
+
+
+def gnn_full_batch(cursor: DataCursor, n_nodes: int, n_edges: int, d_feat: int,
+                   d_out: int, task: str, d_edge: int = 4):
+    key = cursor.key()
+    ks = jax.random.split(key, 6)
+    batch = {
+        "x": jax.random.normal(ks[0], (n_nodes, d_feat), jnp.float32),
+        "src": jax.random.randint(ks[1], (n_edges,), 0, n_nodes, jnp.int32),
+        "dst": jax.random.randint(ks[2], (n_edges,), 0, n_nodes, jnp.int32),
+        "edge_feat": jax.random.normal(ks[3], (n_edges, d_edge), jnp.float32),
+    }
+    if task == "node_class":
+        batch["labels"] = jax.random.randint(ks[4], (n_nodes,), 0, d_out, jnp.int32)
+    else:
+        batch["targets"] = jax.random.normal(ks[4], (n_nodes, d_out), jnp.float32)
+    return batch
+
+
+def gnn_molecule_batch(cursor: DataCursor, n_graphs: int, nodes_per: int,
+                       edges_per: int, d_feat: int, d_out: int, d_edge: int = 4):
+    """Batched small graphs: node-batch representation with graph ids."""
+    key = cursor.key()
+    ks = jax.random.split(key, 6)
+    n = n_graphs * nodes_per
+    e = n_graphs * edges_per
+    # edges stay within their graph
+    base = (jnp.arange(e, dtype=jnp.int32) // edges_per) * nodes_per
+    src = base + jax.random.randint(ks[0], (e,), 0, nodes_per, jnp.int32)
+    dst = base + jax.random.randint(ks[1], (e,), 0, nodes_per, jnp.int32)
+    return {
+        "x": jax.random.normal(ks[2], (n, d_feat), jnp.float32),
+        "src": src,
+        "dst": dst,
+        "edge_feat": jax.random.normal(ks[3], (e, d_edge), jnp.float32),
+        "graph_id": jnp.arange(n, dtype=jnp.int32) // nodes_per,
+        "graph_targets": jax.random.normal(ks[4], (n_graphs, d_out), jnp.float32),
+    }
+
+
+def dien_batch(cursor: DataCursor, batch: int, seq: int, n_items: int, n_cats: int):
+    key = cursor.key()
+    ks = jax.random.split(key, 6)
+    return {
+        "hist_items": jax.random.randint(ks[0], (batch, seq), 0, n_items, jnp.int32),
+        "hist_cats": jax.random.randint(ks[1], (batch, seq), 0, n_cats, jnp.int32),
+        "hist_mask": jnp.ones((batch, seq), bool),
+        "target_item": jax.random.randint(ks[2], (batch,), 0, n_items, jnp.int32),
+        "target_cat": jax.random.randint(ks[3], (batch,), 0, n_cats, jnp.int32),
+        "label": jax.random.randint(ks[4], (batch,), 0, 2, jnp.int32),
+    }

@@ -1,0 +1,53 @@
+"""Graph substrate: edge sets, semirings, fixpoint engine, generators, sampler.
+
+This layer is the TPU-native re-derivation of the vertex-centric CPU machinery
+used by KickStarter/CommonGraph (see DESIGN.md §2): dense, frontier-masked
+edge-relaxation sweeps over immutable edge blocks, with monotone-semiring
+segment reductions instead of per-vertex worklists and atomics.
+"""
+
+from repro.graph.semiring import (
+    Semiring,
+    BFS,
+    SSSP,
+    SSWP,
+    SSNP,
+    VITERBI,
+    ALL_SEMIRINGS,
+)
+from repro.graph.edgeset import EdgeBlock, EdgeView, PAD_SRC, concat_views
+from repro.graph.engine import (
+    FixpointResult,
+    init_values,
+    relax_sweep,
+    run_to_fixpoint,
+    incremental_additions,
+    incremental_additions_batched,
+)
+from repro.graph.generators import rmat_edges, EvolvingSequence, make_evolving_sequence
+from repro.graph.sampler import NeighborSampler, SampledSubgraph
+
+__all__ = [
+    "Semiring",
+    "BFS",
+    "SSSP",
+    "SSWP",
+    "SSNP",
+    "VITERBI",
+    "ALL_SEMIRINGS",
+    "EdgeBlock",
+    "EdgeView",
+    "PAD_SRC",
+    "concat_views",
+    "FixpointResult",
+    "init_values",
+    "relax_sweep",
+    "run_to_fixpoint",
+    "incremental_additions",
+    "incremental_additions_batched",
+    "rmat_edges",
+    "EvolvingSequence",
+    "make_evolving_sequence",
+    "NeighborSampler",
+    "SampledSubgraph",
+]

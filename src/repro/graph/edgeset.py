@@ -1,0 +1,132 @@
+"""Immutable, mutation-free edge containers (DESIGN.md §1.3).
+
+A graph (or any Triangular-Grid node) is never materialized by mutating a
+CSR. It is an :class:`EdgeView`: an ordered tuple of immutable
+:class:`EdgeBlock` s — the CommonGraph block plus whichever Δ-batches the
+view needs. Blocks are physically shared between snapshots; realizing a
+snapshot costs zero copies.
+
+Padding convention: blocks are padded to a fixed granularity so that jit
+traces are reused across views of similar size. A padding edge has
+``dst == num_nodes`` (it lands in a sentinel segment that every reduction
+drops) and ``src == PAD_SRC == 0`` (gathers stay in-bounds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+PAD_SRC = 0
+DEFAULT_GRANULE = 4096
+
+
+class EdgeBlock(NamedTuple):
+    """One immutable, padded block of edges (a pytree of three arrays)."""
+
+    src: jnp.ndarray  # int32 [n_padded]
+    dst: jnp.ndarray  # int32 [n_padded]  (== num_nodes for padding)
+    w: jnp.ndarray    # float32 [n_padded]
+
+    @property
+    def n_padded(self) -> int:
+        return int(self.src.shape[0])
+
+
+def _pad_to(n: int, granule: int, pow2: bool = False) -> int:
+    if pow2:
+        # Power-of-two bucket padding bounds the number of distinct block
+        # shapes (→ bounded jit trace count) at ≤2× memory overhead.
+        m = granule
+        while m < n:
+            m *= 2
+        return m
+    if n == 0:
+        return granule
+    return ((n + granule - 1) // granule) * granule
+
+
+def make_block(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray | None,
+    num_nodes: int,
+    granule: int = DEFAULT_GRANULE,
+    sort_by_dst: bool = True,
+    pad_pow2: bool = False,
+) -> EdgeBlock:
+    """Build a padded (optionally dst-sorted) EdgeBlock from host arrays.
+
+    dst-sorting gives segment reductions monotone segment ids, which is what
+    the Pallas edge_relax kernel's blocked scatter relies on, and improves
+    locality for XLA's segment lowering too.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if w is None:
+        w = np.ones(src.shape[0], dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    if not (src.shape == dst.shape == w.shape):
+        raise ValueError(f"edge array shape mismatch: {src.shape}, {dst.shape}, {w.shape}")
+    if sort_by_dst and src.shape[0] > 0:
+        order = np.argsort(dst, kind="stable")
+        src, dst, w = src[order], dst[order], w[order]
+    n = src.shape[0]
+    n_pad = _pad_to(n, granule, pow2=pad_pow2)
+    pad = n_pad - n
+    if pad:
+        src = np.concatenate([src, np.full(pad, PAD_SRC, np.int32)])
+        dst = np.concatenate([dst, np.full(pad, num_nodes, np.int32)])
+        w = np.concatenate([w, np.zeros(pad, np.float32)])
+    return EdgeBlock(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeView:
+    """A logical graph = ordered tuple of shared immutable blocks."""
+
+    blocks: tuple[EdgeBlock, ...]
+    num_nodes: int
+
+    @property
+    def n_padded(self) -> int:
+        return sum(b.n_padded for b in self.blocks)
+
+    def arrays(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Concatenated (src, dst, w). Pure; safe inside jit traces."""
+        if len(self.blocks) == 1:
+            b = self.blocks[0]
+            return b.src, b.dst, b.w
+        src = jnp.concatenate([b.src for b in self.blocks])
+        dst = jnp.concatenate([b.dst for b in self.blocks])
+        w = jnp.concatenate([b.w for b in self.blocks])
+        return src, dst, w
+
+    def extended(self, *extra: EdgeBlock) -> "EdgeView":
+        """A new view sharing this view's blocks plus ``extra`` (no copies)."""
+        return EdgeView(self.blocks + tuple(extra), self.num_nodes)
+
+
+def concat_views(a: EdgeView, b: EdgeView) -> EdgeView:
+    if a.num_nodes != b.num_nodes:
+        raise ValueError("views over different node sets")
+    return EdgeView(a.blocks + b.blocks, a.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Host-side edge-set algebra (int64 keys). Used by core/ to compute the
+# CommonGraph intersection and Δ-batches; never inside a jit trace.
+# ---------------------------------------------------------------------------
+
+def edge_keys(src: np.ndarray, dst: np.ndarray, num_nodes: int) -> np.ndarray:
+    """Injective int64 key for (src, dst) pairs."""
+    return src.astype(np.int64) * np.int64(num_nodes) + dst.astype(np.int64)
+
+
+def keys_to_edges(keys: np.ndarray, num_nodes: int) -> tuple[np.ndarray, np.ndarray]:
+    src = (keys // num_nodes).astype(np.int32)
+    dst = (keys % num_nodes).astype(np.int32)
+    return src, dst

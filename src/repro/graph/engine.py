@@ -1,0 +1,279 @@
+"""Frontier-masked edge-relaxation fixpoint engine (TPU-native KickStarter core).
+
+One *sweep* is a dense Bellman-Ford-style round over an edge view:
+
+    cand[e]  = combine(values[src[e]], w[e])        (masked to the frontier)
+    best[v]  = segment_reduce(cand, dst)            (min or max semiring)
+    values'  = meet(values, best);  frontier' = strictly-improved vertices
+
+Monotone semirings make the dense sweep idempotent and order-free, which is
+what lets us replace the CPU papers' per-vertex worklists + atomics with
+segment reductions (DESIGN.md §2). ``parent[v]`` tracks the dependence edge
+source that produced ``values[v]`` — the KickStarter trimming baseline
+(core/kickstarter.py) consumes it on deletions.
+
+The engine operates on *tuples of edge blocks* rather than one concatenated
+array: a CommonGraph view is (CG block, Δ block, Δ block, …) and blocks are
+physically shared between snapshots (the paper's mutation-free
+representation executes as-is — no concatenation copies, and jit traces are
+keyed only on the tuple of block shapes). Everything is shape-static and
+jit/vmap/pjit-friendly: the snapshot axis of the CommonGraph executor vmaps
+directly over the value/frontier state (and over stacked per-snapshot Δ
+blocks).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.edgeset import EdgeBlock, EdgeView
+from repro.graph.semiring import Semiring
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+NO_PARENT = jnp.int32(-1)
+
+Blocks = tuple[EdgeBlock, ...]
+
+
+class FixpointResult(NamedTuple):
+    values: jnp.ndarray      # float32 [num_nodes]
+    parent: jnp.ndarray      # int32  [num_nodes], -1 = none/source
+    iterations: jnp.ndarray  # int32 scalar — sweeps executed
+    edge_work: jnp.ndarray   # float32 scalar — frontier-masked edge relaxations
+
+
+def init_values(num_nodes: int, semiring: Semiring, source: int) -> jnp.ndarray:
+    values = jnp.full((num_nodes,), semiring.identity, dtype=jnp.float32)
+    return values.at[source].set(semiring.source_value)
+
+
+def _segment_reduce(sr: Semiring, data, segment_ids, num_segments):
+    if sr.is_min:
+        return jax.ops.segment_min(data, segment_ids, num_segments)
+    return jax.ops.segment_max(data, segment_ids, num_segments)
+
+
+def _block_sweep(semiring: Semiring, num_nodes: int, values, frontier,
+                 src, dst, w, track_parents: bool = True):
+    """One block's (best, winner_src, work) against the current frontier.
+
+    ``track_parents=False`` (CommonGraph mode): dependence parents exist
+    solely so KickStarter can trim on *deletions*. Deletion-free schedules
+    (Direct-Hop / TG work-sharing) never trim, so the winner-src segment
+    reduce — half the per-sweep segment ops — is skipped entirely. This is
+    the paper's "deletions are what make streaming expensive" claim showing
+    up inside the engine itself (EXPERIMENTS.md §Perf).
+    """
+    ident = jnp.float32(semiring.identity)
+    active = frontier[src]  # pad edges read frontier[PAD_SRC]; their dst is the sentinel
+    cand = jnp.where(active, semiring.combine(values[src], w), ident)
+    blk_best = _segment_reduce(semiring, cand, dst, num_nodes + 1)[:num_nodes]
+    work = jnp.sum(active & (dst < num_nodes), dtype=jnp.float32)
+    if not track_parents:
+        return blk_best, None, work
+    # smallest src achieving this block's best (merged across blocks by caller)
+    best_pad = jnp.concatenate([blk_best, jnp.float32([ident])])
+    is_win = active & (cand == best_pad[dst])
+    parent_cand = jnp.where(is_win, src, INT_MAX)
+    blk_winner = jax.ops.segment_min(parent_cand, dst, num_nodes + 1)[:num_nodes]
+    return blk_best, blk_winner, work
+
+
+def relax_sweep(
+    semiring: Semiring,
+    num_nodes: int,
+    values: jnp.ndarray,
+    parent: jnp.ndarray,
+    frontier: jnp.ndarray,
+    blocks: Blocks,
+    gated: bool = False,
+    track_parents: bool = True,
+):
+    """One frontier-masked relaxation sweep over all blocks.
+
+    ``gated`` (beyond-paper optimization, EXPERIMENTS.md §Perf): a block
+    whose sources contain no frontier vertex is skipped entirely via
+    lax.cond — the TPU-dense analogue of the CPU papers' per-vertex
+    worklists at edge-block granularity. Exactness is unaffected (skipped
+    blocks can only produce identity candidates).
+
+    Returns (values, parent, improved, work).
+    """
+    ident = jnp.float32(semiring.identity)
+    best = jnp.full((num_nodes,), ident)
+    winner_src = jnp.full((num_nodes,), INT_MAX, dtype=jnp.int32)
+    bests = []
+    work = jnp.float32(0)
+    for src, dst, w in blocks:
+        if gated:
+            none_winner = (jnp.full((num_nodes,), INT_MAX, dtype=jnp.int32)
+                           if track_parents else None)
+            blk_best, blk_winner, dw = jax.lax.cond(
+                jnp.any(frontier[src]),
+                lambda s=src, d=dst, ww=w: _block_sweep(
+                    semiring, num_nodes, values, frontier, s, d, ww,
+                    track_parents),
+                lambda: (jnp.full((num_nodes,), ident), none_winner,
+                         jnp.float32(0)),
+            )
+        else:
+            blk_best, blk_winner, dw = _block_sweep(
+                semiring, num_nodes, values, frontier, src, dst, w,
+                track_parents)
+        best = semiring.better(best, blk_best)
+        bests.append((blk_best, blk_winner))
+        work = work + dw
+
+    improved = semiring.strictly_better(best, values)
+    new_values = semiring.better(values, best)
+
+    if not track_parents:
+        return new_values, parent, improved, work
+
+    # Dependence parent: the smallest src among edges achieving the global
+    # best (per-block winners merged; only blocks matching the global best
+    # contribute, which preserves the ungated tie-break exactly).
+    winner = jnp.full((num_nodes,), INT_MAX, dtype=jnp.int32)
+    for blk_best, blk_winner in bests:
+        winner = jnp.where(blk_best == best,
+                           jnp.minimum(winner, blk_winner), winner)
+    new_parent = jnp.where(improved, winner, parent)
+    return new_values, new_parent, improved, work
+
+
+def _fixpoint(semiring: Semiring, num_nodes: int, max_iters: int,
+              values, parent, frontier, blocks: Blocks,
+              gated: bool = False, track_parents: bool = True) -> FixpointResult:
+    def cond(state):
+        _, _, frontier, it, _ = state
+        return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    def body(state):
+        values, parent, frontier, it, work = state
+        values, parent, improved, dw = relax_sweep(
+            semiring, num_nodes, values, parent, frontier, blocks, gated=gated,
+            track_parents=track_parents)
+        return values, parent, improved, it + 1, work + dw
+
+    init = (values, parent, frontier, jnp.int32(0), jnp.float32(0))
+    values, parent, _, it, work = jax.lax.while_loop(cond, body, init)
+    return FixpointResult(values, parent, it, work)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
+def _fixpoint_jit(semiring, num_nodes, max_iters, values, parent, frontier,
+                  blocks, gated=False, track_parents=True):
+    return _fixpoint(semiring, num_nodes, max_iters, values, parent, frontier,
+                     blocks, gated, track_parents)
+
+
+def run_to_fixpoint(
+    view: EdgeView,
+    semiring: Semiring,
+    source: int,
+    max_iters: int = 10_000,
+    values: jnp.ndarray | None = None,
+    parent: jnp.ndarray | None = None,
+    frontier: jnp.ndarray | None = None,
+    gated: bool = False,
+    track_parents: bool = True,
+) -> FixpointResult:
+    """Run the query to fixpoint on ``view`` (from scratch or a warm state)."""
+    n = view.num_nodes
+    fresh = values is None
+    if fresh:
+        values = init_values(n, semiring, source)
+    if parent is None:
+        parent = jnp.full((n,), NO_PARENT, dtype=jnp.int32)
+    if frontier is None:
+        # Fresh start: only the source can seed improvements. Warm start with
+        # an unknown perturbation: every vertex may need to re-propagate.
+        frontier = (jnp.zeros((n,), bool).at[source].set(True) if fresh
+                    else jnp.ones((n,), bool))
+    return _fixpoint_jit(semiring, n, max_iters, values, parent, frontier,
+                         tuple(view.blocks), gated, track_parents)
+
+
+def incremental_additions(
+    view: EdgeView,
+    added: EdgeView | EdgeBlock,
+    semiring: Semiring,
+    values: jnp.ndarray,
+    parent: jnp.ndarray,
+    max_iters: int = 10_000,
+    gated: bool = False,
+    track_parents: bool = True,
+) -> FixpointResult:
+    """Addition-only incremental update (the cheap KickStarter direction).
+
+    ``view`` must already include the added blocks; ``added`` is just the new
+    edges. Seeds the frontier by relaxing only the new edges, then
+    re-converges over the full view with frontier masking. Monotonicity
+    guarantees the exact from-scratch fixpoint is reached.
+    """
+    n = view.num_nodes
+    add_blocks = (added,) if isinstance(added, EdgeBlock) else tuple(added.blocks)
+    all_on = jnp.ones((n,), bool)
+    values2, parent2, improved, seed_work = relax_sweep(
+        semiring, n, values, parent, all_on, add_blocks,
+        track_parents=track_parents)
+    res = _fixpoint_jit(semiring, n, max_iters, values2, parent2, improved,
+                        tuple(view.blocks), gated, track_parents)
+    return FixpointResult(res.values, res.parent, res.iterations + 1,
+                          res.edge_work + seed_work)
+
+
+# ---------------------------------------------------------------------------
+# Batched (snapshot-axis) execution: the paper's "breaks the sequential
+# dependency" parallelism, realized as one extra tensor axis. Shared blocks
+# broadcast; per-snapshot Δ blocks are stacked on axis 0.
+# ---------------------------------------------------------------------------
+
+def batched_incremental(semiring, num_nodes, max_iters,
+                        values, parent, shared_blocks, delta_blocks,
+                        track_parents=True):
+    """vmapped incremental additions (unjitted; launch/dryrun jits with shardings).
+
+    values/parent: [S, N]; shared_blocks: tuple of EdgeBlock (broadcast);
+    delta_blocks: tuple of EdgeBlock with leading S axis (stacked).
+    """
+    def one(values, parent, delta_blocks):
+        all_on = jnp.ones((num_nodes,), bool)
+        v2, p2, improved, seed_work = relax_sweep(
+            semiring, num_nodes, values, parent, all_on, delta_blocks,
+            track_parents=track_parents)
+        res = _fixpoint(semiring, num_nodes, max_iters, v2, p2, improved,
+                        shared_blocks + delta_blocks,
+                        track_parents=track_parents)
+        return FixpointResult(res.values, res.parent, res.iterations + 1,
+                              res.edge_work + seed_work)
+
+    return jax.vmap(one, in_axes=(0, 0, 0))(values, parent, delta_blocks)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7))
+def _batched_incremental_jit(semiring, num_nodes, max_iters,
+                             values, parent, shared_blocks, delta_blocks,
+                             track_parents=True):
+    return batched_incremental(semiring, num_nodes, max_iters,
+                               values, parent, shared_blocks, delta_blocks,
+                               track_parents)
+
+
+def incremental_additions_batched(
+    num_nodes: int,
+    semiring: Semiring,
+    values: jnp.ndarray,          # [S, N]
+    parent: jnp.ndarray,          # [S, N]
+    shared_blocks: Blocks,        # broadcast to all snapshots
+    delta_blocks: Blocks,         # each with leading [S] axis
+    max_iters: int = 10_000,
+    track_parents: bool = True,
+) -> FixpointResult:
+    return _batched_incremental_jit(semiring, num_nodes, max_iters,
+                                    values, parent, tuple(shared_blocks),
+                                    tuple(delta_blocks), track_parents)

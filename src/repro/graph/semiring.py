@@ -1,0 +1,106 @@
+"""Monotone path semirings for the five paper algorithms.
+
+Every algorithm in the paper (BFS, SSSP, SSWP, SSNP, Viterbi) is a fixpoint of
+
+    val[v]  =  reduce_{(u,v,w) in E}  combine(val[u], w)      (+ source anchor)
+
+where ``reduce`` is ``min`` or ``max`` and ``combine`` is monotone w.r.t. the
+reduce order. Monotonicity is the property KickStarter exploits for cheap
+*addition* increments (the state can only improve; re-sweeping from the
+current state converges to the exact new fixpoint) and what makes deletions
+expensive (state may be stale-optimistic and must be trimmed). CommonGraph
+removes the deletion path entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A monotone path semiring.
+
+    Attributes:
+      name: short identifier (matches the paper's algorithm names).
+      reduce: "min" or "max" — the vertex-side reduction order.
+      identity: the "unreached" value (absorbing for reduce).
+      source_value: value anchored at the source vertex.
+      combine: (val_u, w) -> candidate value along edge (u, v, w).
+      needs_weights: False for BFS (weights ignored).
+    """
+
+    name: str
+    reduce: str
+    identity: float
+    source_value: float
+    combine: Callable[[Array, Array], Array]
+    needs_weights: bool = True
+
+    @property
+    def is_min(self) -> bool:
+        return self.reduce == "min"
+
+    def better(self, a: Array, b: Array) -> Array:
+        """Elementwise meet: the better of two values under the reduce order."""
+        return jnp.minimum(a, b) if self.is_min else jnp.maximum(a, b)
+
+    def strictly_better(self, a: Array, b: Array) -> Array:
+        """True where ``a`` is strictly better than ``b``."""
+        return (a < b) if self.is_min else (a > b)
+
+
+_INF = float(jnp.inf)
+
+BFS = Semiring(
+    name="bfs",
+    reduce="min",
+    identity=_INF,
+    source_value=0.0,
+    combine=lambda val_u, w: val_u + 1.0,
+    needs_weights=False,
+)
+
+SSSP = Semiring(
+    name="sssp",
+    reduce="min",
+    identity=_INF,
+    source_value=0.0,
+    combine=lambda val_u, w: val_u + w,
+)
+
+# Single-source widest path: maximize, over paths, the minimum edge weight.
+SSWP = Semiring(
+    name="sswp",
+    reduce="max",
+    identity=-_INF,
+    source_value=_INF,
+    combine=lambda val_u, w: jnp.minimum(val_u, w),
+)
+
+# Single-source narrowest path: minimize, over paths, the maximum edge weight.
+SSNP = Semiring(
+    name="ssnp",
+    reduce="min",
+    identity=_INF,
+    source_value=-_INF,
+    combine=lambda val_u, w: jnp.maximum(val_u, w),
+)
+
+# Viterbi: maximize the product of edge probabilities in (0, 1].
+VITERBI = Semiring(
+    name="viterbi",
+    reduce="max",
+    identity=0.0,
+    source_value=1.0,
+    combine=lambda val_u, w: val_u * w,
+)
+
+ALL_SEMIRINGS: dict[str, Semiring] = {
+    s.name: s for s in (BFS, SSSP, SSWP, SSNP, VITERBI)
+}

@@ -1,0 +1,3 @@
+from repro.kernels.edge_relax.ops import edge_relax
+
+__all__ = ["edge_relax"]

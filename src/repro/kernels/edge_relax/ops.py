@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the edge_relax kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_relax.edge_relax import BLOCK_E, edge_relax_pallas
+from repro.kernels.edge_relax.ref import edge_relax_ref
+
+
+@functools.partial(jax.jit, static_argnames=("op", "num_nodes", "use_pallas",
+                                             "interpret"))
+def edge_relax(values, src, dst, w, *, op: str, num_nodes: int,
+               use_pallas: bool = True, interpret: bool = True):
+    """Semiring edge relaxation; pads the edge stream to the kernel block.
+
+    On a real TPU pass interpret=False; this container is CPU-only so
+    interpret=True is the default (assignment: validate in interpret mode).
+    """
+    if not use_pallas:
+        return edge_relax_ref(values, src, dst, w, op=op, num_nodes=num_nodes)
+    e = src.shape[0]
+    pad = (-e) % BLOCK_E
+    if pad:
+        src = jnp.concatenate([src, jnp.zeros((pad,), src.dtype)])
+        dst = jnp.concatenate([dst, jnp.full((pad,), num_nodes, dst.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    return edge_relax_pallas(values, src, dst, w, op=op, num_nodes=num_nodes,
+                             interpret=interpret)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the edge_relax kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_relax.edge_relax import SEMIRING_OPS
+
+
+def edge_relax_ref(values, src, dst, w, *, op: str, num_nodes: int):
+    combine, reduce_kind, ident = SEMIRING_OPS[op]
+    cand = combine(values[src], w)
+    if reduce_kind == "min":
+        out = jax.ops.segment_min(cand, dst, num_nodes + 1)
+        out = jnp.minimum(out, ident)   # empty segments -> semiring identity
+    else:
+        out = jax.ops.segment_max(cand, dst, num_nodes + 1)
+        out = jnp.maximum(out, ident)   # (e.g. Viterbi identity is 0, not -inf)
+    return out[:num_nodes]

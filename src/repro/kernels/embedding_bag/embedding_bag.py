@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused EmbeddingBag (multi-hot gather + bag sum).
+
+    out[b, :] = Σ_{i : bag[i]==b} weight[i] · table[ids[i], :]
+
+JAX has no native EmbeddingBag; the reference composition
+(``jnp.take`` → multiply → ``segment_sum``) round-trips the gathered rows
+through HBM. This kernel fuses the three steps: a lookup chunk's rows are
+gathered from the VMEM-resident table shard, scaled, and scatter-added into
+the VMEM-resident bag accumulator without ever materializing the [L, D]
+intermediate in HBM.
+
+Scope (DESIGN.md §2): the table argument is a *vocabulary shard* — after the
+recsys row-sharding over `model`, per-device shards of the DIEN category
+table (10⁴×18) and much larger fit VMEM; the 2²³-row item table streams
+through the XLA gather path instead (ops.embedding_bag_fused falls back to
+ref for tables over the VMEM budget). D pads to the 128-lane boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_L = 1024
+LANE = 128
+VMEM_TABLE_BUDGET = 8 * 1024 * 1024  # bytes of VMEM we allow the table shard
+
+
+def _kernel(table_ref, ids_ref, bags_ref, wts_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tbl = table_ref[...]            # [V, D_pad] resident
+    ids = ids_ref[...]              # [BLOCK_L]
+    bags = bags_ref[...]
+    wts = wts_ref[...]
+    rows = jnp.take(tbl, ids, axis=0) * wts[:, None]
+    out_ref[...] = out_ref[...].at[bags].add(rows)
+
+
+def embedding_bag_pallas(table, ids, bags, weights, *, n_bags: int,
+                         interpret: bool = True):
+    """table [V, D]; ids/bags [L] i32 (bag == n_bags for padding); weights [L]."""
+    v, d = table.shape
+    l = ids.shape[0]
+    assert l % BLOCK_L == 0, f"lookup count {l} must be padded to {BLOCK_L}"
+    d_pad = (-d) % LANE
+    if d_pad:
+        table = jnp.pad(table, ((0, 0), (0, d_pad)))
+    dp = d + d_pad
+    grid = (l // BLOCK_L,)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v, dp), lambda i: (0, 0)),         # resident shard
+            pl.BlockSpec((BLOCK_L,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_L,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_L,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n_bags + 1, dp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_bags + 1, dp), table.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(table, ids, bags, weights)
+    return out[:n_bags, :d]

@@ -1,0 +1,32 @@
+"""jit'd public wrapper for the embedding_bag kernel (VMEM-budget dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import (
+    BLOCK_L,
+    VMEM_TABLE_BUDGET,
+    embedding_bag_pallas,
+)
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "use_pallas", "interpret"))
+def embedding_bag_fused(table, ids, bags, weights, *, n_bags: int,
+                        use_pallas: bool = True, interpret: bool = True):
+    """Fused bag-sum. Tables over the VMEM budget stream via the XLA path."""
+    table_bytes = table.shape[0] * table.shape[1] * table.dtype.itemsize
+    if not use_pallas or table_bytes > VMEM_TABLE_BUDGET:
+        return embedding_bag_ref(table, ids, bags, weights, n_bags=n_bags)
+    l = ids.shape[0]
+    pad = (-l) % BLOCK_L
+    if pad:
+        ids = jnp.concatenate([ids, jnp.zeros((pad,), ids.dtype)])
+        bags = jnp.concatenate([bags, jnp.full((pad,), n_bags, bags.dtype)])
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), weights.dtype)])
+    return embedding_bag_pallas(table, ids, bags, weights, n_bags=n_bags,
+                                interpret=interpret)

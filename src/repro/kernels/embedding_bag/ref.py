@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the embedding_bag kernel (= models/embedding.py path)."""
+
+from __future__ import annotations
+
+from repro.models.embedding import embedding_bag
+
+
+def embedding_bag_ref(table, ids, bags, weights, *, n_bags: int):
+    return embedding_bag(table, ids, bags, n_bags, weights=weights, mode="sum")

@@ -1,0 +1,3 @@
+from repro.kernels.segment_reduce.ops import segment_reduce
+
+__all__ = ["segment_reduce"]

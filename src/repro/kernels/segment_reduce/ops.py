@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the segment_reduce kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.segment_reduce import (
+    BLOCK_E,
+    segment_reduce_pallas,
+)
+from repro.kernels.segment_reduce.ref import segment_reduce_ref
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "reduce",
+                                             "use_pallas", "interpret"))
+def segment_reduce(data, seg, *, num_segments: int, reduce: str = "sum",
+                   use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return segment_reduce_ref(data, seg, num_segments=num_segments,
+                                  reduce=reduce)
+    e = data.shape[0]
+    pad = (-e) % BLOCK_E
+    if pad:
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+        seg = jnp.concatenate([seg, jnp.full((pad,), num_segments, seg.dtype)])
+    return segment_reduce_pallas(data, seg, num_segments=num_segments,
+                                 reduce=reduce, interpret=interpret)

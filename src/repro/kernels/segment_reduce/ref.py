@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the segment_reduce kernel."""
+
+from __future__ import annotations
+
+import jax
+
+
+def segment_reduce_ref(data, seg, *, num_segments: int, reduce: str = "sum"):
+    fn = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+          "max": jax.ops.segment_max}[reduce]
+    return fn(data, seg, num_segments + 1)[:num_segments]

@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh, and record memory/cost/collective analysis for §Roofline.
+
+MUST be run as its own process (the XLA flag above locks device count at
+first jax init — that is why it precedes every other import):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json out.json
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, make_cell, shapes_for          # noqa: E402
+from repro.configs.base import with_sharding, named                # noqa: E402
+from repro.launch.mesh import make_production_mesh                 # noqa: E402
+
+# -- collective-bytes extraction from lowered/compiled HLO --------------------
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*"
+    r"((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\]))", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in an HLO module."""
+    out: dict[str, int] = {}
+    for op, shape in _COLL_RE.findall(hlo_text):
+        op = op.lower()
+        out[op] = out.get(op, 0) + _shape_bytes(shape)
+    return out
+
+
+# -- per-cell dry-run ----------------------------------------------------------
+
+def dryrun_cell(arch: str, shape: str, mesh, verbose: bool = True) -> dict:
+    t0 = time.perf_counter()
+    cell = make_cell(arch, shape, mesh)
+    args = with_sharding(mesh, cell.in_specs, cell.args)
+    out_shardings = named(mesh, cell.out_specs) if cell.out_specs is not None else None
+
+    jitted = jax.jit(cell.fn, out_shardings=out_shardings,
+                     donate_argnums=cell.donate)
+    with jax.sharding.set_mesh(mesh):
+        lowered = jitted.lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+    t_all = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    rec = {
+        "cell": cell.name,
+        "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_all - t_lower, 2),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collective_bytes": coll,
+        "mem_per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {cell.name} mesh={rec['mesh']} "
+              f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+              f"collectives={ {k: f'{v:.2e}' for k, v in coll.items()} }")
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--commongraph", action="store_true",
+                   help="also dry-run the paper engine cells")
+    p.add_argument("--json", default=None)
+    args = p.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in shapes_for(a)]
+    elif args.arch:
+        shapes = [args.shape] if args.shape else shapes_for(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+
+    records, failures = [], []
+    for mesh in meshes:
+        for arch, shape in cells:
+            try:
+                records.append(dryrun_cell(arch, shape, mesh))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                traceback.print_exc()
+                failures.append((arch, shape, str(mesh.shape), str(e)[:200]))
+        if args.commongraph:
+            from repro.configs.commongraph import COMMONGRAPH_SHAPES, make_commongraph_cell
+            for cs in COMMONGRAPH_SHAPES:
+                try:
+                    cell = make_commongraph_cell(cs, mesh)
+                    records.append(_dryrun_prepared(cell, mesh))
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append(("commongraph", cs, str(mesh.shape), str(e)[:200]))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"\n[dryrun] {len(records)} cells OK, {len(failures)} failed")
+    for f4 in failures:
+        print("  FAIL:", *f4)
+    return 1 if failures else 0
+
+
+def _dryrun_prepared(cell, mesh) -> dict:
+    """dryrun_cell for an already-built Cell (commongraph extra cells)."""
+    t0 = time.perf_counter()
+    args = with_sharding(mesh, cell.in_specs, cell.args)
+    out_shardings = named(mesh, cell.out_specs) if cell.out_specs is not None else None
+    jitted = jax.jit(cell.fn, out_shardings=out_shardings,
+                     donate_argnums=cell.donate)
+    with jax.sharding.set_mesh(mesh):
+        compiled = jitted.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "cell": cell.name,
+        "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
+        "lower_s": None,
+        "compile_s": round(time.perf_counter() - t0, 2),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collective_bytes": coll,
+        "mem_per_device": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+    print(f"[dryrun] {cell.name} mesh={rec['mesh']} compile={rec['compile_s']}s")
+    print(f"  memory_analysis: {mem}")
+    print(f"  flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+          f"collectives={ {k: f'{v:.2e}' for k, v in coll.items()} }")
+    return rec
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""The paper's driver: evolving-graph queries over a snapshot window.
+
+Runs all four execution modes on an R-MAT evolving sequence and reports the
+Table-1-style comparison:
+
+    PYTHONPATH=src python -m repro.launch.evolve --nodes 20000 --edges 200000 \
+        --snapshots 10 --changes 10000 --alg sssp
+
+Modes: ks (KickStarter streaming baseline), dh (CommonGraph Direct-Hop),
+dhb (batched Direct-Hop — snapshot-parallel), ws (Triangular-Grid
+work-sharing, DP-optimal plan).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (
+    SnapshotStore,
+    optimal_plan,
+    plan_added_edges,
+    run_direct_hop,
+    run_direct_hop_batched,
+    run_kickstarter_stream,
+    run_plan,
+)
+from repro.graph import make_evolving_sequence, run_to_fixpoint
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--nodes", type=int, default=20_000)
+    p.add_argument("--edges", type=int, default=200_000)
+    p.add_argument("--snapshots", type=int, default=10)
+    p.add_argument("--changes", type=int, default=10_000)
+    p.add_argument("--alg", default="sssp", choices=list(ALL_SEMIRINGS))
+    p.add_argument("--source", type=int, default=0)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--verify", action="store_true")
+    args = p.parse_args(argv)
+
+    sr = ALL_SEMIRINGS[args.alg]
+    print(f"[evolve] generating {args.snapshots} snapshots of "
+          f"~{args.edges} edges ({args.changes} changes each) ...")
+    seq = make_evolving_sequence(args.nodes, args.edges, args.snapshots,
+                                 args.changes, seed=args.seed)
+    store = SnapshotStore(seq)
+
+    t0 = time.perf_counter()
+    ks_res, ks_stats = run_kickstarter_stream(store, sr, args.source)
+    t_ks = time.perf_counter() - t0
+    print(f"[evolve] KickStarter streaming: {t_ks:.2f}s "
+          f"(tainted/step: {[s.tainted for s in ks_stats[1:]]})")
+
+    dh = run_direct_hop(store, sr, args.source)
+    print(f"[evolve] Direct-Hop:            {dh.wall_s:.2f}s  "
+          f"speedup {t_ks / dh.wall_s:.2f}x")
+
+    dhb = run_direct_hop_batched(store, sr, args.source)
+    print(f"[evolve] Direct-Hop (batched):  {dhb.wall_s:.2f}s  "
+          f"speedup {t_ks / dhb.wall_s:.2f}x")
+
+    plan = optimal_plan(store)
+    ws = run_plan(store, plan, sr, args.source)
+    print(f"[evolve] Work-Sharing (TG/DP):  {ws.wall_s:.2f}s  "
+          f"speedup {t_ks / ws.wall_s:.2f}x  "
+          f"(Δ-edges {ws.added_edges} vs DH "
+          f"{plan_added_edges(store, _dh_plan(args.snapshots))})")
+
+    if args.verify:
+        for i in range(args.snapshots):
+            ref = run_to_fixpoint(store.snapshot_view(i), sr, args.source).values
+            for label, res in (("ks", ks_res[i]), ("dh", dh.results[i]),
+                               ("dhb", dhb.results[i]), ("ws", ws.results[i])):
+                np.testing.assert_allclose(np.asarray(res), np.asarray(ref),
+                                           rtol=1e-6, err_msg=f"{label} snap {i}")
+        print("[evolve] verify: all modes match from-scratch on every snapshot")
+
+
+def _dh_plan(n):
+    from repro.core import direct_hop_plan
+    return direct_hop_plan(n=n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Assigned-architecture model zoo (pure JAX, pytree params, pjit-shardable).
+
+Families:
+  transformer  decoder-only LMs (dense + MoE), GQA + RoPE, train/prefill/decode
+  gnn          GCN / PNA / MeshGraphNet / GraphCast over segment-reduce message passing
+  dien         DIEN recsys (embedding-bag + GRU + AUGRU + MLP)
+"""

@@ -1,0 +1,116 @@
+"""Shared NN building blocks: norms, initializers, MLPs, losses.
+
+Plain pytree params (dicts of jnp arrays) — no framework dependency. Every
+init function has a matching ``jax.eval_shape``-compatible signature so the
+dry-run can materialize abstract params without allocation.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# Latent-sharding hook (§Perf addendum D): internal [rows, d] activations
+# (GNN node/edge hidden states, MLP hiddens over huge row counts) have no
+# sharding anchor of their own; the GNN cell builder installs a
+# rows-over-(data, model) annotator here so the partitioner keeps them
+# sharded through forward AND the saved-for-backward set.
+_LATENT = {"con": None}
+
+
+@contextlib.contextmanager
+def latent_constrainer(fn):
+    prev = _LATENT["con"]
+    _LATENT["con"] = fn
+    try:
+        yield
+    finally:
+        _LATENT["con"] = prev
+
+
+def _lat(x: Array) -> Array:
+    c = _LATENT["con"]
+    return c(x) if (c is not None and x.ndim == 2) else x
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in)).astype(jnp.float32)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: Array, gamma: Array, beta: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.dot(h, w_down, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def squared_relu_ffn(x: Array, w_up: Array, w_down: Array) -> Array:
+    """Nemotron-4 style FFN: squared-ReLU activation (arXiv:2402.16819)."""
+    h = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    h = jnp.square(jax.nn.relu(h)).astype(x.dtype)
+    return jnp.dot(h, w_down, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mlp_params(key, dims: tuple[int, ...], dtype=jnp.float32, norm: bool = False):
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        layers.append({"w": dense_init(k, a, b, dtype), "b": jnp.zeros((b,), dtype)})
+    p = {"layers": layers}
+    if norm:
+        p["ln_g"] = jnp.ones((dims[-1],), dtype)
+        p["ln_b"] = jnp.zeros((dims[-1],), dtype)
+    return p
+
+
+def mlp_apply(p, x: Array, act: Callable = jax.nn.relu, final_act: bool = False) -> Array:
+    n = len(p["layers"])
+    for i, lyr in enumerate(p["layers"]):
+        x = _lat(jnp.dot(x, lyr["w"], preferred_element_type=jnp.float32
+                         ).astype(x.dtype) + lyr["b"])
+        if i < n - 1 or final_act:
+            x = act(x)
+    if "ln_g" in p:
+        x = _lat(layer_norm(x, p["ln_g"], p["ln_b"]))
+    return x
+
+
+def softmax_cross_entropy(logits: Array, labels: Array) -> Array:
+    """Mean CE over valid labels (label < 0 is masked). logits fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, lse - ll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def mse_loss(pred: Array, target: Array) -> Array:
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) - target.astype(jnp.float32)))

@@ -1,0 +1,192 @@
+"""DIEN (Zhou et al., arXiv:1809.03672): Deep Interest Evolution Network.
+
+Pipeline: sparse embeddings (item 2²³ rows, category 10⁴ rows, dim 18) →
+interest-extraction GRU over the 100-step behavior sequence → AUGRU
+(attention-gated GRU conditioned on the target item) → MLP 200-80-2, plus
+the auxiliary next-behavior loss on the GRU states.
+
+Scale notes (DESIGN.md §4):
+* embedding tables row-shard over `model`;
+* the GRU layer is **target-independent** — for ``retrieval_cand`` (1 user ×
+  10⁶ candidates) it runs once and only the AUGRU is batched over the
+  candidate axis (sharded over `model`), turning retrieval into a scan over
+  a [n_cand, d] state, not a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, mlp_apply, mlp_params
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str
+    n_items: int = 1 << 23
+    n_cats: int = 10_000
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple[int, ...] = (200, 80)
+    param_dtype: Any = jnp.float32
+    scan_unroll: bool = False            # roofline mode (see transformer.py)
+
+    @property
+    def d_behavior(self) -> int:            # concat(item, cat) embedding
+        return 2 * self.embed_dim
+
+
+def _gru_params(key, d_in: int, d_h: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_in, 3 * d_h, dtype),   # update/reset/cand input
+        "wh": dense_init(k2, d_h, 3 * d_h, dtype),
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, h, x, att: Array | None = None):
+    """GRU cell; if ``att`` given, AUGRU: update gate scaled by attention."""
+    gi = jnp.dot(x, p["wi"], preferred_element_type=jnp.float32)
+    gh = jnp.dot(h, p["wh"], preferred_element_type=jnp.float32)
+    d = p["wh"].shape[0]
+    zi, ri, ci = gi[..., :d], gi[..., d:2 * d], gi[..., 2 * d:]
+    zh, rh, ch = gh[..., :d], gh[..., d:2 * d], gh[..., 2 * d:]
+    b = p["b"].astype(jnp.float32)
+    z = jax.nn.sigmoid(zi + zh + b[:d])
+    r = jax.nn.sigmoid(ri + rh + b[d:2 * d])
+    c = jnp.tanh(ci + r * ch + b[2 * d:])
+    if att is not None:
+        z = z * att[..., None]               # AUGRU: attentional update gate
+    h_new = (1.0 - z) * h.astype(jnp.float32) + z * c
+    return h_new.astype(h.dtype)
+
+
+def init_dien_params(key, cfg: DIENConfig):
+    keys = jax.random.split(key, 7)
+    d, dh = cfg.d_behavior, cfg.gru_dim
+    dt = cfg.param_dtype
+    d_final = dh + d + d                     # interest ++ target emb ++ sum-pooled history
+    return {
+        "item_emb": (jax.random.normal(keys[0], (cfg.n_items, cfg.embed_dim),
+                                       jnp.float32) * 0.02).astype(dt),
+        "cat_emb": (jax.random.normal(keys[1], (cfg.n_cats, cfg.embed_dim),
+                                      jnp.float32) * 0.02).astype(dt),
+        "gru1": _gru_params(keys[2], d, dh, dt),
+        "augru": _gru_params(keys[3], d, dh, dt),
+        "att": mlp_params(keys[4], (dh + d, 80, 1)),
+        "mlp": mlp_params(keys[5], (d_final,) + cfg.mlp_dims + (2,)),
+        "aux": mlp_params(keys[6], (dh + d, 100, 1)),
+    }
+
+
+def _behavior_embed(cfg, params, item_ids, cat_ids):
+    it = jnp.take(params["item_emb"], item_ids, axis=0)
+    ct = jnp.take(params["cat_emb"], cat_ids, axis=0)
+    return jnp.concatenate([it, ct], -1)      # [..., 2*embed_dim]
+
+
+def _interest_extraction(cfg, params, beh: Array, mask: Array):
+    """GRU over the behavior sequence. beh: [B, S, D]. Returns states [B, S, dh]."""
+    b = beh.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), beh.dtype)
+
+    def step(h, inp):
+        x, m = inp
+        h_new = _gru_cell(params["gru1"], h, x)
+        h = jnp.where(m[:, None], h_new, h)
+        return h, h
+
+    _, states = jax.lax.scan(step, h0, (jnp.moveaxis(beh, 1, 0),
+                                        jnp.moveaxis(mask, 1, 0)),
+                             unroll=True if cfg.scan_unroll else 1)
+    return jnp.moveaxis(states, 0, 1)          # [B, S, dh]
+
+
+def _interest_evolution(cfg, params, states: Array, beh: Array, mask: Array,
+                        target: Array):
+    """AUGRU over GRU states with attention to the target item.
+
+    states [B, S, dh]; target [B, D]. Returns final interest [B, dh].
+    """
+    b = states.shape[0]
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(target[:, None], states.shape[:2] + (target.shape[-1],))], -1)
+    att_logit = mlp_apply(params["att"], att_in)[..., 0]   # [B, S]
+    att_logit = jnp.where(mask, att_logit, -jnp.inf)
+    att = jax.nn.softmax(att_logit.astype(jnp.float32), axis=-1).astype(states.dtype)
+
+    h0 = jnp.zeros((b, cfg.gru_dim), states.dtype)
+
+    def step(h, inp):
+        x, a, m = inp
+        h_new = _gru_cell(params["augru"], h, x, att=a)
+        return jnp.where(m[:, None], h_new, h), None
+
+    h, _ = jax.lax.scan(step, h0, (jnp.moveaxis(beh, 1, 0),
+                                   jnp.moveaxis(att, 1, 0),
+                                   jnp.moveaxis(mask, 1, 0)),
+                        unroll=True if cfg.scan_unroll else 1)
+    return h
+
+
+def dien_forward(cfg: DIENConfig, params, batch):
+    """batch: hist_items/hist_cats [B, S], hist_mask [B, S],
+    target_item/target_cat [B]. Returns logits [B, 2]."""
+    beh = _behavior_embed(cfg, params, batch["hist_items"], batch["hist_cats"])
+    target = _behavior_embed(cfg, params, batch["target_item"], batch["target_cat"])
+    mask = batch["hist_mask"]
+    states = _interest_extraction(cfg, params, beh, mask)
+    interest = _interest_evolution(cfg, params, states, beh, mask, target)
+    pooled = jnp.sum(beh * mask[..., None].astype(beh.dtype), axis=1)
+    x = jnp.concatenate([interest, target, pooled], -1)
+    return mlp_apply(params["mlp"], x), states, beh, mask
+
+
+def dien_loss(cfg: DIENConfig, params, batch) -> Array:
+    logits, states, beh, mask = dien_forward(cfg, params, batch)
+    labels = batch["label"]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    ce = -jnp.mean(jnp.take_along_axis(lp, labels[:, None], 1))
+
+    # auxiliary loss: state_t should predict behavior_{t+1} (positive) vs
+    # a shuffled negative (we roll the batch as the negative sample).
+    h_t = states[:, :-1]
+    e_pos = beh[:, 1:]
+    e_neg = jnp.roll(e_pos, 1, axis=0)
+    m = mask[:, 1:].astype(jnp.float32)
+    def aux_logit(e):
+        return mlp_apply(params["aux"], jnp.concatenate([h_t, e], -1))[..., 0]
+    pos = jax.nn.log_sigmoid(aux_logit(e_pos).astype(jnp.float32))
+    neg = jax.nn.log_sigmoid(-aux_logit(e_neg).astype(jnp.float32))
+    aux = -jnp.sum((pos + neg) * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return ce + 1.0 * aux
+
+
+def dien_score_candidates(cfg: DIENConfig, params, batch):
+    """Retrieval scoring: 1 user vs n_cand candidates.
+
+    batch: hist_* [1, S]; cand_items/cand_cats [n_cand]. GRU runs once;
+    the AUGRU and head are batched over candidates. Returns [n_cand] scores.
+    """
+    beh = _behavior_embed(cfg, params, batch["hist_items"], batch["hist_cats"])  # [1,S,D]
+    mask = batch["hist_mask"]
+    states = _interest_extraction(cfg, params, beh, mask)                        # [1,S,dh]
+    cands = _behavior_embed(cfg, params, batch["cand_items"], batch["cand_cats"])  # [C,D]
+    n_cand = cands.shape[0]
+
+    statesC = jnp.broadcast_to(states, (n_cand,) + states.shape[1:])
+    behC = jnp.broadcast_to(beh, (n_cand,) + beh.shape[1:])
+    maskC = jnp.broadcast_to(mask, (n_cand,) + mask.shape[1:])
+    interest = _interest_evolution(cfg, params, statesC, behC, maskC, cands)     # [C,dh]
+    pooled = jnp.sum(behC * maskC[..., None].astype(behC.dtype), axis=1)
+    x = jnp.concatenate([interest, cands, pooled], -1)
+    logits = mlp_apply(params["mlp"], x)
+    return logits[:, 1] - logits[:, 0]

@@ -1,0 +1,46 @@
+"""EmbeddingBag for JAX (gather + segment-reduce) — recsys substrate.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse; per the assignment
+this is part of the system. The reference path is ``jnp.take`` +
+``jax.ops.segment_sum``; ``kernels/embedding_bag`` provides the fused Pallas
+version for the TPU hot path (same signature, allclose-tested against this).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def embedding_lookup(table: Array, ids: Array) -> Array:
+    """Plain lookup: [..., ] int32 -> [..., D]. Row-sharded tables gather."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: Array,        # [V, D]
+    ids: Array,          # [n_lookups] int32
+    bag_ids: Array,      # [n_lookups] int32, which output bag each lookup joins
+    n_bags: int,
+    weights: Array | None = None,   # optional per-lookup weights
+    mode: str = "sum",
+) -> Array:
+    """Multi-hot bag reduction: out[b] = reduce_{i: bag_ids[i]==b} w_i * table[ids[i]].
+
+    Padded lookups use ``bag_ids == n_bags`` (dropped via the sentinel row).
+    """
+    vals = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        vals = vals * weights[:, None].astype(vals.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(vals, bag_ids, n_bags + 1)[:n_bags]
+    if mode == "mean":
+        s = jax.ops.segment_sum(vals, bag_ids, n_bags + 1)[:n_bags]
+        c = jax.ops.segment_sum(jnp.ones((ids.shape[0], 1), vals.dtype),
+                                bag_ids, n_bags + 1)[:n_bags]
+        return s / jnp.maximum(c, 1.0)
+    if mode == "max":
+        return jax.ops.segment_max(vals, bag_ids, n_bags + 1)[:n_bags]
+    raise ValueError(mode)

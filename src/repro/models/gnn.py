@@ -1,0 +1,292 @@
+"""GNN family: GCN / PNA / MeshGraphNet / GraphCast on segment-reduce message passing.
+
+All four assigned GNN archs share one substrate — gather(h[src]) → combine →
+``segment_{sum,max,min}`` by dst — which is exactly the edge-relaxation
+primitive of the paper's engine (graph/engine.py) minus the semiring
+fixpoint. Message-passing over evolving-graph EdgeViews therefore reuses the
+paper's mutation-free blocks directly (DESIGN.md §4).
+
+Batch format: a dict of arrays (pjit-friendly). Padded edges have
+``dst == n_nodes`` (sentinel segment, dropped). GraphCast uses its own
+encode(grid→mesh) / process(mesh) / decode(mesh→grid) edge sets.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    layer_norm,
+    mlp_apply,
+    mlp_params,
+    mse_loss,
+    softmax_cross_entropy,
+)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str                     # "gcn" | "pna" | "meshgraphnet" | "graphcast"
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    d_out: int
+    task: str                     # "node_class" | "node_reg" | "graph_reg"
+    aggregator: str = "sum"
+    d_edge: int = 4
+    mlp_layers: int = 2
+    feature_table: int = 0        # >0: node features gathered from a table (sampled training)
+    n_vars: int = 0               # graphcast in/out channel count
+    param_dtype: Any = jnp.float32
+
+
+# Latent-sharding hook — lives in models/common.py so mlp_apply hiddens are
+# covered too; re-exported here for the cell builders (§Perf addendum D).
+from repro.models.common import _lat, latent_constrainer  # noqa: E402,F401
+
+
+def _seg(op: str, data: Array, seg: Array, num: int) -> Array:
+    if op == "sum":
+        return jax.ops.segment_sum(data, seg, num)
+    if op == "mean":
+        s = jax.ops.segment_sum(data, seg, num)
+        c = jax.ops.segment_sum(jnp.ones((data.shape[0], 1), data.dtype), seg, num)
+        return s / jnp.maximum(c, 1.0)
+    if op == "max":
+        return jax.ops.segment_max(data, seg, num)
+    if op == "min":
+        return jax.ops.segment_min(data, seg, num)
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
+# GCN (Kipf & Welling) — SpMM with symmetric normalization
+# ---------------------------------------------------------------------------
+
+def init_gcn(key, cfg: GNNConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    keys = jax.random.split(key, cfg.n_layers)
+    return {"w": [
+        (jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a)).astype(cfg.param_dtype)
+        for k, a, b in zip(keys, dims[:-1], dims[1:])]}
+
+
+def gcn_forward(cfg: GNNConfig, params, batch):
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    n = x.shape[0]
+    valid = (dst < n).astype(jnp.float32)  # padded edges must not count
+    deg_in = jax.ops.segment_sum(valid, dst, n + 1)[:n]
+    deg_out = jax.ops.segment_sum(valid, src, n + 1)[:n]
+    norm = (jax.lax.rsqrt(jnp.maximum(deg_out, 1.0))[src]
+            * jax.lax.rsqrt(jnp.maximum(deg_in, 1.0))[
+                jnp.minimum(dst, n - 1)])
+    for i, w in enumerate(params["w"]):
+        h = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+        msg = h[src] * norm[:, None].astype(h.dtype)
+        x = _lat(_seg("sum", msg, dst, n + 1)[:n])
+        if i < len(params["w"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# PNA (Corso et al.) — multi-aggregator (mean/max/min/std) × degree scalers
+# ---------------------------------------------------------------------------
+
+PNA_AGGS = ("mean", "max", "min", "std")
+PNA_SCALERS = ("identity", "amplification", "attenuation")
+
+
+def init_pna(key, cfg: GNNConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    n_cat = len(PNA_AGGS) * len(PNA_SCALERS) * d + d
+    layers = [{"post": mlp_params(k, (n_cat, d, d))} for k in keys[:cfg.n_layers]]
+    return {
+        "enc": mlp_params(keys[-2], (cfg.d_in, d)),
+        "layers": layers,
+        "dec": mlp_params(keys[-1], (d, d, cfg.d_out)),
+    }
+
+
+def pna_forward(cfg: GNNConfig, params, batch):
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    n = x.shape[0]
+    h = mlp_apply(params["enc"], x.astype(cfg.param_dtype))
+    ones = jnp.ones((src.shape[0], 1), jnp.float32)
+    deg = jax.ops.segment_sum(ones, dst, n + 1)[:n, 0]
+    logd = jnp.log1p(deg)
+    delta = jnp.mean(logd) + 1e-6
+    scalers = jnp.stack([jnp.ones_like(logd), logd / delta,
+                         delta / jnp.maximum(logd, 1e-6)], 1)  # [N, 3]
+    for lyr in params["layers"]:
+        msg = h[src]
+        mean = _seg("mean", msg, dst, n + 1)[:n]
+        mx = _seg("max", jnp.where((dst < n)[:, None], msg, -jnp.inf), dst, n + 1)[:n]
+        mn = _seg("min", jnp.where((dst < n)[:, None], msg, jnp.inf), dst, n + 1)[:n]
+        m2 = _seg("mean", jnp.square(msg), dst, n + 1)[:n]
+        std = jnp.sqrt(jax.nn.relu(m2 - jnp.square(mean)) + 1e-5)
+        has_deg = (deg > 0)[:, None]
+        mx = jnp.where(has_deg, mx, 0.0)
+        mn = jnp.where(has_deg, mn, 0.0)
+        aggs = jnp.stack([mean, mx, mn, std], 1)               # [N, 4, D]
+        scaled = aggs[:, :, None, :] * scalers[:, None, :, None]  # [N, 4, 3, D]
+        cat = jnp.concatenate([h, scaled.reshape(n, -1).astype(h.dtype)], -1)
+        h = _lat(h + mlp_apply(lyr["post"], cat))
+    return mlp_apply(params["dec"], h)
+
+
+# ---------------------------------------------------------------------------
+# MeshGraphNet (Pfaff et al.) — edge+node MLP blocks with residuals
+# ---------------------------------------------------------------------------
+
+def _mgn_mlp(key, d_in, d_h, d_out, n_hidden=2):
+    dims = (d_in,) + (d_h,) * n_hidden + (d_out,)
+    return mlp_params(key, dims, norm=True)
+
+
+def init_meshgraphnet(key, cfg: GNNConfig):
+    keys = jax.random.split(key, 2 * cfg.n_layers + 3)
+    d = cfg.d_hidden
+    blocks = []
+    for i in range(cfg.n_layers):
+        blocks.append({
+            "edge": _mgn_mlp(keys[2 * i], 3 * d, d, d, cfg.mlp_layers),
+            "node": _mgn_mlp(keys[2 * i + 1], 2 * d, d, d, cfg.mlp_layers),
+        })
+    return {
+        "node_enc": _mgn_mlp(keys[-3], cfg.d_in, d, d, cfg.mlp_layers),
+        "edge_enc": _mgn_mlp(keys[-2], cfg.d_edge, d, d, cfg.mlp_layers),
+        "dec": mlp_params(keys[-1], (d, d, cfg.d_out)),
+        "blocks": blocks,
+    }
+
+
+def _mgn_process(blocks, h, e, src, dst, n, aggregator="sum"):
+    # (per-block jax.checkpoint was tried and REFUTED here: the recompute
+    # peak overlaps the checkpointed carries in XLA's buffer assignment and
+    # temp grew 58->75 GiB/device. The working mitigation for the [E, 3d]
+    # backward-saved concats at 62M-edge scale is edge-chunked processing —
+    # EXPERIMENTS.md §Perf addendum D.)
+    for blk in blocks:
+        he = jnp.concatenate([e, h[src], h[jnp.minimum(dst, n - 1)]], -1)
+        e = _lat(e + mlp_apply(blk["edge"], he))
+        agg = _seg(aggregator, e, dst, n + 1)[:n]
+        h = _lat(h + mlp_apply(blk["node"], jnp.concatenate([h, agg], -1)))
+    return h, e
+
+
+def meshgraphnet_forward(cfg: GNNConfig, params, batch):
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    ef = batch["edge_feat"]
+    n = x.shape[0]
+    h = _lat(mlp_apply(params["node_enc"], x.astype(cfg.param_dtype)))
+    e = _lat(mlp_apply(params["edge_enc"], ef.astype(cfg.param_dtype)))
+    h, _ = _mgn_process(params["blocks"], h, e, src, dst, n, cfg.aggregator)
+    return mlp_apply(params["dec"], h)
+
+
+# ---------------------------------------------------------------------------
+# GraphCast (Lam et al.) — encode(grid→mesh) / process(mesh) / decode(mesh→grid)
+# ---------------------------------------------------------------------------
+
+def init_graphcast(key, cfg: GNNConfig):
+    keys = jax.random.split(key, 2 * cfg.n_layers + 7)
+    d = cfg.d_hidden
+    blocks = []
+    for i in range(cfg.n_layers):
+        blocks.append({
+            "edge": _mgn_mlp(keys[2 * i], 3 * d, d, d, 1),
+            "node": _mgn_mlp(keys[2 * i + 1], 2 * d, d, d, 1),
+        })
+    return {
+        "grid_enc": _mgn_mlp(keys[-7], cfg.n_vars, d, d, 1),
+        "g2m_edge": _mgn_mlp(keys[-6], cfg.d_edge, d, d, 1),
+        "mesh_edge": _mgn_mlp(keys[-5], cfg.d_edge, d, d, 1),
+        "mesh_up": _mgn_mlp(keys[-2], d, d, d, 1),
+        "blocks": blocks,
+        "m2g_edge": _mgn_mlp(keys[-4], cfg.d_edge, d, d, 1),
+        "grid_up": _mgn_mlp(keys[-3], 2 * d, d, d, 1),
+        "dec": mlp_params(keys[-1], (d, d, cfg.n_vars)),
+    }
+
+
+def graphcast_forward(cfg: GNNConfig, params, batch):
+    xg = batch["x"]                              # [N_grid, n_vars]
+    n_grid = xg.shape[0]
+    n_mesh = batch["mesh_valid"].shape[0]
+
+    hg = _lat(mlp_apply(params["grid_enc"], xg.astype(cfg.param_dtype)))
+
+    # encode: grid -> mesh
+    e = _lat(mlp_apply(params["g2m_edge"], batch["g2m_feat"].astype(cfg.param_dtype)))
+    msg = _lat(e + hg[batch["g2m_src"]])
+    hm = _lat(_seg("sum", msg, batch["g2m_dst"], n_mesh + 1)[:n_mesh])
+    hm = _lat(mlp_apply(params["mesh_up"], hm))
+
+    # process on the (multi-)mesh
+    em = _lat(mlp_apply(params["mesh_edge"], batch["mesh_feat"].astype(cfg.param_dtype)))
+    hm, _ = _mgn_process(params["blocks"], hm, em,
+                         batch["mesh_src"], batch["mesh_dst"], n_mesh, "sum")
+
+    # decode: mesh -> grid
+    e2 = _lat(mlp_apply(params["m2g_edge"], batch["m2g_feat"].astype(cfg.param_dtype)))
+    msg2 = _lat(e2 + hm[batch["m2g_src"]])
+    hg2 = _lat(_seg("sum", msg2, batch["m2g_dst"], n_grid + 1)[:n_grid])
+    hg = _lat(mlp_apply(params["grid_up"], jnp.concatenate([hg, hg2], -1)))
+    return mlp_apply(params["dec"], hg)
+
+
+# ---------------------------------------------------------------------------
+# uniform interface
+# ---------------------------------------------------------------------------
+
+_INIT = {"gcn": init_gcn, "pna": init_pna,
+         "meshgraphnet": init_meshgraphnet, "graphcast": init_graphcast}
+_FWD = {"gcn": gcn_forward, "pna": pna_forward,
+        "meshgraphnet": meshgraphnet_forward, "graphcast": graphcast_forward}
+
+
+def init_gnn_params(key, cfg: GNNConfig):
+    k1, k2 = jax.random.split(key)
+    p = _INIT[cfg.arch](k1, cfg)
+    if cfg.feature_table:
+        p["features"] = (jax.random.normal(
+            k2, (cfg.feature_table, cfg.d_in), jnp.float32) * 0.1).astype(cfg.param_dtype)
+    return p
+
+
+def gnn_forward(cfg: GNNConfig, params, batch):
+    if cfg.feature_table:
+        batch = dict(batch)
+        x = params["features"][batch["nodes"]]
+        batch["x"] = x * batch["node_valid"][:, None].astype(x.dtype)
+    return _FWD[cfg.arch](cfg, params, batch)
+
+
+def gnn_loss(cfg: GNNConfig, params, batch) -> Array:
+    out = gnn_forward(cfg, params, batch)
+    if cfg.task == "node_class":
+        labels = batch["labels"]
+        if "n_seeds" in batch:   # sampled training: loss on seeds only
+            out = out[: labels.shape[0]]
+        return softmax_cross_entropy(out, labels)
+    if cfg.task == "node_reg":
+        t = batch["targets"]
+        if "n_seeds" in batch and out.shape[0] != t.shape[0]:
+            out = out[: t.shape[0]]   # sampled training: loss on seeds only
+        return mse_loss(out, t)
+    if cfg.task == "graph_reg":  # molecule: pool by graph id then regress
+        gid = batch["graph_id"]
+        n_graphs = batch["graph_targets"].shape[0]
+        pooled = jax.ops.segment_sum(out, gid, n_graphs + 1)[:n_graphs]
+        return mse_loss(pooled, batch["graph_targets"])
+    raise ValueError(cfg.task)

@@ -1,0 +1,557 @@
+"""Decoder-only LM family: dense + MoE, GQA + RoPE, train/prefill/decode.
+
+Covers all five assigned LM architectures through one config:
+
+* layers are *scanned* with stacked params (compile-time O(1) in depth —
+  essential for the 96-layer nemotron dry-run on a single-core compiler);
+* GQA attention with RoPE; activation = SwiGLU or squared-ReLU (nemotron);
+* MoE (qwen3 / llama4): per-group capacity dispatch with gather/scatter —
+  group axis shards over (pod, data), expert axis over model (EP); the
+  combine scatter-add is the all-reduce the roofline sees;
+* ``moe_every``: 0 = dense model, 1 = every layer MoE (qwen3),
+  2 = alternating dense/MoE super-layers (llama4 interleaved);
+* decode (``serve_step``): single-token step against a [L, B, S, KV, Dh]
+  KV cache — O(S) per step, so long_500k never materializes anything
+  quadratic (DESIGN.md §4).
+
+Params are bf16 by default (fp32 master-free; optimizer state fp32 —
+see optim/). All matmuls accumulate in fp32 via preferred_element_type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    dense_init,
+    embed_init,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    activation: str = "swiglu"          # "swiglu" | "squared_relu"
+    # MoE
+    moe_every: int = 0                   # 0 dense, 1 all-MoE, 2 alternating
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # numerics
+    param_dtype: Any = jnp.bfloat16
+    rope_theta: float = 10_000.0
+    # beyond-paper perf knobs (hillclimb targets; see EXPERIMENTS.md §Perf)
+    attn_chunk: int = 0                  # 0 = unchunked scores; else KV-chunked flash-style
+    vocab_chunk: int = 0                 # 0 = full logits; else chunked CE loss
+    scan_unroll: bool = False            # roofline mode: unroll layer scans so
+                                         # cost_analysis counts every layer
+    expert_zero1: bool = False           # experts shard over model only
+                                         # (ZeRO-1: opt state still fully
+                                         # sharded) — kills per-layer FSDP
+                                         # all-gathers when experts fit HBM
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_every > 0
+
+    def layer_kinds(self) -> list[str]:
+        if self.moe_every == 0:
+            return ["dense"] * self.n_layers
+        if self.moe_every == 1:
+            return ["moe"] * self.n_layers
+        # llama4-style: [dense, moe] pairs
+        return ["dense", "moe"] * (self.n_layers // 2)
+
+    def param_count(self) -> int:
+        p = jax.eval_shape(lambda k: init_lm_params(k, self), jax.random.PRNGKey(0))
+        return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _attn_params(key, cfg: LMConfig, n: int):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    dt = cfg.param_dtype
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dt).reshape(d, cfg.n_heads, hd)[None].repeat(n, 0),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dt).reshape(d, cfg.n_kv_heads, hd)[None].repeat(n, 0),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dt).reshape(d, cfg.n_kv_heads, hd)[None].repeat(n, 0),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dt).reshape(cfg.n_heads, hd, d)[None].repeat(n, 0),
+        "ln1": jnp.ones((n, d), dt),
+        "ln2": jnp.ones((n, d), dt),
+    }
+
+
+def _dense_ffn_params(key, cfg: LMConfig, n: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.param_dtype
+    p = {"w_up": dense_init(k1, d, f, dt)[None].repeat(n, 0),
+         "w_down": dense_init(k2, f, d, dt)[None].repeat(n, 0)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = dense_init(k3, d, f, dt)[None].repeat(n, 0)
+    return p
+
+
+def _moe_params(key, cfg: LMConfig, n: int):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    d, f, e, dt = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts, cfg.param_dtype
+    scale = 1.0 / math.sqrt(d)
+    def ew(k, a, b):
+        return (jax.random.normal(k, (n, e, a, b), jnp.float32) * scale).astype(dt)
+    p = {
+        "router": dense_init(kr, d, e, jnp.float32)[None].repeat(n, 0),
+        "w_gate": ew(kg, d, f),
+        "w_up": ew(ku, d, f),
+        "w_down": ew(kd, f, d),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {"w_gate": dense_init(k1, d, fs, dt)[None].repeat(n, 0),
+                       "w_up": dense_init(k2, d, fs, dt)[None].repeat(n, 0),
+                       "w_down": dense_init(k3, fs, d, dt)[None].repeat(n, 0)}
+    return p
+
+
+def init_lm_params(key, cfg: LMConfig):
+    keys = jax.random.split(key, 6)
+    kinds = cfg.layer_kinds()
+    n_dense = sum(k == "dense" for k in kinds)
+    n_moe = sum(k == "moe" for k in kinds)
+    n_attn = len(kinds)
+    params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "attn": _attn_params(keys[1], cfg, n_attn),
+        "final_ln": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": dense_init(keys[4], cfg.d_model, cfg.vocab, cfg.param_dtype),
+    }
+    if n_dense:
+        params["ffn"] = _dense_ffn_params(keys[2], cfg, n_dense)
+    if n_moe:
+        params["moe"] = _moe_params(keys[3], cfg, n_moe)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def _rope(x: Array, positions: Array, theta: float) -> Array:
+    """Interleaved (NeoX-style) RoPE. x: [..., S, H, Dh]; positions: [..., S].
+
+    Pairs adjacent elements (2i, 2i+1) instead of half-splitting so that a
+    head_dim-sharded tensor (the TP fallback for archs whose head count the
+    model axis does not divide — llama4 40H, llama3.2 24H) rotates entirely
+    shard-locally (DESIGN.md §7: TPU adaptation).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x.astype(jnp.float32).reshape(x.shape[:-1] + (half, 2))
+    e, o = xr[..., 0], xr[..., 1]
+    out = jnp.stack([e * cos - o * sin, o * cos + e * sin], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def _attention_train(cfg: LMConfig, lp, x: Array) -> tuple[Array, Array, Array]:
+    """Causal GQA self-attention, [B, S, D] -> ([B, S, D], k, v).
+
+    KV heads are repeated to full heads before the score einsum so that the
+    head axis shards cleanly over `model` at any TP degree (TP > n_kv is
+    common here: qwen3 kv=4, TP=16). k/v are also returned (pre-repeat) for
+    prefill cache emission.
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    xq = jnp.einsum("bsd,dhk->bshk", x, lp["wq"], preferred_element_type=jnp.float32).astype(x.dtype)
+    xk = jnp.einsum("bsd,dhk->bshk", x, lp["wk"], preferred_element_type=jnp.float32).astype(x.dtype)
+    xv = jnp.einsum("bsd,dhk->bshk", x, lp["wv"], preferred_element_type=jnp.float32).astype(x.dtype)
+    pos = jnp.arange(s)
+    xq = _rope(xq, pos, cfg.rope_theta)
+    xk = _rope(xk, pos, cfg.rope_theta)
+    kf = jnp.repeat(xk, g, axis=2)   # [B, S, H, Dh] — full heads, TP-shardable
+    vf = jnp.repeat(xv, g, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+
+    chunk = min(cfg.attn_chunk, s) if cfg.attn_chunk else 0
+    if chunk and s % chunk == 0:
+        out = _chunked_causal_attention(xq, kf, vf, scale, chunk,
+                                        unroll=cfg.scan_unroll)
+    else:
+        scores = jnp.einsum("bqhk,bshk->bhqs", xq, kf,
+                            preferred_element_type=jnp.float32) * scale
+        causal = pos[None, :] <= pos[:, None]  # [q, s]
+        scores = jnp.where(causal[None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, vf,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    proj = jnp.einsum("bshk,hkd->bsd", out, lp["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    return proj, xk, xv
+
+
+def _chunked_causal_attention(xq, kf, vf, scale, chunk: int,
+                              unroll: bool = False) -> Array:
+    """Flash-style online-softmax over KV chunks (beyond-paper memory optimization).
+
+    xq/kf/vf: [B, S, H, Dh] (full heads). Never materializes the full
+    [S, S] score matrix: peak extra memory is O(S · chunk) per head.
+    """
+    b, s, h, hd = xq.shape
+    n_chunks = s // chunk
+    q_pos = jnp.arange(s)
+
+    def step(carry, ci):
+        m, l, acc = carry                      # [B,H,S], [B,H,S], [B,S,H,Dh]
+        k_blk = jax.lax.dynamic_slice_in_dim(kf, ci * chunk, chunk, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(vf, ci * chunk, chunk, axis=1)
+        sc = jnp.einsum("bqhk,bchk->bhqc", xq, k_blk,
+                        preferred_element_type=jnp.float32) * scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        sc = jnp.where((k_pos[None, :] <= q_pos[:, None])[None, None],
+                       sc, -jnp.inf)
+        blk_m = jnp.max(sc, axis=-1)
+        new_m = jnp.maximum(m, blk_m)
+        p = jnp.exp(sc - new_m[..., None])
+        corr = jnp.exp(m - new_m)
+        new_l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqc,bchk->bqhk", p.astype(vf.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        new_acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
+        return (new_m, new_l, new_acc), None
+
+    m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, s, h, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks),
+                                  unroll=True if unroll else 1)
+    out = acc / jnp.moveaxis(l, 1, 2)[..., None]
+    return out.astype(vf.dtype)
+
+
+def _dense_ffn(cfg: LMConfig, lp, x: Array) -> Array:
+    if cfg.activation == "swiglu":
+        g = jnp.dot(x, lp["w_gate"], preferred_element_type=jnp.float32)
+        u = jnp.dot(x, lp["w_up"], preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(x.dtype)
+    else:  # squared_relu (nemotron)
+        h = jnp.dot(x, lp["w_up"], preferred_element_type=jnp.float32)
+        h = jnp.square(jax.nn.relu(h)).astype(x.dtype)
+    return jnp.dot(h, lp["w_down"], preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _moe_ffn(cfg: LMConfig, lp, x: Array, n_groups: int) -> Array:
+    """Capacity-based top-k MoE with gather dispatch / scatter-add combine.
+
+    x: [B, S, D] → groups [G, T, D]; G shards over (pod, data), experts over
+    model. Dispatch gather is shard-local; the combine scatter-add reduces
+    over the expert/model axis (one psum in SPMD).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xg = x.reshape(n_groups, (b * s) // n_groups, d)
+    g_sz = xg.shape[1]
+    cap = int(math.ceil(k * g_sz / e * cfg.capacity_factor))
+    cap = max(cap, k)
+
+    logits = jnp.einsum("gtd,de->gte", xg, lp["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                      # [G, T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert — sort-based
+    # (an [T*k, E] one-hot cumsum would be O(T·k·E) memory; the stable
+    # argsort keeps token-major priority within each expert, matching
+    # GShard capacity semantics, at O(T·k log) and no E-sized temporary)
+    flat_i = top_i.reshape(n_groups, g_sz * k)                  # [G, T*k]
+
+    def _positions(fi):
+        order = jnp.argsort(fi, stable=True)
+        se = fi[order]
+        run_start = jnp.searchsorted(se, se, side="left")
+        pos_sorted = jnp.arange(fi.shape[0], dtype=jnp.int32) - run_start.astype(jnp.int32)
+        return jnp.zeros_like(fi).at[order].set(pos_sorted)
+
+    pos = jax.vmap(_positions)(flat_i)                          # [G, T*k]
+    ok = pos < cap
+
+    # expert slot buffers: token index feeding slot [G, E, cap]
+    slot = flat_i * cap + jnp.minimum(pos, cap - 1)             # [G, T*k]
+    token_id = jnp.repeat(jnp.arange(g_sz, dtype=jnp.int32)[None, :, None],
+                          k, 2).reshape(1, g_sz * k)
+    token_id = jnp.broadcast_to(token_id, (n_groups, g_sz * k))
+    slot_safe = jnp.where(ok, slot, e * cap)  # OOB for dropped -> mode="drop"
+    slot_token = jnp.zeros((n_groups, e * cap), jnp.int32)
+    slot_token = jax.vmap(lambda st, sl, ti: st.at[sl].set(ti, mode="drop"))(
+        slot_token, slot_safe, token_id)
+    slot_valid = jnp.zeros((n_groups, e * cap), bool)
+    slot_valid = jax.vmap(lambda sv, sl: sv.at[sl].set(True, mode="drop"))(
+        slot_valid, slot_safe)
+
+    xe = jax.vmap(jnp.take, in_axes=(0, 0, None))(xg, slot_token, 0)
+    xe = xe.reshape(n_groups, e, cap, d)
+    xe = xe * slot_valid.reshape(n_groups, e, cap, 1).astype(xe.dtype)
+
+    # expert FFN (einsum over stacked expert weights; E shards over model)
+    gate = jnp.einsum("gecd,edf->gecf", xe, lp["w_gate"],
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("gecd,edf->gecf", xe, lp["w_up"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, lp["w_down"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # combine: segment-sum in SLOT space (beyond-paper optimization, §Perf
+    # hillclimb B). The naive combine gathers yf[slot] into a [G, T·k, D]
+    # tensor that (a) promotes to f32 via the gate probs and (b) forces an
+    # all-to-all + all-reduce reshard — ~10 GB/device/layer at qwen3 scale.
+    # Instead: scatter the gate prob onto each slot (tiny), scale the expert
+    # outputs in-place, and segment-sum rows by their destination token —
+    # the same gather+segment-reduce primitive as kernels/embedding_bag.
+    gate_p = top_p.reshape(n_groups, g_sz * k).astype(x.dtype)  # bf16 gates
+    slot_gate = jnp.zeros((n_groups, e * cap), x.dtype)
+    slot_gate = jax.vmap(lambda sg, sl, gw: sg.at[sl].set(gw, mode="drop"))(
+        slot_gate, slot_safe, gate_p)
+    slot_to_token = jnp.where(slot_valid, slot_token, g_sz)     # sentinel drops
+    yflat = ye.reshape(n_groups, e * cap, d)
+    y = jax.vmap(lambda yf, sg, stt: jax.ops.segment_sum(
+        yf * sg[:, None], stt, g_sz + 1)[:g_sz])(
+            yflat, slot_gate, slot_to_token)
+
+    if cfg.n_shared_experts:
+        sp = lp["shared"]
+        g2 = jnp.einsum("gtd,df->gtf", xg, sp["w_gate"], preferred_element_type=jnp.float32)
+        u2 = jnp.einsum("gtd,df->gtf", xg, sp["w_up"], preferred_element_type=jnp.float32)
+        y = y + jnp.einsum("gtf,fd->gtd", (jax.nn.silu(g2) * u2).astype(x.dtype),
+                           sp["w_down"], preferred_element_type=jnp.float32).astype(x.dtype)
+    return y.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# forward / losses / steps
+# ---------------------------------------------------------------------------
+
+def _layer_stack_scan(cfg: LMConfig, params, x: Array, n_groups: int,
+                      remat: bool = True, constrain=None, with_cache: bool = False):
+    """Scan over (stacked) layers; llama4-style supers scan (dense, moe) pairs.
+
+    ``constrain`` (optional) re-annotates the residual carry each layer —
+    the launcher passes a Megatron-SP style constraint (batch over
+    (pod, data), sequence over model) so saved activations stay sharded.
+    ``with_cache``: also emit per-layer (k, v) for prefill.
+    """
+    con = (constrain or {}).get("residual", lambda t: t)
+    con_in = (constrain or {}).get("block_in", lambda t: t)
+    # ZeRO-3 semantics done right: re-annotate each layer's weight slices as
+    # gathered-over-data at point of use, so the partitioner streams one
+    # layer's bf16 weights instead of all-reducing fp32 activation partials
+    # (§Perf hillclimb C: 9.7 GB/layer -> 43 MB/layer for nemotron qkv).
+    con_w = (constrain or {}).get("weights", lambda lp: lp)
+
+    def attn_block(lp_attn, x):
+        lp_attn = con_w(lp_attn)
+        h = con_in(rms_norm(x, lp_attn["ln1"]))
+        o, k, v = _attention_train(cfg, lp_attn, h)
+        return x + o, k, v
+
+    if cfg.moe_every == 0:
+        def body(x, lp):
+            lp_attn, lp_ffn = lp
+            x, k, v = attn_block(lp_attn, x)
+            h = con_in(rms_norm(x, lp_attn["ln2"]))
+            return con(x + _dense_ffn(cfg, con_w(lp_ffn), h)), (k, v)
+        stack = (params["attn"], params["ffn"])
+    elif cfg.moe_every == 1:
+        def body(x, lp):
+            lp_attn, lp_moe = lp
+            x, k, v = attn_block(lp_attn, x)
+            h = con_in(rms_norm(x, lp_attn["ln2"]))
+            return con(x + _moe_ffn(cfg, lp_moe, h, n_groups)), (k, v)
+        stack = (params["attn"], params["moe"])
+    else:  # alternating super-layers: attn+dense, attn+moe
+        attn_d = jax.tree.map(lambda a: a[0::2], params["attn"])
+        attn_m = jax.tree.map(lambda a: a[1::2], params["attn"])
+        def body(x, lp):
+            (la_d, lf), (la_m, lm) = lp
+            x, k0, v0 = attn_block(la_d, x)
+            h = con_in(rms_norm(x, la_d["ln2"]))
+            x = con(x + _dense_ffn(cfg, con_w(lf), h))
+            x, k1, v1 = attn_block(la_m, x)
+            h = con_in(rms_norm(x, la_m["ln2"]))
+            return con(x + _moe_ffn(cfg, lm, h, n_groups)), \
+                (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+        stack = ((attn_d, params["ffn"]), (attn_m, params["moe"]))
+
+    fn = jax.checkpoint(body) if remat else body
+    x, kv = jax.lax.scan(lambda c, lp: fn(c, lp), con(x), stack,
+                         unroll=True if cfg.scan_unroll else 1)
+    if not with_cache:
+        return x, None
+    k, v = kv
+    if cfg.moe_every == 2:  # un-pair: [L/2, 2, ...] -> [L, ...]
+        k = k.reshape((cfg.n_layers,) + k.shape[2:])
+        v = v.reshape((cfg.n_layers,) + v.shape[2:])
+    return x, {"k": k, "v": v}
+
+
+def lm_forward(cfg: LMConfig, params, tokens: Array, n_groups: int = 1,
+               constrain=None) -> Array:
+    """tokens [B, S] -> final hidden [B, S, D]."""
+    x = params["embed"][tokens]
+    x, _ = _layer_stack_scan(cfg, params, x, n_groups, constrain=constrain)
+    return rms_norm(x, params["final_ln"])
+
+
+def lm_prefill(cfg: LMConfig, params, tokens: Array, n_groups: int = 1,
+               constrain=None):
+    """Prefill: last-position logits + the full KV cache [L, B, S, KV, Dh]."""
+    x = params["embed"][tokens]
+    x, cache = _layer_stack_scan(cfg, params, x, n_groups, remat=False,
+                                 constrain=constrain, with_cache=True)
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, cache
+
+
+def lm_loss(cfg: LMConfig, params, tokens: Array, labels: Array,
+            n_groups: int = 1, constrain=None) -> Array:
+    x = lm_forward(cfg, params, tokens, n_groups, constrain=constrain)
+    if cfg.vocab_chunk:
+        # chunked CE: never materializes [B, S, V] fp32 at once
+        n_chunks = max(1, x.shape[1] // cfg.vocab_chunk)
+        xs = x.reshape(x.shape[0], n_chunks, cfg.vocab_chunk, x.shape[-1])
+        ls = labels.reshape(labels.shape[0], n_chunks, cfg.vocab_chunk)
+        def step(c, inp):
+            xc, lc = inp
+            logits = jnp.einsum("bcd,dv->bcv", xc, params["lm_head"],
+                                preferred_element_type=jnp.float32)
+            return c + softmax_cross_entropy(logits, lc), None
+        tot, _ = jax.lax.scan(step, jnp.float32(0),
+                              (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(ls, 1, 0)),
+                              unroll=True if cfg.scan_unroll else 1)
+        return tot / n_chunks
+    con_l = (constrain or {}).get("logits", lambda t: t)
+    logits = con_l(jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                              preferred_element_type=jnp.float32))
+    return softmax_cross_entropy(logits, labels)
+
+
+# -- decode -----------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def lm_decode_step(cfg: LMConfig, params, cache, tokens: Array, pos: Array):
+    """One decode step. tokens [B, 1]; pos scalar int32 (current length).
+
+    Returns (logits [B, vocab], new_cache). O(S) per step — the whole cache
+    is read once; no quadratic term (this is why long_500k runs for
+    full-attention archs, DESIGN.md §4).
+    """
+    b = tokens.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    s_max = cache["k"].shape[2]
+    x = params["embed"][tokens[:, 0]]          # [B, D]
+
+    scale = 1.0 / math.sqrt(hd)
+    valid = (jnp.arange(s_max) <= pos)[None, :]  # [1, S]
+    posb = jnp.full((b,), pos)
+
+    def attn_step(x, lp, k_l, v_l):
+        """One decode attention block. k_l/v_l: [B, S, KV, Dh]."""
+        hn = rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bd,dhk->bhk", hn, lp["wq"], preferred_element_type=jnp.float32).astype(x.dtype)
+        kx = jnp.einsum("bd,dhk->bhk", hn, lp["wk"], preferred_element_type=jnp.float32).astype(x.dtype)
+        vx = jnp.einsum("bd,dhk->bhk", hn, lp["wv"], preferred_element_type=jnp.float32).astype(x.dtype)
+        q = _rope(q[:, None], posb[:, None], cfg.rope_theta)[:, 0]
+        kx = _rope(kx[:, None], posb[:, None], cfg.rope_theta)[:, 0]
+        k_l = jax.lax.dynamic_update_slice_in_dim(k_l, kx[:, None].astype(k_l.dtype),
+                                                  pos, axis=1)
+        v_l = jax.lax.dynamic_update_slice_in_dim(v_l, vx[:, None].astype(v_l.dtype),
+                                                  pos, axis=1)
+        qg = q.reshape(b, kv, g, hd)
+        sc = jnp.einsum("bkgh,bskh->bkgs", qg, k_l,
+                        preferred_element_type=jnp.float32) * scale
+        sc = jnp.where(valid[:, None, None], sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_l.dtype), v_l,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        o = o.reshape(b, h, hd)
+        x = x + jnp.einsum("bhk,hkd->bd", o, lp["wo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        return x, k_l, v_l
+
+    if cfg.moe_every == 0:
+        def body(x, inp):
+            lp, lf, k_l, v_l = inp
+            x, k_l, v_l = attn_step(x, lp, k_l, v_l)
+            x = x + _dense_ffn(cfg, lf, rms_norm(x, lp["ln2"]))
+            return x, (k_l, v_l)
+        xs = (params["attn"], params["ffn"], cache["k"], cache["v"])
+    elif cfg.moe_every == 1:
+        def body(x, inp):
+            lp, lm, k_l, v_l = inp
+            x, k_l, v_l = attn_step(x, lp, k_l, v_l)
+            x = x + _moe_ffn(cfg, lm, rms_norm(x, lp["ln2"])[:, None, :], 1)[:, 0]
+            return x, (k_l, v_l)
+        xs = (params["attn"], params["moe"], cache["k"], cache["v"])
+    else:
+        # super-layers of (dense, moe): pair up caches on a length-2 axis
+        n_sup = cfg.n_layers // 2
+        attn_d = jax.tree.map(lambda a: a[0::2], params["attn"])
+        attn_m = jax.tree.map(lambda a: a[1::2], params["attn"])
+        pair = lambda a: a.reshape((n_sup, 2) + a.shape[1:])
+        def body(x, inp):
+            (la_d, lf), (la_m, lm), k_p, v_p = inp
+            x, k0, v0 = attn_step(x, la_d, k_p[0], v_p[0])
+            x = x + _dense_ffn(cfg, lf, rms_norm(x, la_d["ln2"]))
+            x, k1, v1 = attn_step(x, la_m, k_p[1], v_p[1])
+            x = x + _moe_ffn(cfg, lm, rms_norm(x, la_m["ln2"])[:, None, :], 1)[:, 0]
+            return x, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+        xs = ((attn_d, params["ffn"]), (attn_m, params["moe"]),
+              pair(cache["k"]), pair(cache["v"]))
+
+    x, (new_k, new_v) = jax.lax.scan(body, x, xs,
+                                     unroll=True if cfg.scan_unroll else 1)
+    if cfg.moe_every == 2:
+        new_k = new_k.reshape((cfg.n_layers,) + new_k.shape[2:])
+        new_v = new_v.reshape((cfg.n_layers,) + new_v.shape[2:])
+
+    x = rms_norm(x, params["final_ln"])
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,14 @@
+"""Optimizer substrate (no optax dependency — built per assignment scope)."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, global_norm_clip
+from repro.optim.compress import compress_int8, decompress_int8, ef_compress_update
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "global_norm_clip",
+    "compress_int8",
+    "decompress_int8",
+    "ef_compress_update",
+]

@@ -1,0 +1,65 @@
+"""AdamW with fp32 state over (possibly bf16) params + global-norm clipping.
+
+ZeRO posture: the optimizer state pytree mirrors the param pytree, so
+whatever sharding the params carry, the state shards identically (the
+launcher passes the same PartitionSpecs). State is fp32 regardless of param
+dtype (bf16 params get a stochastic-free fp32 update then cast back).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jax.tree.map(f32, params), jax.tree.map(f32, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def global_norm_clip(grads, max_norm: float):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: float = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_norm: float = 1.0,
+):
+    grads, gnorm = global_norm_clip(grads, max_norm)
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    new_m = jax.tree.map(
+        lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state.m)
+    new_v = jax.tree.map(
+        lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        grads, state.v)
+    new_params = jax.tree.map(
+        lambda p, m, v: (p.astype(jnp.float32)
+                         - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                 + weight_decay * p.astype(jnp.float32))
+                         ).astype(p.dtype),
+        params, new_m, new_v)
+    return new_params, AdamWState(new_m, new_v, count), gnorm

@@ -1,0 +1,50 @@
+"""Gradient compression: int8 quantization with error feedback (1000-node trick).
+
+At multi-pod scale, cross-pod gradient all-reduce over DCI links dominates;
+int8 error-feedback compression cuts those bytes 4× with no asymptotic loss
+(the residual is fed back next step — Karimireddy et al., arXiv:1901.09847).
+The launcher applies this only on the `pod` axis reduction (cheap intra-pod
+ICI stays fp32); runtime tests validate convergence parity on a small model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(grads, residuals):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (compressed-and-decompressed grads, new residuals). The caller
+    all-reduces the (conceptually int8) payload; here we model the value
+    path exactly so convergence tests are faithful.
+    """
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = compress_int8(g32)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    out = jax.tree.map(one, grads, residuals)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_res
+
+
+def init_residuals(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

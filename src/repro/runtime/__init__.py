@@ -1,0 +1,11 @@
+"""Distributed runtime: checkpointing, fault tolerance, stragglers, elasticity."""
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault import (
+    FaultTolerantRunner,
+    StragglerBalancer,
+    reshard_state,
+)
+
+__all__ = ["CheckpointManager", "FaultTolerantRunner", "StragglerBalancer",
+           "reshard_state"]

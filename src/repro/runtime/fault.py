@@ -1,0 +1,126 @@
+"""Fault tolerance, straggler mitigation, elastic re-sharding.
+
+* :class:`FaultTolerantRunner` — step-level retry with checkpoint restore:
+  a failed step (simulated node failure, preemption, NaN blow-up) rolls the
+  state back to the last checkpoint and replays the data cursor
+  deterministically (the data pipeline is a pure function of (seed, step),
+  so replay is bit-identical).
+* :class:`StragglerBalancer` — deterministic re-balancing of edge blocks
+  across workers from measured per-block costs (the evolving-graph engine's
+  work is edge-volume proportional, so cost-weighted longest-processing-time
+  assignment fixes persistent stragglers; transient stragglers are absorbed
+  by the batched executor's synchronous collectives).
+* :func:`reshard_state` — elastic scaling: map a checkpointed state onto a
+  smaller/larger data axis (params replicate; batch-linked leaves re-slice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+class StepFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FaultTolerantRunner:
+    ckpt: CheckpointManager
+    ckpt_every: int = 5
+    max_retries: int = 3
+
+    def run(self, state: dict, step_fn: Callable[[dict, int], dict],
+            n_steps: int, start_step: int = 0,
+            fail_at: set[int] | None = None) -> tuple[dict, list[int]]:
+        """Run ``n_steps``; ``fail_at`` injects failures (for drills/tests).
+
+        Returns (final state, list of steps that were retried/replayed).
+        """
+        fail_at = set(fail_at or ())
+        replayed: list[int] = []
+        step = start_step
+        retries = 0
+        while step < n_steps:
+            try:
+                if step in fail_at:
+                    fail_at.discard(step)  # fail once, then heal
+                    raise StepFailure(f"injected node failure at step {step}")
+                state = step_fn(state, step)
+                step += 1
+                retries = 0
+                if step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+            except StepFailure:
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                restored = self.ckpt.restore_latest()
+                restore_step = self.ckpt.latest_step() or start_step
+                if restored is not None:
+                    state = restored
+                # deterministic replay from the checkpointed cursor
+                replayed.extend(range(restore_step, step + 1))
+                step = restore_step
+        return state, replayed
+
+
+class StragglerBalancer:
+    """Cost-weighted LPT assignment of work blocks to workers."""
+
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self._costs: dict[int, float] = {}
+
+    def observe(self, block_id: int, seconds: float, ema: float = 0.5):
+        prev = self._costs.get(block_id)
+        self._costs[block_id] = seconds if prev is None else \
+            ema * seconds + (1 - ema) * prev
+
+    def assign(self, block_ids: list[int]) -> dict[int, list[int]]:
+        """Longest-processing-time-first over observed costs (1.0 default)."""
+        loads = [0.0] * self.n_workers
+        out: dict[int, list[int]] = {w: [] for w in range(self.n_workers)}
+        for b in sorted(block_ids, key=lambda b: -self._costs.get(b, 1.0)):
+            w = int(np.argmin(loads))
+            out[w].append(b)
+            loads[w] += self._costs.get(b, 1.0)
+        return out
+
+    def imbalance(self, assignment: dict[int, list[int]]) -> float:
+        loads = [sum(self._costs.get(b, 1.0) for b in bs)
+                 for bs in assignment.values()]
+        return max(loads) / max(min(loads), 1e-9)
+
+
+def reshard_state(state: dict, old_data: int, new_data: int,
+                  batch_linked: tuple[str, ...] = ()) -> dict:
+    """Elastic re-shard: adapt a host-side checkpoint to a new data-axis size.
+
+    Model/optimizer leaves are data-parallel replicas — they carry over
+    unchanged. Leaves named in ``batch_linked`` have a leading global-batch
+    dim tied to the data axis; they re-slice (shrink) or tile (grow) so the
+    per-shard batch stays constant. The data cursor is preserved —
+    determinism comes from (seed, step), not from worker count.
+    """
+    if new_data == old_data:
+        return state
+    out = {}
+    for k, v in state.items():
+        if k in batch_linked and hasattr(v, "shape") and v.ndim >= 1:
+            b = v.shape[0]
+            per = b // old_data
+            if new_data < old_data:
+                out[k] = v[: per * new_data]
+            else:
+                reps = [new_data // old_data] + [1] * (v.ndim - 1)
+                out[k] = np.tile(v, reps)[: per * new_data]
+        else:
+            out[k] = v
+    return out

@@ -1,0 +1,126 @@
+"""CommonGraph core: KS/DH/DHB/WS equivalence, TG plan properties, Table-1 sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SnapshotStore,
+    bisection_plan,
+    direct_hop_plan,
+    optimal_plan,
+    plan_added_edges,
+    run_direct_hop,
+    run_direct_hop_batched,
+    run_kickstarter_stream,
+    run_plan,
+)
+from repro.graph import make_evolving_sequence, run_to_fixpoint
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+@pytest.fixture(scope="module")
+def store():
+    seq = make_evolving_sequence(400, 3000, 6, 200, seed=7)
+    return SnapshotStore(seq, granule=256)
+
+
+@pytest.mark.parametrize("alg", list(ALL_SEMIRINGS))
+def test_all_modes_match_scratch(store, alg):
+    sr = ALL_SEMIRINGS[alg]
+    n_snap = store.seq.num_snapshots
+    scratch = [run_to_fixpoint(store.snapshot_view(i), sr, 0).values
+               for i in range(n_snap)]
+    ks, _ = run_kickstarter_stream(store, sr, 0)
+    dh = run_direct_hop(store, sr, 0)
+    dhb = run_direct_hop_batched(store, sr, 0)
+    ws = run_plan(store, optimal_plan(store), sr, 0)
+    for i in range(n_snap):
+        for label, got in (("ks", ks[i]), ("dh", dh.results[i]),
+                           ("dhb", dhb.results[i]), ("ws", ws.results[i])):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(scratch[i]),
+                                       rtol=1e-6, err_msg=f"{label}/{alg}/{i}")
+
+
+def test_window_nesting(store):
+    """Wider windows give subgraphs: |T(i,j)| decreasing in window width."""
+    n = store.seq.num_snapshots
+    for i in range(n):
+        for j in range(i, n - 1):
+            assert store.window_size(i, j + 1) <= store.window_size(i, j)
+            inner = store.window_keys(i, j)
+            outer = store.window_keys(i, j + 1)
+            assert np.intersect1d(outer, inner).size == outer.size  # ⊆
+
+
+def test_plan_leaves_cover_all_snapshots(store):
+    n = store.seq.num_snapshots
+    for plan in (optimal_plan(store), bisection_plan(n=n), direct_hop_plan(n=n)):
+        leaves = sorted(w[0] for w in plan.leaves())
+        assert leaves == list(range(n))
+
+
+def test_optimal_plan_dominates(store):
+    n = store.seq.num_snapshots
+    opt = plan_added_edges(store, optimal_plan(store))
+    bis = plan_added_edges(store, bisection_plan(n=n))
+    dh = plan_added_edges(store, direct_hop_plan(n=n))
+    assert opt <= bis <= dh or opt <= dh  # optimal never loses
+
+
+def test_delta_volume_identity(store):
+    """|Δ(parent→child)| == |T(child)| − |T(parent)| (nested windows)."""
+    for parent, child in (((0, 5), (0, 2)), ((0, 5), (3, 5)), ((0, 2), (1, 1))):
+        dk = store.delta_keys(parent, child)
+        assert dk.shape[0] == (store.window_size(*child)
+                               - store.window_size(*parent))
+
+
+def test_kickstarter_taints_on_parent_deletion(store):
+    """Trim must fire when a dependence parent edge is deleted."""
+    _, stats = run_kickstarter_stream(store, ALL_SEMIRINGS["sssp"], 0)
+    assert any(s.tainted > 0 for s in stats[1:])  # deletions hit used edges
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_ws_exact_on_random_sequences(seed):
+    seq = make_evolving_sequence(150, 900, 4, 80, seed=seed)
+    store = SnapshotStore(seq, granule=128)
+    sr = ALL_SEMIRINGS["sswp"]
+    ws = run_plan(store, optimal_plan(store), sr, 0)
+    for i in range(4):
+        ref = run_to_fixpoint(store.snapshot_view(i), sr, 0).values
+        np.testing.assert_allclose(np.asarray(ws.results[i]), np.asarray(ref),
+                                   rtol=1e-6)
+
+
+def test_sliding_window_hop(store):
+    """Sliding [0..3] -> [1..4]: hop from the global apex state, exactness.
+
+    The old window apex is NOT a valid warm start (T(0,3) ⊄ T(1,4)); the
+    global CG is (it is a subgraph of every window's CG).
+    """
+    from repro.graph import EdgeView, incremental_additions
+    sr = ALL_SEMIRINGS["sssp"]
+    old_keys = store.window_keys(0, 3)
+    new_keys = store.window_keys(1, 4)
+    # demonstrate the subtlety the implementation guards against:
+    assert np.setdiff1d(old_keys, new_keys).size > 0  # old apex ⊄ new apex
+    apex = store.common_graph_view()
+    base = run_to_fixpoint(apex, sr, 0)
+    delta = store.slide_block((1, 4))
+    view = apex.extended(delta)
+    hop = incremental_additions(view, delta, sr, base.values, base.parent)
+    # reference: from-scratch on the new window's CG
+    ref = run_to_fixpoint(
+        EdgeView((store.window_block(1, 4),), store.num_nodes), sr, 0)
+    np.testing.assert_allclose(np.asarray(hop.values), np.asarray(ref.values),
+                               rtol=1e-6)
+
+
+def test_slide_block_rejects_non_nested():
+    seq = make_evolving_sequence(100, 600, 5, 40, seed=21)
+    s = SnapshotStore(seq, granule=64)
+    with pytest.raises(ValueError):
+        s.slide_block((1, 4), anchor=(2, 3))  # anchor not a super-window

@@ -1,0 +1,145 @@
+"""Per-architecture reduced-config smoke tests (assignment deliverable f)
+plus model-level equivalence checks (prefill/decode/chunked paths, MoE oracle)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch, reduced_config
+from repro.data import DataCursor, dien_batch, gnn_full_batch, lm_batch
+from repro.launch.train import _graphcastify
+from repro.models.dien import dien_loss, dien_score_candidates, init_dien_params
+from repro.models.gnn import gnn_forward, gnn_loss, init_gnn_params
+from repro.models.transformer import (
+    init_kv_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)
+
+LM_ARCHS = [a for a in ARCH_IDS if get_arch(a)[1] == "lm"]
+GNN_ARCHS = [a for a in ARCH_IDS if get_arch(a)[1] == "gnn"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_arch_smoke(arch):
+    """One forward/train step on CPU: output shapes + no NaNs (reduced config)."""
+    cfg, _ = reduced_config(arch)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    batch = lm_batch(DataCursor(0, 0), 2, 32, cfg.vocab)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(cfg, p, batch["tokens"], batch["labels"]))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    logits, cache = lm_prefill(cfg, params, batch["tokens"])
+    assert logits.shape == (2, cfg.vocab)
+    assert cache["k"].shape == (cfg.n_layers, 2, 32, cfg.n_kv_heads, cfg.head_dim)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_decode_matches_forward(arch):
+    cfg, _ = reduced_config(arch)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 9), 0, cfg.vocab)
+    _, pc = lm_prefill(cfg, params, toks[:, :8])
+    cache = init_kv_cache(cfg, 1, 16, dtype=jnp.float32)
+    cache = {k: cache[k].at[:, :, :8].set(pc[k].astype(jnp.float32))
+             for k in ("k", "v")}
+    logits, _ = lm_decode_step(cfg, params, cache, toks[:, 8:9], jnp.int32(8))
+    x = lm_forward(cfg, params, toks)
+    ref = jnp.einsum("d,dv->v", x[0, -1], params["lm_head"])
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_chunked_paths_equal_unchunked():
+    base = reduced_config("stablelm-1.6b")[0]
+    p = init_lm_params(jax.random.PRNGKey(0), base)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, base.vocab)
+    ref = lm_loss(base, p, toks, toks)
+    for kw in ({"attn_chunk": 8}, {"vocab_chunk": 8},
+               {"attn_chunk": 16, "vocab_chunk": 16}):
+        cfg = dataclasses.replace(base, **kw)
+        np.testing.assert_allclose(float(lm_loss(cfg, p, toks, toks)),
+                                   float(ref), rtol=3e-5)
+
+
+def test_scan_unroll_is_equivalent():
+    base = reduced_config("qwen3-moe-30b-a3b")[0]
+    p = init_lm_params(jax.random.PRNGKey(0), base)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, base.vocab)
+    a = lm_loss(base, p, toks, toks)
+    b = lm_loss(dataclasses.replace(base, scan_unroll=True), p, toks, toks)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_arch_smoke(arch):
+    cfg, _ = reduced_config(arch)
+    n, e = 48, 200
+    cfg = dataclasses.replace(
+        cfg, d_in=12, d_out=5,
+        task="node_class" if cfg.arch in ("gcn", "pna") else "node_reg",
+        n_vars=6 if cfg.arch == "graphcast" else cfg.n_vars)
+    if cfg.arch == "graphcast":
+        cfg = dataclasses.replace(cfg, d_in=6, d_out=6)
+    params = init_gnn_params(jax.random.PRNGKey(0), cfg)
+    cur = DataCursor(0, 0)
+    batch = gnn_full_batch(cur, n, e, cfg.d_in, cfg.d_out, cfg.task)
+    if cfg.arch == "graphcast":
+        batch = _graphcastify(batch, n, e, cfg, cur)
+    loss, grads = jax.value_and_grad(lambda p: gnn_loss(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    out = gnn_forward(cfg, params, batch)
+    exp_rows = n
+    assert out.shape == (exp_rows, cfg.n_vars if cfg.arch == "graphcast" else cfg.d_out)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_gnn_padding_edges_are_inert():
+    """Edges with dst == n must not change any real node's output."""
+    cfg, _ = reduced_config("gcn-cora")
+    cfg = dataclasses.replace(cfg, d_in=8, d_out=3, task="node_class")
+    params = init_gnn_params(jax.random.PRNGKey(0), cfg)
+    n, e = 32, 100
+    b = gnn_full_batch(DataCursor(0, 0), n, e, 8, 3, "node_class")
+    out1 = gnn_forward(cfg, params, b)
+    b2 = dict(b)
+    b2["src"] = jnp.concatenate([b["src"], jnp.zeros((16,), jnp.int32)])
+    b2["dst"] = jnp.concatenate([b["dst"], jnp.full((16,), n, jnp.int32)])
+    out2 = gnn_forward(cfg, params, b2)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+def test_dien_smoke_and_retrieval_consistency():
+    cfg, _ = reduced_config("dien")
+    params = init_dien_params(jax.random.PRNGKey(0), cfg)
+    batch = dien_batch(DataCursor(0, 0), 8, cfg.seq_len, cfg.n_items, cfg.n_cats)
+    loss = dien_loss(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    # retrieval scoring == pointwise forward margin for the same candidate
+    from repro.models.dien import dien_forward
+    one = {k: v[:1] for k, v in batch.items()}
+    cand = {"hist_items": one["hist_items"], "hist_cats": one["hist_cats"],
+            "hist_mask": one["hist_mask"],
+            "cand_items": one["target_item"], "cand_cats": one["target_cat"]}
+    scores = dien_score_candidates(cfg, params, cand)
+    logits, *_ = dien_forward(cfg, params, one)
+    np.testing.assert_allclose(float(scores[0]),
+                               float(logits[0, 1] - logits[0, 0]), rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_registry_resolves(arch):
+    cfg, family = get_arch(arch)
+    assert family in ("lm", "gnn", "recsys")
+    rcfg, _ = reduced_config(arch)
+    assert rcfg.name == cfg.name

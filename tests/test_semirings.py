@@ -1,0 +1,107 @@
+"""Semiring algebra + fixpoint vs a pure-python oracle (unit + property)."""
+
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import EdgeView, run_to_fixpoint
+from repro.graph.edgeset import make_block
+from repro.graph.semiring import ALL_SEMIRINGS, BFS, SSSP, SSWP, SSNP, VITERBI
+
+
+def dijkstra_like(n, edges, sr, source):
+    """Generic best-path oracle over a monotone semiring (heap order by reduce)."""
+    sign = 1.0 if sr.is_min else -1.0
+    dist = {v: sr.identity for v in range(n)}
+    dist[source] = sr.source_value
+    heap = [(sign * sr.source_value, source)]
+    adj = {}
+    for (u, v, w) in edges:
+        adj.setdefault(u, []).append((v, w))
+    seen = set()
+    while heap:
+        d, u = heapq.heappop(heap)
+        if u in seen:
+            continue
+        seen.add(u)
+        for v, w in adj.get(u, []):
+            cand = float(sr.combine(jnp.float32(dist[u]), jnp.float32(w)))
+            if (cand < dist[v]) if sr.is_min else (cand > dist[v]):
+                dist[v] = cand
+                heapq.heappush(heap, (sign * cand, v))
+    return np.array([dist[v] for v in range(n)], np.float32)
+
+
+@st.composite
+def small_graph(draw):
+    n = draw(st.integers(4, 24))
+    m = draw(st.integers(1, 60))
+    edges = []
+    for _ in range(m):
+        u = draw(st.integers(0, n - 1))
+        v = draw(st.integers(0, n - 1))
+        if u != v:
+            w = draw(st.floats(0.0625, 1.0, allow_nan=False, width=32))
+            edges.append((u, v, round(w, 3)))
+    return n, list(dict.fromkeys(edges))
+
+
+@pytest.mark.parametrize("alg", list(ALL_SEMIRINGS))
+@given(g=small_graph())
+@settings(max_examples=15, deadline=None)
+def test_fixpoint_matches_oracle(alg, g):
+    n, edges = g
+    sr = ALL_SEMIRINGS[alg]
+    if not edges:
+        return
+    src = np.array([e[0] for e in edges], np.int32)
+    dst = np.array([e[1] for e in edges], np.int32)
+    w = np.array([e[2] for e in edges], np.float32)
+    blk = make_block(src, dst, w, n, granule=16)
+    res = run_to_fixpoint(EdgeView((blk,), n), sr, 0)
+    ref = dijkstra_like(n, edges, sr, 0)
+    got = np.asarray(res.values)
+    fin = np.isfinite(ref)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-5)
+
+
+def test_semiring_identities():
+    # combine(identity, w) must be absorbing (never better than identity)
+    for sr in ALL_SEMIRINGS.values():
+        out = sr.combine(jnp.float32(sr.identity), jnp.float32(0.5))
+        assert not bool(sr.strictly_better(out, jnp.float32(sr.identity))), sr.name
+
+
+def test_source_anchoring_is_extremal():
+    # source_value must already be the best possible value
+    for sr in ALL_SEMIRINGS.values():
+        w = jnp.float32(0.5)
+        via = sr.combine(jnp.float32(sr.source_value), w)
+        assert not bool(sr.strictly_better(via, jnp.float32(sr.source_value))), sr.name
+
+
+def test_parent_forest_is_consistent():
+    n, e = 200, 1200
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = (rng.random(src.shape[0]).astype(np.float32) + 0.05)
+    blk = make_block(src, dst, w, n, granule=256)
+    res = run_to_fixpoint(EdgeView((blk,), n), SSSP, 0)
+    vals = np.asarray(res.values)
+    par = np.asarray(res.parent)
+    emap = {}
+    for s, d, ww in zip(src, dst, w):
+        emap[(int(s), int(d))] = min(emap.get((int(s), int(d)), np.inf), float(ww))
+    for v in range(n):
+        if par[v] >= 0:
+            assert np.isfinite(vals[v])
+            assert (par[v], v) in emap
+            np.testing.assert_allclose(vals[v], vals[par[v]] + emap[(par[v], v)],
+                                       rtol=1e-5)
