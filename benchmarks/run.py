@@ -49,9 +49,16 @@ def bench_tg_sharing(full: bool):
     from benchmarks.tg_sharing import run_tg_sharing
     rows = run_tg_sharing(n=10_000, e=100_000, batch_changes=4_000,
                           windows=(4, 8, 16) if not full else (4, 8, 16, 32))
-    return [(f"tg_sharing/window{r['window']}", 0.0,
-             f"dh={r['dh_edges']} opt={r['optimal_edges']} "
-             f"saving={r['optimal_saving']:.1%}") for r in rows]
+    out = []
+    for r in rows:
+        out.append((f"tg_sharing/window{r['window']}",
+                    r["optimal_bat_s"] * 1e6,
+                    f"dh={r['dh_edges']} opt={r['optimal_edges']} "
+                    f"saving={r['optimal_saving']:.1%} "
+                    f"batched-speedup dh={r['dh_bat_speedup']:.2f}x "
+                    f"bisect={r['bisect_bat_speedup']:.2f}x "
+                    f"opt={r['optimal_bat_speedup']:.2f}x"))
+    return out
 
 
 def bench_kernels(full: bool):

@@ -1,9 +1,17 @@
-"""Paper §2 work sharing: Δ-edge volume of TG plans vs Direct-Hop.
+"""Paper §2 work sharing: TG plans vs Direct-Hop — Δ-edge volume AND wall-clock.
 
-The Triangular Grid's value is the drop in total streamed addition volume;
-this benchmark accounts it exactly (plan_added_edges) for the star plan
-(Direct-Hop), balanced bisection, and the DP-optimal plan, across window
-sizes — the scaling the paper's Figure/TG section argues.
+Two accounts per window size, for all three plans (star/Direct-Hop, balanced
+bisection, DP-optimal):
+
+* Δ-edge volume streamed by the plan (plan_added_edges) — the scaling the
+  paper's TG section argues.
+* Executed wall-clock + engine edge work, sequential DFS (`run_plan`) vs the
+  level-synchronous batched executor (`run_plan_batched`) — the paper's
+  parallelism claim as a measurable hot path. Both executors are warmed up
+  once so compile time is excluded; the batched column should win for
+  windows ≥ 8 (fewer, fatter launches; no per-hop host sync).
+
+    PYTHONPATH=src python -m benchmarks.tg_sharing
 """
 
 from __future__ import annotations
@@ -14,22 +22,50 @@ from repro.core import (
     direct_hop_plan,
     optimal_plan,
     plan_added_edges,
+    run_plan,
+    run_plan_batched,
 )
 from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
 
 
-def run_tg_sharing(n=20_000, e=200_000, batch_changes=10_000,
-                   windows=(4, 8, 16), seed=0):
+def _executed(store, plan, sr, source):
+    """(sequential, batched) timed runs, each after a warm-up for compiles."""
+    run_plan(store, plan, sr, source)
+    seq_run = run_plan(store, plan, sr, source)
+    run_plan_batched(store, plan, sr, source)
+    bat_run = run_plan_batched(store, plan, sr, source)
+    return seq_run, bat_run
+
+
+def run_tg_sharing(n=10_000, e=100_000, batch_changes=5_000,
+                   windows=(4, 8, 16), seed=0, execute=True, alg="sssp",
+                   source=0):
+    sr = ALL_SEMIRINGS[alg]
     rows = []
     for w in windows:
         seq = make_evolving_sequence(n, e, w, batch_changes, seed=seed)
         store = SnapshotStore(seq)
-        dh = plan_added_edges(store, direct_hop_plan(n=w))
-        bis = plan_added_edges(store, bisection_plan(n=w))
-        opt = plan_added_edges(store, optimal_plan(store))
-        rows.append({"window": w, "dh_edges": dh, "bisect_edges": bis,
-                     "optimal_edges": opt,
-                     "bisect_saving": 1 - bis / dh, "optimal_saving": 1 - opt / dh})
+        plans = {"dh": direct_hop_plan(n=w), "bisect": bisection_plan(n=w),
+                 "optimal": optimal_plan(store)}
+        dh, bis, opt = (plan_added_edges(store, plans[k])
+                        for k in ("dh", "bisect", "optimal"))
+        row = {"window": w, "dh_edges": dh, "bisect_edges": bis,
+               "optimal_edges": opt,
+               "bisect_saving": 1 - bis / dh, "optimal_saving": 1 - opt / dh}
+        if execute:
+            for name, plan in plans.items():
+                seq_run, bat_run = _executed(store, plan, sr, source)
+                row[f"{name}_seq_s"] = seq_run.wall_s
+                row[f"{name}_bat_s"] = bat_run.wall_s
+                row[f"{name}_bat_speedup"] = seq_run.wall_s / bat_run.wall_s
+                row[f"{name}_work"] = (seq_run.base_stats.edge_work
+                                       + sum(h.edge_work
+                                             for h in seq_run.hop_stats))
+                row[f"{name}_bat_work"] = (bat_run.base_stats.edge_work
+                                           + sum(h.edge_work
+                                                 for h in bat_run.hop_stats))
+        rows.append(row)
     return rows
 
 
@@ -38,3 +74,10 @@ if __name__ == "__main__":
         print(f"n={r['window']:3d}  DH {r['dh_edges']:>10,}  "
               f"bisect {r['bisect_edges']:>10,} (-{r['bisect_saving']:.1%})  "
               f"optimal {r['optimal_edges']:>10,} (-{r['optimal_saving']:.1%})")
+        if "dh_seq_s" in r:
+            for name in ("dh", "bisect", "optimal"):
+                print(f"      {name:8s} seq {r[f'{name}_seq_s']:.3f}s  "
+                      f"batched {r[f'{name}_bat_s']:.3f}s  "
+                      f"({r[f'{name}_bat_speedup']:.2f}x, "
+                      f"work {r[f'{name}_work']:,.0f} vs "
+                      f"{r[f'{name}_bat_work']:,.0f})")

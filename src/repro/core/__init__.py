@@ -17,7 +17,9 @@ from repro.core.trigrid import (
     direct_hop_plan,
     optimal_plan,
     plan_added_edges,
+    plan_levels,
     run_plan,
+    run_plan_batched,
 )
 
 __all__ = [
@@ -33,5 +35,7 @@ __all__ = [
     "direct_hop_plan",
     "optimal_plan",
     "plan_added_edges",
+    "plan_levels",
     "run_plan",
+    "run_plan_batched",
 ]

@@ -13,16 +13,11 @@ import dataclasses
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
-from repro.graph.edgeset import EdgeBlock, EdgeView, keys_to_edges, make_block
-from repro.graph.engine import (
-    incremental_additions,
-    incremental_additions_batched,
-    run_to_fixpoint,
-)
+from repro.core.trigrid import direct_hop_plan, run_plan_batched
+from repro.graph.engine import incremental_additions, run_to_fixpoint
 from repro.graph.semiring import Semiring
 
 
@@ -83,45 +78,27 @@ def run_direct_hop_batched(
     semiring: Semiring,
     source: int,
     max_iters: int = 10_000,
+    gated: bool = False,
+    cg_split: int = 1,
+    track_parents: bool = False,
+    mesh=None,
 ) -> DirectHopRun:
     """Batched Direct-Hop: all snapshot hops as ONE stacked computation.
 
     This is the paper's "additional opportunities for parallelism": with the
     sequential dependence gone, the per-snapshot Δ batches are stacked on a
-    snapshot axis (padded to a common size) and the incremental fixpoint is
-    vmapped — on a mesh this axis shards over `data` (launch/evolve.py).
+    snapshot axis and the incremental fixpoint is vmapped — on a mesh this
+    axis shards over `data` (launch/evolve.py).
+
+    Implemented as the degenerate star-plan case of the level-synchronous TG
+    executor (one level, one lane per snapshot), so it honors the same
+    ``gated``/``cg_split``/``track_parents`` options as ``run_direct_hop``
+    (``gated`` stays exact but lowers to a select under vmap — no block-skip
+    speedup on the batched path; see ``run_plan_batched``).
     """
-    t_all = time.perf_counter()
-    n = store.num_nodes
     n_snap = store.seq.num_snapshots
-    window = (0, n_snap - 1)
-
-    t0 = time.perf_counter()
-    cg_view = store.common_graph_view(*window)
-    base = run_to_fixpoint(cg_view, semiring, source, max_iters)
-    base.values.block_until_ready()
-    base_stats = StreamStats(time.perf_counter() - t0, float(base.edge_work),
-                             int(base.iterations))
-
-    t0 = time.perf_counter()
-    deltas = [store.delta_keys(window, (i, i)) for i in range(n_snap)]
-    e_max = max(int(d.shape[0]) for d in deltas)
-    srcs, dsts, ws = [], [], []
-    for dk in deltas:
-        s, d = keys_to_edges(dk, n)
-        w = store.seq.weights_for(dk)
-        blk = make_block(s, d, w, n, granule=max(e_max, 1), pad_pow2=False)
-        srcs.append(blk.src); dsts.append(blk.dst); ws.append(blk.w)
-    stacked = EdgeBlock(jnp.stack(srcs), jnp.stack(dsts), jnp.stack(ws))
-
-    values = jnp.broadcast_to(base.values, (n_snap, n))
-    parent = jnp.broadcast_to(base.parent, (n_snap, n))
-    res = incremental_additions_batched(
-        n, semiring, values, parent,
-        shared_blocks=tuple(cg_view.blocks), delta_blocks=(stacked,),
-        max_iters=max_iters, track_parents=False)
-    res.values.block_until_ready()
-    hop = StreamStats(time.perf_counter() - t0, float(jnp.sum(res.edge_work)),
-                      int(jnp.max(res.iterations)))
-    results = [res.values[i] for i in range(n_snap)]
-    return DirectHopRun(results, base_stats, [hop], time.perf_counter() - t_all)
+    ws = run_plan_batched(store, direct_hop_plan(n=n_snap), semiring, source,
+                          max_iters, gated=gated, cg_split=cg_split,
+                          track_parents=track_parents, mesh=mesh)
+    return DirectHopRun([ws.results[i] for i in range(n_snap)],
+                        ws.base_stats, ws.hop_stats, ws.wall_s)

@@ -27,14 +27,12 @@ import dataclasses
 import functools
 import math
 import time
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.snapshots import SnapshotStore
-from repro.graph.edgeset import EdgeBlock, EdgeView, keys_to_edges, make_block
+from repro.graph.edgeset import EdgeBlock, keys_to_edges, make_block, pad_edges
 from repro.graph.engine import (
     NO_PARENT,
     FixpointResult,
@@ -139,10 +137,10 @@ def run_kickstarter_stream(
         add_block = store.addition_block(t)
         dk = store.deletion_keys(t)
         ds, dd = keys_to_edges(dk, n)
-        # pad deletions to the store granule (sentinel dst)
-        dpad = store.granule - (ds.shape[0] % store.granule or store.granule)
-        ds = np.concatenate([ds, np.zeros(dpad, np.int32)])
-        dd = np.concatenate([dd, np.full(dpad, n, np.int32)])
+        # Bucket-pad deletions exactly like edge blocks (honoring pad_pow2),
+        # so varying deletion-batch sizes can't drive unbounded jit traces.
+        ds, dd, _ = pad_edges(ds, dd, None, n, granule=store.granule,
+                              pad_pow2=store.pad_pow2)
 
         res, tainted = _trim_and_reconverge(
             semiring, n, max_iters, values, parent,

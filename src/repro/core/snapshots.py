@@ -19,7 +19,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.graph.edgeset import EdgeBlock, EdgeView, keys_to_edges, make_block
+from repro.graph.edgeset import (
+    EdgeBlock,
+    EdgeView,
+    keys_to_edges,
+    make_block,
+    stack_delta_blocks,
+)
 from repro.graph.generators import EvolvingSequence
 
 
@@ -93,6 +99,29 @@ class SnapshotStore:
     def delta_block(self, parent: tuple[int, int], child: tuple[int, int]) -> EdgeBlock:
         return self.block_for_keys(self.delta_keys(parent, child),
                                    ("D", parent, child))
+
+    def delta_stack(
+        self, hops: "list[tuple[tuple[int, int], tuple[int, int]]]"
+    ) -> EdgeBlock:
+        """Stacked Δ-batches for several parent→child hops (one lane per hop).
+
+        The lanes of one plan level are independent sibling hops; stacking
+        them (shape-bucketed, see ``stack_delta_blocks``) turns the level
+        into a single snapshot-axis launch of the batched engine. Cached by
+        the hop list so re-running a plan rebuilds nothing.
+        """
+        tag = ("DS",) + tuple(hops)
+        if tag in self._blocks:
+            return self._blocks[tag]
+        lanes = []
+        for parent, child in hops:
+            keys = self.delta_keys(parent, child)
+            s, d = keys_to_edges(keys, self.num_nodes)
+            lanes.append((s, d, self.seq.weights_for(keys)))
+        blk = stack_delta_blocks(lanes, self.num_nodes, granule=self.granule,
+                                 pad_pow2=self.pad_pow2)
+        self._blocks[tag] = blk
+        return blk
 
     def snapshot_view(self, i: int) -> EdgeView:
         """Standalone single-block view of S_i (used by from-scratch baselines)."""

@@ -28,14 +28,20 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
-from repro.graph.edgeset import EdgeView
-from repro.graph.engine import incremental_additions, run_to_fixpoint
+from repro.graph.edgeset import EdgeBlock, EdgeView
+from repro.graph.engine import (
+    incremental_additions,
+    incremental_additions_batched,
+    run_to_fixpoint,
+)
 from repro.graph.semiring import Semiring
 
 Window = tuple[int, int]
@@ -131,6 +137,20 @@ class WorkSharingRun:
     added_edges: int
 
 
+def _apex_base(store, plan, semiring, source, max_iters, gated, cg_split,
+               track_parents):
+    """Apex fixpoint shared by both executors: (view, result, stats)."""
+    t0 = time.perf_counter()
+    apex_view = (store.window_view_split(*plan.window, cg_split) if cg_split > 1
+                 else store.common_graph_view(*plan.window))
+    base = run_to_fixpoint(apex_view, semiring, source, max_iters, gated=gated,
+                           track_parents=track_parents)
+    base.values.block_until_ready()
+    base_stats = StreamStats(time.perf_counter() - t0, float(base.edge_work),
+                             int(base.iterations))
+    return apex_view, base, base_stats
+
+
 def run_plan(
     store: SnapshotStore,
     plan: PlanNode,
@@ -143,14 +163,9 @@ def run_plan(
 ) -> WorkSharingRun:
     """Execute a TG plan (DFS; each hop = addition-only incremental update)."""
     t_all = time.perf_counter()
-    t0 = time.perf_counter()
-    apex_view = (store.window_view_split(*plan.window, cg_split) if cg_split > 1
-                 else store.common_graph_view(*plan.window))
-    base = run_to_fixpoint(apex_view, semiring, source, max_iters, gated=gated,
-                           track_parents=track_parents)
-    base.values.block_until_ready()
-    base_stats = StreamStats(time.perf_counter() - t0, float(base.edge_work),
-                             int(base.iterations))
+    apex_view, base, base_stats = _apex_base(
+        store, plan, semiring, source, max_iters, gated, cg_split,
+        track_parents)
 
     results: dict[int, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
@@ -173,6 +188,131 @@ def run_plan(
             dfs(child, child_view, res.values, res.parent)
 
     dfs(plan, apex_view, base.values, base.parent)
+    return WorkSharingRun(results, base_stats, hop_stats,
+                          time.perf_counter() - t_all,
+                          plan_added_edges(store, plan))
+
+
+def plan_levels(plan: PlanNode) -> list[list[tuple[int, PlanNode]]]:
+    """Group plan nodes by depth: level d = [(parent lane index, node), ...].
+
+    The parent lane index points into level d−1 (the apex is the single lane
+    of level −1). All nodes at one depth are independent given their parents'
+    states — the invariant the level-synchronous executor batches on.
+    """
+    levels: list[list[tuple[int, PlanNode]]] = []
+    cur = [plan]
+    while True:
+        nxt = [(pi, c) for pi, node in enumerate(cur) for c in node.children]
+        if not nxt:
+            return levels
+        levels.append(nxt)
+        cur = [c for _, c in nxt]
+
+
+def _shard_snapshot_axis(mesh, values, parent, blocks):
+    """Place the lane (snapshot) axis over the mesh's ``data`` axis.
+
+    Returns (values, parent, blocks, sharded): a level whose lane count does
+    not divide the device count stays replicated (sharded=False) — the
+    caller surfaces that so "--shard" can't silently mean "replicated".
+    """
+    if mesh is None or values.shape[0] % mesh.shape["data"]:
+        return values, parent, blocks, False
+    row = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    values = jax.device_put(values, row)
+    parent = jax.device_put(parent, row)
+    blocks = tuple(EdgeBlock(*(jax.device_put(a, row) for a in b))
+                   for b in blocks)
+    return values, parent, blocks, True
+
+
+def run_plan_batched(
+    store: SnapshotStore,
+    plan: PlanNode,
+    semiring: Semiring,
+    source: int,
+    max_iters: int = 10_000,
+    gated: bool = False,
+    cg_split: int = 1,
+    track_parents: bool = False,
+    mesh=None,
+) -> WorkSharingRun:
+    """Execute a TG plan level-synchronously: one batched launch per depth.
+
+    Siblings at the same depth of the plan tree are independent by
+    construction, so each level runs as ONE ``incremental_additions_batched``
+    launch: the level's ragged Δ-batches are stacked on a leading snapshot
+    axis (``SnapshotStore.delta_stack``, shape-bucketed so jit traces stay
+    bounded) and parent states are gathered into the lanes.
+
+    Per-lane edge views are expressed as apex blocks (shared, broadcast) plus
+    two stacked groups: the lane's *cumulative* Δ from the apex to its parent
+    and the final parent→child hop Δ. For nested windows the cumulative Δ is
+    exactly the union of the chain's per-hop Δs, so every lane re-converges
+    over precisely the edge set the sequential executor would use — the
+    monotone-fixpoint guarantee then makes the results bit-identical. The
+    frontier is seeded from the hop Δ only (``seed_blocks``), matching the
+    sequential seeding and its edge-work accounting.
+
+    On a mesh, the snapshot axis shards over ``data`` (see launch/evolve.py).
+
+    ``gated`` stays exact here but buys no skip: inside vmap the block gate's
+    ``lax.cond`` lowers to a select that relaxes every block for every lane.
+    It is honored for the apex fixpoint (unbatched) and for result parity
+    with the sequential executor, not as a batched-path speedup.
+    """
+    t_all = time.perf_counter()
+    apex_view, base, base_stats = _apex_base(
+        store, plan, semiring, source, max_iters, gated, cg_split,
+        track_parents)
+
+    results: dict[int, jnp.ndarray] = {}
+    hop_stats: list[StreamStats] = []
+    if not plan.children:
+        results[plan.window[0]] = base.values
+
+    apex_window = plan.window
+    n = store.num_nodes
+    prev_nodes = [plan]
+    prev_values = base.values[None]
+    prev_parent = base.parent[None]
+    for level in plan_levels(plan):
+        t0 = time.perf_counter()
+        hop_stacked = store.delta_stack(
+            [(prev_nodes[pi].window, c.window) for pi, c in level])
+        if any(prev_nodes[pi].window != apex_window for pi, _ in level):
+            prefix_stacked = store.delta_stack(
+                [(apex_window, prev_nodes[pi].window) for pi, _ in level])
+            delta_blocks = (prefix_stacked, hop_stacked)
+        else:
+            delta_blocks = (hop_stacked,)   # level 1: parents ARE the apex
+
+        parent_idx = jnp.asarray(np.array([pi for pi, _ in level]))
+        values = prev_values[parent_idx]
+        parent = prev_parent[parent_idx]
+        values, parent, delta_blocks, sharded = _shard_snapshot_axis(
+            mesh, values, parent, delta_blocks)
+        if mesh is not None and not sharded:
+            warnings.warn(
+                f"run_plan_batched: level of {len(level)} lanes does not "
+                f"divide the {mesh.shape['data']}-device data axis; running "
+                "replicated (ROADMAP: pow2 lane bucketing)", stacklevel=2)
+        res = incremental_additions_batched(
+            n, semiring, values, parent,
+            shared_blocks=tuple(apex_view.blocks), delta_blocks=delta_blocks,
+            max_iters=max_iters, track_parents=track_parents, gated=gated,
+            seed_blocks=(delta_blocks[-1],))
+        res.values.block_until_ready()
+        hop_stats.append(StreamStats(time.perf_counter() - t0,
+                                     float(jnp.sum(res.edge_work)),
+                                     int(jnp.max(res.iterations))))
+        for lane, (_, c) in enumerate(level):
+            if not c.children:
+                results[c.window[0]] = res.values[lane]
+        prev_nodes = [c for _, c in level]
+        prev_values, prev_parent = res.values, res.parent
+
     return WorkSharingRun(results, base_stats, hop_stats,
                           time.perf_counter() - t_all,
                           plan_added_edges(store, plan))

@@ -49,6 +49,31 @@ def _pad_to(n: int, granule: int, pow2: bool = False) -> int:
     return ((n + granule - 1) // granule) * granule
 
 
+def pad_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray | None,
+    num_nodes: int,
+    granule: int = DEFAULT_GRANULE,
+    pad_pow2: bool = False,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Pad host edge arrays to the granule bucket (sentinel dst, PAD_SRC src).
+
+    The single place the padding convention lives: every consumer that needs
+    shape-bucketed edge arrays (block construction, the KickStarter deletion
+    batches) routes through here so jit trace shapes stay bounded the same
+    way everywhere.
+    """
+    n = src.shape[0]
+    pad = _pad_to(n, granule, pow2=pad_pow2) - n
+    if pad:
+        src = np.concatenate([src, np.full(pad, PAD_SRC, np.int32)])
+        dst = np.concatenate([dst, np.full(pad, num_nodes, np.int32)])
+        if w is not None:
+            w = np.concatenate([w, np.zeros(pad, np.float32)])
+    return src, dst, w
+
+
 def make_block(
     src: np.ndarray,
     dst: np.ndarray,
@@ -74,13 +99,8 @@ def make_block(
     if sort_by_dst and src.shape[0] > 0:
         order = np.argsort(dst, kind="stable")
         src, dst, w = src[order], dst[order], w[order]
-    n = src.shape[0]
-    n_pad = _pad_to(n, granule, pow2=pad_pow2)
-    pad = n_pad - n
-    if pad:
-        src = np.concatenate([src, np.full(pad, PAD_SRC, np.int32)])
-        dst = np.concatenate([dst, np.full(pad, num_nodes, np.int32)])
-        w = np.concatenate([w, np.zeros(pad, np.float32)])
+    src, dst, w = pad_edges(src, dst, w, num_nodes, granule=granule,
+                            pad_pow2=pad_pow2)
     return EdgeBlock(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
 
 
@@ -108,6 +128,36 @@ class EdgeView:
     def extended(self, *extra: EdgeBlock) -> "EdgeView":
         """A new view sharing this view's blocks plus ``extra`` (no copies)."""
         return EdgeView(self.blocks + tuple(extra), self.num_nodes)
+
+
+def stack_delta_blocks(
+    edge_lists: Sequence[tuple[np.ndarray, np.ndarray, np.ndarray | None]],
+    num_nodes: int,
+    granule: int = DEFAULT_GRANULE,
+    pad_pow2: bool = True,
+    sort_by_dst: bool = True,
+) -> EdgeBlock:
+    """Stack ragged per-lane edge lists into one EdgeBlock with a leading
+    lane (snapshot) axis.
+
+    Every lane is padded to ONE shared width — the granule bucket of the
+    largest lane (power-of-two bucketed by default) — so the stacked shape,
+    and therefore the jit trace of any executor consuming it, depends only on
+    ``(num_lanes, bucket)`` and not on the exact ragged sizes. This is the
+    shared stacking path of the batched executors (level-synchronous TG and
+    Direct-Hop): sibling Δ-batches become lanes of a single launch.
+    """
+    if not edge_lists:
+        raise ValueError("stack_delta_blocks needs at least one lane")
+    width = _pad_to(max(np.asarray(s).shape[0] for s, _, _ in edge_lists),
+                    granule, pow2=pad_pow2)
+    # granule=width + pad_pow2=False pads each lane to exactly `width`.
+    blocks = [make_block(s, d, w, num_nodes, granule=width,
+                         sort_by_dst=sort_by_dst, pad_pow2=False)
+              for s, d, w in edge_lists]
+    return EdgeBlock(jnp.stack([b.src for b in blocks]),
+                     jnp.stack([b.dst for b in blocks]),
+                     jnp.stack([b.w for b in blocks]))
 
 
 def concat_views(a: EdgeView, b: EdgeView) -> EdgeView:

@@ -235,33 +235,44 @@ def incremental_additions(
 
 def batched_incremental(semiring, num_nodes, max_iters,
                         values, parent, shared_blocks, delta_blocks,
-                        track_parents=True):
+                        track_parents=True, gated=False, seed_blocks=None):
     """vmapped incremental additions (unjitted; launch/dryrun jits with shardings).
 
     values/parent: [S, N]; shared_blocks: tuple of EdgeBlock (broadcast);
     delta_blocks: tuple of EdgeBlock with leading S axis (stacked).
+
+    ``seed_blocks`` (stacked like delta_blocks, default: all of them): the
+    blocks the frontier is seeded from. The level-synchronous TG executor
+    carries each lane's *cumulative* Δ from the apex in delta_blocks but
+    seeds only from the lane's final parent→child hop, matching the
+    sequential executor's per-hop seeding (and its edge-work accounting)
+    exactly.
     """
-    def one(values, parent, delta_blocks):
+    seed = delta_blocks if seed_blocks is None else seed_blocks
+
+    def one(values, parent, delta_blocks, seed_blocks):
         all_on = jnp.ones((num_nodes,), bool)
         v2, p2, improved, seed_work = relax_sweep(
-            semiring, num_nodes, values, parent, all_on, delta_blocks,
+            semiring, num_nodes, values, parent, all_on, seed_blocks,
             track_parents=track_parents)
         res = _fixpoint(semiring, num_nodes, max_iters, v2, p2, improved,
-                        shared_blocks + delta_blocks,
+                        shared_blocks + delta_blocks, gated=gated,
                         track_parents=track_parents)
         return FixpointResult(res.values, res.parent, res.iterations + 1,
                               res.edge_work + seed_work)
 
-    return jax.vmap(one, in_axes=(0, 0, 0))(values, parent, delta_blocks)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0))(values, parent,
+                                               delta_blocks, seed)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
 def _batched_incremental_jit(semiring, num_nodes, max_iters,
                              values, parent, shared_blocks, delta_blocks,
-                             track_parents=True):
+                             track_parents=True, gated=False,
+                             seed_blocks=None):
     return batched_incremental(semiring, num_nodes, max_iters,
                                values, parent, shared_blocks, delta_blocks,
-                               track_parents)
+                               track_parents, gated, seed_blocks)
 
 
 def incremental_additions_batched(
@@ -273,7 +284,11 @@ def incremental_additions_batched(
     delta_blocks: Blocks,         # each with leading [S] axis
     max_iters: int = 10_000,
     track_parents: bool = True,
+    gated: bool = False,
+    seed_blocks: Blocks | None = None,
 ) -> FixpointResult:
     return _batched_incremental_jit(semiring, num_nodes, max_iters,
                                     values, parent, tuple(shared_blocks),
-                                    tuple(delta_blocks), track_parents)
+                                    tuple(delta_blocks), track_parents, gated,
+                                    None if seed_blocks is None
+                                    else tuple(seed_blocks))

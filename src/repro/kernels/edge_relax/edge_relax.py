@@ -29,7 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import CompilerParams
 
 BLOCK_E = 4096
 
@@ -86,7 +86,7 @@ def edge_relax_pallas(values, src, dst, w, *, op: str, num_nodes: int,
         out_specs=pl.BlockSpec((num_nodes + 1,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((num_nodes + 1,), values.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(values_pad, src, dst, w)
     return out[:num_nodes]

@@ -23,7 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import CompilerParams
 
 BLOCK_L = 1024
 LANE = 128
@@ -69,7 +69,7 @@ def embedding_bag_pallas(table, ids, bags, weights, *, n_bags: int,
         out_specs=pl.BlockSpec((n_bags + 1, dp), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_bags + 1, dp), table.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(table, ids, bags, weights)
     return out[:n_bags, :d]

@@ -1,0 +1,15 @@
+"""Version tolerance for the pallas TPU API shared by all kernels."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<0.5 names it TPUCompilerParams; newer jax renamed it CompilerParams.
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = pltpu.TPUCompilerParams
+    except AttributeError as exc:  # pragma: no cover - future jax renames
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; update repro.kernels.pallas_compat for this "
+            "jax version") from exc

@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import CompilerParams
 
 BLOCK_E = 1024
 LANE = 128
@@ -65,7 +65,7 @@ def segment_reduce_pallas(data, seg, *, num_segments: int, reduce: str = "sum",
         out_specs=pl.BlockSpec((num_segments + 1, dp), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((num_segments + 1, dp), data.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(data, seg)
     return out[:num_segments, :d]

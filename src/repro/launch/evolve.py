@@ -8,7 +8,12 @@ Table-1-style comparison:
 
 Modes: ks (KickStarter streaming baseline), dh (CommonGraph Direct-Hop),
 dhb (batched Direct-Hop — snapshot-parallel), ws (Triangular-Grid
-work-sharing, DP-optimal plan).
+work-sharing, DP-optimal plan), wsb (level-synchronous batched TG executor).
+
+``--shard`` places the batched executors' snapshot axis over a 1-D ``data``
+mesh spanning all local devices (launch/mesh.py::make_snapshot_mesh) — on one
+CPU device it is a no-op, on a multi-chip host each level's lanes split
+across chips.
 """
 
 from __future__ import annotations
@@ -26,9 +31,11 @@ from repro.core import (
     run_direct_hop_batched,
     run_kickstarter_stream,
     run_plan,
+    run_plan_batched,
 )
 from repro.graph import make_evolving_sequence, run_to_fixpoint
 from repro.graph.semiring import ALL_SEMIRINGS
+from repro.launch.mesh import make_snapshot_mesh
 
 
 def main(argv=None):
@@ -41,7 +48,11 @@ def main(argv=None):
     p.add_argument("--source", type=int, default=0)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--verify", action="store_true")
+    p.add_argument("--shard", action="store_true",
+                   help="shard the batched executors' snapshot axis over a "
+                        "1-D data mesh of all local devices")
     args = p.parse_args(argv)
+    mesh = make_snapshot_mesh() if args.shard else None
 
     sr = ALL_SEMIRINGS[args.alg]
     print(f"[evolve] generating {args.snapshots} snapshots of "
@@ -60,7 +71,7 @@ def main(argv=None):
     print(f"[evolve] Direct-Hop:            {dh.wall_s:.2f}s  "
           f"speedup {t_ks / dh.wall_s:.2f}x")
 
-    dhb = run_direct_hop_batched(store, sr, args.source)
+    dhb = run_direct_hop_batched(store, sr, args.source, mesh=mesh)
     print(f"[evolve] Direct-Hop (batched):  {dhb.wall_s:.2f}s  "
           f"speedup {t_ks / dhb.wall_s:.2f}x")
 
@@ -71,11 +82,18 @@ def main(argv=None):
           f"(Δ-edges {ws.added_edges} vs DH "
           f"{plan_added_edges(store, _dh_plan(args.snapshots))})")
 
+    wsb = run_plan_batched(store, plan, sr, args.source, mesh=mesh)
+    print(f"[evolve] Work-Sharing (batched):{wsb.wall_s:.2f}s  "
+          f"speedup {t_ks / wsb.wall_s:.2f}x  "
+          f"({len(wsb.hop_stats)} level launches vs "
+          f"{len(ws.hop_stats)} sequential hops)")
+
     if args.verify:
         for i in range(args.snapshots):
             ref = run_to_fixpoint(store.snapshot_view(i), sr, args.source).values
             for label, res in (("ks", ks_res[i]), ("dh", dh.results[i]),
-                               ("dhb", dhb.results[i]), ("ws", ws.results[i])):
+                               ("dhb", dhb.results[i]), ("ws", ws.results[i]),
+                               ("wsb", wsb.results[i])):
                 np.testing.assert_allclose(np.asarray(res), np.asarray(ref),
                                            rtol=1e-6, err_msg=f"{label} snap {i}")
         print("[evolve] verify: all modes match from-scratch on every snapshot")

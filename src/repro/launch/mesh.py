@@ -20,3 +20,14 @@ def make_local_mesh():
     """Whatever this host actually has (1 CPU device in CI/smoke)."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_snapshot_mesh():
+    """1-D ``data`` mesh over all local devices.
+
+    The batched CommonGraph executors (run_direct_hop_batched /
+    run_plan_batched) shard their leading snapshot axis over this axis —
+    the paper's "breaks the sequential dependency" parallelism mapped onto
+    hardware.
+    """
+    return jax.make_mesh((len(jax.devices()),), ("data",))

@@ -1,0 +1,124 @@
+"""Deterministic fallback stand-in for `hypothesis` (tests-only).
+
+The tier-1 suite property-tests with hypothesis, but hermetic containers may
+not ship it (CI installs the real package via the ``test`` extra in
+pyproject.toml). ``tests/conftest.py`` registers this module under the name
+``hypothesis`` ONLY when the real package is missing, so collection never
+breaks on the import.
+
+It implements just the surface the suite uses — ``given``, ``settings``,
+``strategies.{integers, floats, booleans, sampled_from, lists, composite}`` —
+drawing a fixed number of deterministic pseudo-random samples per test, so
+property tests still exercise many cases instead of being skipped wholesale.
+No shrinking, no database, no health checks.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+
+__version__ = "0.0.0-fallback"
+
+
+class _Strategy:
+    """A strategy is just `example(rng) -> value` here."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kwargs) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(options) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kwargs) -> _Strategy:
+    return _Strategy(lambda rng: [elements.example(rng)
+                                  for _ in range(rng.randint(min_size,
+                                                             max_size))])
+
+
+def composite(fn):
+    def build(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return _Strategy(sample)
+    return build
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Records max_examples; every other hypothesis knob is ignored."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def assume(condition) -> bool:
+    """Real hypothesis retries; here a failed assumption just passes the case."""
+    if not condition:
+        raise _AssumptionFailed()
+    return True
+
+
+class _AssumptionFailed(Exception):
+    pass
+
+
+def given(**kw_strategies):
+    """Run the test once per deterministic example (keyword strategies only)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = (getattr(wrapper, "_fallback_max_examples", None)
+                 or getattr(fn, "_fallback_max_examples", None)
+                 or DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(0xC0FFEE ^ (i * 2654435761))
+                drawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except _AssumptionFailed:
+                    continue
+
+        # pytest must not mistake the drawn parameters for fixtures: expose a
+        # signature with them removed (inspect stops unwrapping at
+        # __signature__, so the @wraps __wrapped__ chain is not followed).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in kw_strategies])
+        return wrapper
+    return deco
+
+
+# `from hypothesis import strategies as st` resolves this attribute; conftest
+# additionally registers it as sys.modules["hypothesis.strategies"].
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.booleans = booleans
+strategies.sampled_from = sampled_from
+strategies.lists = lists
+strategies.composite = composite

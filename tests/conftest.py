@@ -1,5 +1,25 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device
-(the 512-device override belongs exclusively to launch/dryrun.py)."""
+(the 512-device override belongs exclusively to launch/dryrun.py).
+
+Also installs the deterministic `hypothesis` fallback (tests/_hypothesis_fallback.py)
+when the real package is absent, so collection works in hermetic containers;
+CI installs the real hypothesis via the `test` extra.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+try:
+    import hypothesis  # noqa: F401 — prefer the real package when available
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import numpy as np
 import pytest

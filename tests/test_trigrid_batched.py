@@ -1,0 +1,158 @@
+"""Level-synchronous batched TG executor: equivalence + stacking invariants.
+
+The monotone-fixpoint guarantee promises `run_plan_batched` results that are
+bit-identical to the sequential `run_plan` (same edge sets per lane, same
+start states), which in turn match per-snapshot from-scratch fixpoints.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SnapshotStore,
+    bisection_plan,
+    direct_hop_plan,
+    optimal_plan,
+    plan_levels,
+    run_direct_hop,
+    run_direct_hop_batched,
+    run_plan,
+    run_plan_batched,
+)
+from repro.graph import make_evolving_sequence, run_to_fixpoint
+from repro.graph.edgeset import stack_delta_blocks
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def _store(n=300, e=2400, snaps=6, changes=150, seed=11, granule=128):
+    return SnapshotStore(make_evolving_sequence(n, e, snaps, changes, seed=seed),
+                         granule=granule)
+
+
+def _plans(store):
+    n = store.seq.num_snapshots
+    return {"direct_hop": direct_hop_plan(n=n),
+            "bisection": bisection_plan(n=n),
+            "optimal": optimal_plan(store)}
+
+
+# one min-order and one max-order semiring cover both reduce directions
+@pytest.mark.parametrize("alg", ["sssp", "sswp"])
+def test_batched_plan_identical_to_sequential_and_scratch(alg):
+    store = _store()
+    sr = ALL_SEMIRINGS[alg]
+    n_snap = store.seq.num_snapshots
+    scratch = [run_to_fixpoint(store.snapshot_view(i), sr, 0).values
+               for i in range(n_snap)]
+    for name, plan in _plans(store).items():
+        seq_run = run_plan(store, plan, sr, 0)
+        bat_run = run_plan_batched(store, plan, sr, 0)
+        assert sorted(bat_run.results) == list(range(n_snap))
+        for i in range(n_snap):
+            np.testing.assert_array_equal(
+                np.asarray(bat_run.results[i]), np.asarray(seq_run.results[i]),
+                err_msg=f"{name}/{alg}/snapshot {i}: batched != sequential")
+            np.testing.assert_allclose(
+                np.asarray(bat_run.results[i]), np.asarray(scratch[i]),
+                rtol=1e-6, err_msg=f"{name}/{alg}/snapshot {i} vs scratch")
+
+
+@pytest.mark.parametrize("alg", ["sssp", "viterbi"])
+def test_batched_plan_empty_delta_hops(alg):
+    """batch_changes=0 → identical snapshots → every hop Δ is empty."""
+    store = _store(n=150, e=900, snaps=4, changes=0, seed=3, granule=64)
+    sr = ALL_SEMIRINGS[alg]
+    for plan in _plans(store).values():
+        bat = run_plan_batched(store, plan, sr, 0)
+        seq = run_plan(store, plan, sr, 0)
+        for i in range(4):
+            np.testing.assert_array_equal(np.asarray(bat.results[i]),
+                                          np.asarray(seq.results[i]))
+
+
+def test_batched_plan_single_snapshot_window():
+    store = _store(n=120, e=700, snaps=1, changes=0, seed=5, granule=64)
+    sr = ALL_SEMIRINGS["sssp"]
+    bat = run_plan_batched(store, direct_hop_plan(n=1), sr, 0)
+    ref = run_to_fixpoint(store.snapshot_view(0), sr, 0)
+    assert list(bat.results) == [0]
+    np.testing.assert_array_equal(np.asarray(bat.results[0]),
+                                  np.asarray(ref.values))
+
+
+def test_batched_plan_tracks_parents_and_edge_work():
+    """Options parity at the WorkSharingRun level: per-plan total edge work
+    of the batched run equals the sequential run's (same seeding, same
+    frontier evolution, padding excluded from the work counter)."""
+    store = _store(snaps=5, seed=17)
+    sr = ALL_SEMIRINGS["sssp"]
+    for name, plan in _plans(store).items():
+        seq_run = run_plan(store, plan, sr, 0, track_parents=True)
+        bat_run = run_plan_batched(store, plan, sr, 0, track_parents=True)
+        seq_work = sum(s.edge_work for s in seq_run.hop_stats)
+        bat_work = sum(s.edge_work for s in bat_run.hop_stats)
+        assert seq_work == pytest.approx(bat_work), name
+
+
+@pytest.mark.parametrize("gated,cg_split,track_parents",
+                         [(True, 4, True), (True, 1, False), (False, 4, True)])
+def test_direct_hop_batched_honors_options(gated, cg_split, track_parents):
+    """Regression: the batched twin must honor gated/cg_split/track_parents
+    (it used to silently ignore all three)."""
+    store = _store(snaps=4, seed=23)
+    sr = ALL_SEMIRINGS["sssp"]
+    dh = run_direct_hop(store, sr, 0, gated=gated, cg_split=cg_split,
+                        track_parents=track_parents)
+    dhb = run_direct_hop_batched(store, sr, 0, gated=gated, cg_split=cg_split,
+                                 track_parents=track_parents)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(dhb.results[i]),
+                                      np.asarray(dh.results[i]))
+
+
+def test_batched_plan_on_snapshot_mesh():
+    """The --shard path: lanes placed over a 1-D data mesh (single device in
+    CI, so every level divides and the device_put branch executes)."""
+    from repro.launch.mesh import make_snapshot_mesh
+    store = _store(n=200, e=1400, snaps=4, changes=100, seed=29, granule=64)
+    sr = ALL_SEMIRINGS["sssp"]
+    plan = optimal_plan(store)
+    bat = run_plan_batched(store, plan, sr, 0, mesh=make_snapshot_mesh())
+    seq = run_plan(store, plan, sr, 0)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(bat.results[i]),
+                                      np.asarray(seq.results[i]))
+
+
+def test_plan_levels_shape():
+    plan = bisection_plan(n=8)
+    levels = plan_levels(plan)
+    assert [len(lv) for lv in levels] == [2, 4, 8]
+    # parent lane indices point into the previous level
+    for prev_len, level in zip([1] + [len(lv) for lv in levels], levels):
+        assert all(0 <= pi < prev_len for pi, _ in level)
+    # star plan: exactly one level with every snapshot as a lane
+    assert [len(lv) for lv in plan_levels(direct_hop_plan(n=6))] == [6]
+
+
+def test_stack_delta_blocks_bucketing():
+    """Ragged lanes land in ONE bucketed width: jit trace shapes depend only
+    on (num_lanes, bucket), not the exact ragged sizes."""
+    rng = np.random.default_rng(0)
+
+    def lanes(sizes):
+        out = []
+        for s in sizes:
+            src = rng.integers(0, 50, size=s).astype(np.int32)
+            dst = (src + 1) % 50
+            out.append((src, dst.astype(np.int32),
+                        np.ones(s, np.float32)))
+        return out
+
+    a = stack_delta_blocks(lanes([3, 17, 9]), 50, granule=16, pad_pow2=True)
+    b = stack_delta_blocks(lanes([1, 30, 25]), 50, granule=16, pad_pow2=True)
+    assert a.src.shape == b.src.shape == (3, 32)
+    # padding convention: sentinel dst rows, in-bounds src
+    assert int(a.dst.max()) == 50 and int(a.src.max()) < 50
+    with pytest.raises(ValueError):
+        stack_delta_blocks([], 50)
