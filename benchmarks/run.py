@@ -1,16 +1,24 @@
 """Benchmark harness entry: one function per paper table/claim.
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract.
-Scales are container-sized (DESIGN.md §7.4); pass --full for larger graphs.
+Prints ``name,us_per_call,derived`` CSV per the harness contract, and
+writes one machine-readable ``BENCH_<bench>.json`` per bench into
+``--out-dir`` (default: current directory) — the schema is documented in
+docs/BENCHMARKS.md. Scales are container-sized (DESIGN.md §7.4); pass
+--full for larger graphs.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only BENCH] \
+        [--out-dir DIR]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+BENCH_SCHEMA_VERSION = 1
 
 
 def bench_table1(full: bool):
@@ -87,18 +95,53 @@ def bench_kernels(full: bool):
     return out
 
 
+def bench_window_slide(full: bool):
+    from benchmarks.window_slide import run_window_slide_bench
+    rows = run_window_slide_bench(widths=(2, 4, 8) if not full
+                                  else (2, 4, 8, 16),
+                                  snaps=12 if not full else 24)
+    # equivalence is asserted inside run_window_slide_bench (bit-compare per
+    # window); a mismatch raises there and the harness reports FAILED
+    out = []
+    for r in rows:
+        out.append((f"window_slide/width{r['width']}", r["bat_s"] * 1e6,
+                    f"lanes={r['lanes']} edges={r['added_edges']} "
+                    f"batched-speedup={r['bat_speedup']:.2f}x"))
+    return out
+
+
 BENCHES = {
     "table1": bench_table1,
     "del_vs_add": bench_del_vs_add,
     "tg_sharing": bench_tg_sharing,
+    "window_slide": bench_window_slide,
     "kernels": bench_kernels,
 }
+
+
+def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
+                     rows, error: str | None) -> pathlib.Path:
+    """Emit BENCH_<bench>.json (schema: docs/BENCHMARKS.md)."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{bench}.json"
+    path.write_text(json.dumps({
+        "bench": bench,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated_unix": time.time(),
+        "status": status,
+        "error": error,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }, indent=2) + "\n")
+    return path
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true")
     p.add_argument("--only", default=None, choices=list(BENCHES))
+    p.add_argument("--out-dir", default=".", type=pathlib.Path,
+                   help="directory for the BENCH_<bench>.json files")
     args = p.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -107,11 +150,14 @@ def main(argv=None) -> int:
         if args.only and name != args.only:
             continue
         try:
-            for row in fn(args.full):
+            rows = list(fn(args.full))
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            write_bench_json(args.out_dir, name, "ok", rows, None)
         except Exception as exc:  # noqa: BLE001
             ok = False
             print(f"{name},NaN,FAILED:{exc}")
+            write_bench_json(args.out_dir, name, "failed", [], str(exc))
     return 0 if ok else 1
 
 

@@ -1,0 +1,85 @@
+"""Sliding-window executors: batched one-launch slide vs sequential re-hops.
+
+For each window width the full slide (every width-W window over the
+sequence) runs twice — sequential ``run_window_slide`` (one incremental hop
+per window) and batched ``run_window_slide_batched`` (every hop a lane of
+ONE stacked launch, core/window.py) — after a warm-up so compile time is
+excluded. Results are bit-compared each round, so a timing row is also an
+equivalence check. This is the window analogue of benchmarks/tg_sharing.py:
+same level-batching machinery, windows instead of plan levels.
+
+    PYTHONPATH=src python -m benchmarks.window_slide [--smoke]
+
+``--smoke`` runs a tiny graph (CI's docs job uses it as the benchmark
+smoke test; see docs/BENCHMARKS.md for the emitted BENCH_*.json schema).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (
+    SnapshotStore,
+    run_window_slide,
+    run_window_slide_batched,
+    slide_windows,
+)
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def run_window_slide_bench(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
+                           widths=(2, 4, 8), step=1, seed=0, alg="sssp",
+                           source=0):
+    """Rows of {width, lanes, added_edges, seq_s, bat_s, bat_speedup, ...}."""
+    sr = ALL_SEMIRINGS[alg]
+    seq = make_evolving_sequence(n, e, snaps, batch_changes, seed=seed)
+    store = SnapshotStore(seq)
+    rows = []
+    for width in widths:
+        windows = slide_windows(snaps, width, step=step)
+        # warm-up (compiles), then the timed runs
+        run_window_slide(store, sr, source, width, step=step)
+        seq_run = run_window_slide(store, sr, source, width, step=step)
+        run_window_slide_batched(store, sr, source, width, step=step)
+        bat_run = run_window_slide_batched(store, sr, source, width, step=step)
+        for wnd in windows:
+            np.testing.assert_array_equal(
+                np.asarray(bat_run.results[wnd]),
+                np.asarray(seq_run.results[wnd]),
+                err_msg=f"width {width} window {wnd}: batched != sequential")
+        rows.append({
+            "width": width,
+            "lanes": len(windows),
+            "added_edges": seq_run.added_edges,
+            "seq_s": seq_run.wall_s,
+            "bat_s": bat_run.wall_s,
+            "bat_speedup": seq_run.wall_s / bat_run.wall_s,
+            "seq_work": sum(h.edge_work for h in seq_run.hop_stats),
+            "bat_work": sum(h.edge_work for h in bat_run.hop_stats),
+        })
+    return rows
+
+
+SMOKE = dict(n=400, e=3_000, snaps=6, batch_changes=200, widths=(2, 3))
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny graph (CI smoke run)")
+    args = p.parse_args(argv)
+    rows = run_window_slide_bench(**(SMOKE if args.smoke else {}))
+    for r in rows:
+        print(f"width={r['width']:3d}  lanes={r['lanes']:3d}  "
+              f"Δ-edges {r['added_edges']:>10,}  "
+              f"seq {r['seq_s']:.3f}s  batched {r['bat_s']:.3f}s  "
+              f"({r['bat_speedup']:.2f}x, work {r['seq_work']:,.0f} vs "
+              f"{r['bat_work']:,.0f})  bit-identical ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Check that intra-repo links in docs/*.md and README.md resolve.
+
+Stdlib-only (runs in CI's docs job before anything is installed). For each
+markdown file checked, every relative link target must exist on disk, and
+every ``#fragment`` — on another checked markdown file or within the same
+file — must match a heading's GitHub-style anchor. External links
+(http/https/mailto) are ignored.
+
+    python scripts/check_links.py [files...]   # default: README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+# [text](target) — skips images' leading ! via the (?<!\!) guard
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading → anchor slug (lowercase, spaces→dashes, strip
+    punctuation except dashes/underscores)."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading).strip().lower()
+    heading = re.sub(r"[^\w\- ]", "", heading, flags=re.UNICODE)
+    return heading.replace(" ", "-")
+
+
+def anchors_of(md: pathlib.Path) -> set[str]:
+    """All anchors the file's headings define, with GitHub's -1/-2 suffixes
+    for repeated headings."""
+    text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    seen: dict[str, int] = {}
+    anchors = set()
+    for h in HEADING_RE.findall(text):
+        slug = github_anchor(h)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def rel(p: pathlib.Path) -> str:
+    try:
+        return str(p.relative_to(REPO))
+    except ValueError:
+        return str(p)
+
+
+def check(files: list[pathlib.Path]) -> list[str]:
+    errors = []
+    for md in files:
+        text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                errors.append(f"{rel(md)}: broken link "
+                              f"'{target}' ({dest} does not exist)")
+                continue
+            if fragment and dest.suffix == ".md":
+                if github_anchor(fragment) not in anchors_of(dest):
+                    errors.append(f"{rel(md)}: anchor "
+                                  f"'#{fragment}' not found in {rel(dest)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = ([pathlib.Path(a).resolve() for a in argv]
+             if argv else
+             [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))])
+    missing = [f for f in files if not f.exists()]
+    for f in missing:
+        print(f"MISSING FILE: {f}", file=sys.stderr)
+    errors = check([f for f in files if f.exists()])
+    for e in errors:
+        print(f"BROKEN: {e}", file=sys.stderr)
+    if missing or errors:
+        return 1
+    print(f"checked {len(files)} files: all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -5,6 +5,7 @@ Layers:
   kickstarter  the streaming baseline (deletions + trimming) we compare to
   directhop    CommonGraph Direct-Hop schedule (deletion-free, star plan)
   trigrid      Triangular Grid + work-sharing plans (DP-optimal / bisection)
+  window       sliding-window executors (sequential + one-launch batched)
 """
 
 from repro.core.snapshots import SnapshotStore
@@ -21,9 +22,21 @@ from repro.core.trigrid import (
     run_plan,
     run_plan_batched,
 )
+from repro.core.window import (
+    WindowSlideRun,
+    run_window_slide,
+    run_window_slide_batched,
+    slide_windows,
+    window_anchor,
+)
 
 __all__ = [
     "SnapshotStore",
+    "WindowSlideRun",
+    "run_window_slide",
+    "run_window_slide_batched",
+    "slide_windows",
+    "window_anchor",
     "StreamStats",
     "run_kickstarter_stream",
     "DirectHopRun",

@@ -13,9 +13,28 @@ Set algebra runs host-side on sorted int64 key arrays (this is the part of
 the system that, at cluster scale, becomes a distributed sort/merge over the
 ingest pipeline; on one host numpy's merge-based set ops are the right tool).
 Device-side execution consumes only the padded immutable blocks.
+
+Store contract (what every executor may assume):
+
+* **Pure cache.** Every block is a pure function of ``(seq, tag)``: evicting
+  a block and re-fetching it rebuilds a bit-identical array (same edges,
+  same dst-sort order, same padding). Eviction can therefore never change
+  any executor's result, only its memory/rebuild cost.
+* **Bounded device memory (opt-in).** ``cache_bytes`` puts the device-block
+  cache under an LRU byte budget. The batched executors retain every
+  shape-bucketed ``delta_stack`` lane buffer alongside the per-hop "D"
+  blocks covering the same edges; memory-tight accelerators comparing both
+  executors bound that with the budget, or drop a whole block family
+  explicitly via :meth:`SnapshotStore.release`.
+* **Shape bucketing.** Blocks are padded to granule buckets (pow2 by
+  default) so jit trace shapes depend only on the bucket, not exact ragged
+  sizes (see ``graph/edgeset.py``). Host-side key arrays (``window_keys``)
+  are never evicted — they are the cheap part and keep rebuilds exact.
 """
 
 from __future__ import annotations
+
+from collections import OrderedDict
 
 import numpy as np
 
@@ -29,19 +48,80 @@ from repro.graph.edgeset import (
 from repro.graph.generators import EvolvingSequence
 
 
+def _block_nbytes(blk: EdgeBlock) -> int:
+    return sum(int(a.size) * a.dtype.itemsize for a in blk)
+
+
 class SnapshotStore:
-    """Caches window common-graphs T(i,j) (key arrays) and device blocks."""
+    """Caches window common-graphs T(i,j) (key arrays) and device blocks.
+
+    ``cache_bytes`` (default ``None`` = unbounded) bounds the device-block
+    cache: least-recently-used blocks are dropped once the budget is
+    exceeded (the block just built is always kept, even if it alone exceeds
+    the budget — callers hold a reference to it anyway). ``release`` drops
+    whole block families explicitly. Both are safe: re-fetching rebuilds
+    bit-identical blocks from the retained host-side key arrays.
+    """
 
     def __init__(self, seq: EvolvingSequence, granule: int = 4096,
-                 pad_pow2: bool = True):
+                 pad_pow2: bool = True, cache_bytes: int | None = None):
         self.seq = seq
         self.num_nodes = seq.num_nodes
         self.granule = granule
         self.pad_pow2 = pad_pow2
+        self.cache_bytes = cache_bytes
         self._t: dict[tuple[int, int], np.ndarray] = {
             (i, i): seq.snapshot_keys[i] for i in range(seq.num_snapshots)
         }
-        self._blocks: dict[tuple, EdgeBlock] = {}
+        self._blocks: OrderedDict[tuple, EdgeBlock] = OrderedDict()
+        self._cached_nbytes = 0
+        self.evictions = 0  # lifetime count, for tests/benchmarks
+
+    # -- block cache (LRU by bytes + explicit release) -------------------------
+
+    @property
+    def cached_nbytes(self) -> int:
+        """Current device-block cache footprint (padded array bytes)."""
+        return self._cached_nbytes
+
+    def _cache_get(self, tag: tuple) -> EdgeBlock | None:
+        blk = self._blocks.get(tag)
+        if blk is not None:
+            self._blocks.move_to_end(tag)
+        return blk
+
+    def _cache_put(self, tag: tuple, blk: EdgeBlock) -> EdgeBlock:
+        self._blocks[tag] = blk
+        self._blocks.move_to_end(tag)
+        self._cached_nbytes += _block_nbytes(blk)
+        if self.cache_bytes is not None:
+            while self._cached_nbytes > self.cache_bytes and len(self._blocks) > 1:
+                old_tag, old_blk = next(iter(self._blocks.items()))
+                if old_tag == tag:
+                    break
+                del self._blocks[old_tag]
+                self._cached_nbytes -= _block_nbytes(old_blk)
+                self.evictions += 1
+        return blk
+
+    def release(self, kinds: "tuple[str, ...] | None" = None) -> int:
+        """Drop cached device blocks; returns the number of bytes released.
+
+        ``kinds`` filters by tag family — e.g. ``("DS",)`` drops only the
+        stacked ``delta_stack`` buffers the batched executors built, leaving
+        the sequential executors' per-hop "D" blocks warm. ``None`` drops
+        everything. Host-side key arrays are never dropped, so subsequent
+        fetches rebuild bit-identical blocks.
+        """
+        if isinstance(kinds, str):  # release("DS") must not match family "D"
+            kinds = (kinds,)
+        drop = [t for t in self._blocks
+                if kinds is None or t[0] in kinds]
+        freed = 0
+        for t in drop:
+            freed += _block_nbytes(self._blocks.pop(t))
+        self._cached_nbytes -= freed
+        return freed
 
     # -- window intersections -------------------------------------------------
 
@@ -70,14 +150,14 @@ class SnapshotStore:
 
     def block_for_keys(self, keys: np.ndarray, tag: tuple) -> EdgeBlock:
         """Immutable padded device block for a key set (cached by tag)."""
-        if tag in self._blocks:
-            return self._blocks[tag]
+        blk = self._cache_get(tag)
+        if blk is not None:
+            return blk
         src, dst = keys_to_edges(keys, self.num_nodes)
         w = self.seq.weights_for(keys)
         blk = make_block(src, dst, w, self.num_nodes, granule=self.granule,
                          pad_pow2=self.pad_pow2)
-        self._blocks[tag] = blk
-        return blk
+        return self._cache_put(tag, blk)
 
     def window_block(self, i: int, j: int) -> EdgeBlock:
         return self.block_for_keys(self.window_keys(i, j), ("T", i, j))
@@ -111,8 +191,9 @@ class SnapshotStore:
         the hop list so re-running a plan rebuilds nothing.
         """
         tag = ("DS",) + tuple(hops)
-        if tag in self._blocks:
-            return self._blocks[tag]
+        blk = self._cache_get(tag)
+        if blk is not None:
+            return blk
         lanes = []
         for parent, child in hops:
             keys = self.delta_keys(parent, child)
@@ -120,8 +201,7 @@ class SnapshotStore:
             lanes.append((s, d, self.seq.weights_for(keys)))
         blk = stack_delta_blocks(lanes, self.num_nodes, granule=self.granule,
                                  pad_pow2=self.pad_pow2)
-        self._blocks[tag] = blk
-        return blk
+        return self._cache_put(tag, blk)
 
     def snapshot_view(self, i: int) -> EdgeView:
         """Standalone single-block view of S_i (used by from-scratch baselines)."""
@@ -162,3 +242,17 @@ class SnapshotStore:
         if anchor is None:
             anchor = (0, self.seq.num_snapshots - 1)
         return self.delta_block(anchor, new_window)
+
+    def slide_stack(self, windows: "list[tuple[int, int]]",
+                    anchor: tuple[int, int] | None = None) -> EdgeBlock:
+        """Stacked slide deltas: one lane per window, all hopping from ``anchor``.
+
+        The batched window-slide executor's block assembly: every
+        ``slide_block(window, anchor)`` becomes one lane of a single stacked
+        EdgeBlock (shape-bucketed like any ``delta_stack``), so the whole
+        slide runs as ONE ``incremental_additions_batched`` launch
+        (core/window.py). ``anchor`` defaults to the global window.
+        """
+        if anchor is None:
+            anchor = (0, self.seq.num_snapshots - 1)
+        return self.delta_stack([(anchor, w) for w in windows])

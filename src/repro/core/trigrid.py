@@ -21,6 +21,27 @@ via the addition-only incremental engine; each node's edge view = parent's
 view ⊕ one Δ block (immutable, shared — zero mutation). Sibling subtrees are
 *independent* — the per-level batched executor stacks them on a snapshot
 axis (paper's parallelism claim; sharded over `data` on a mesh).
+
+Executor contract (both ``run_plan`` and ``run_plan_batched``):
+
+* **Bit-identical results.** For the same plan, semiring, source and
+  options, the batched executor returns bit-identical values (and parents,
+  when tracked) to the sequential DFS, which in turn matches the
+  per-snapshot from-scratch fixpoint up to float tolerance. Each batched
+  lane converges over exactly the edge set the sequential executor would
+  use (apex blocks + the lane's cumulative Δ + the hop Δ), and the monotone
+  fixpoint is order-free — tests/test_trigrid_batched.py enforces this.
+* **Shape-bucketing invariant.** Batched levels consume
+  ``SnapshotStore.delta_stack`` buffers whose stacked shape depends only on
+  ``(num_lanes, pow2 bucket of the widest lane)`` — never on exact ragged Δ
+  sizes — so the number of distinct jit traces stays bounded by the bucket
+  count, not the plan count.
+* **Work accounting.** Padding edges never count toward ``edge_work``; the
+  batched seed relaxes only the final parent→child hop Δ (``seed_blocks``),
+  so per-plan total edge work equals the sequential executor's.
+
+The sliding-window executor (core/window.py) reuses this machinery with
+windows instead of plan levels and inherits the same contract.
 """
 
 from __future__ import annotations
@@ -32,12 +53,12 @@ import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
 from repro.graph.edgeset import EdgeBlock, EdgeView
 from repro.graph.engine import (
+    gather_lane_states,
     incremental_additions,
     incremental_additions_batched,
     run_to_fixpoint,
@@ -137,12 +158,16 @@ class WorkSharingRun:
     added_edges: int
 
 
-def _apex_base(store, plan, semiring, source, max_iters, gated, cg_split,
-               track_parents):
-    """Apex fixpoint shared by both executors: (view, result, stats)."""
+def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
+                 track_parents):
+    """Anchor-window fixpoint shared by all executors: (view, result, stats).
+
+    The TG executors anchor at the plan apex; the sliding-window executors
+    (core/window.py) anchor at the windows' common super-window.
+    """
     t0 = time.perf_counter()
-    apex_view = (store.window_view_split(*plan.window, cg_split) if cg_split > 1
-                 else store.common_graph_view(*plan.window))
+    apex_view = (store.window_view_split(*window, cg_split) if cg_split > 1
+                 else store.common_graph_view(*window))
     base = run_to_fixpoint(apex_view, semiring, source, max_iters, gated=gated,
                            track_parents=track_parents)
     base.values.block_until_ready()
@@ -163,8 +188,8 @@ def run_plan(
 ) -> WorkSharingRun:
     """Execute a TG plan (DFS; each hop = addition-only incremental update)."""
     t_all = time.perf_counter()
-    apex_view, base, base_stats = _apex_base(
-        store, plan, semiring, source, max_iters, gated, cg_split,
+    apex_view, base, base_stats = _anchor_base(
+        store, plan.window, semiring, source, max_iters, gated, cg_split,
         track_parents)
 
     results: dict[int, jnp.ndarray] = {}
@@ -263,8 +288,8 @@ def run_plan_batched(
     with the sequential executor, not as a batched-path speedup.
     """
     t_all = time.perf_counter()
-    apex_view, base, base_stats = _apex_base(
-        store, plan, semiring, source, max_iters, gated, cg_split,
+    apex_view, base, base_stats = _anchor_base(
+        store, plan.window, semiring, source, max_iters, gated, cg_split,
         track_parents)
 
     results: dict[int, jnp.ndarray] = {}
@@ -288,9 +313,8 @@ def run_plan_batched(
         else:
             delta_blocks = (hop_stacked,)   # level 1: parents ARE the apex
 
-        parent_idx = jnp.asarray(np.array([pi for pi, _ in level]))
-        values = prev_values[parent_idx]
-        parent = prev_parent[parent_idx]
+        values, parent = gather_lane_states(prev_values, prev_parent,
+                                            [pi for pi, _ in level])
         values, parent, delta_blocks, sharded = _shard_snapshot_axis(
             mesh, values, parent, delta_blocks)
         if mesh is not None and not sharded:

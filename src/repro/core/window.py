@@ -1,0 +1,226 @@
+"""Sliding-window executors: many window queries as one batched launch.
+
+The dominant query pattern over an evolving sequence is not "every
+snapshot" but a *window* that slides: answer the query on ``[i, i+w)``,
+then on ``[i+1, i+w+1)``, and so on (delta-based historical queries à la
+Koloniari et al.; the streaming-system surveys make the same point). The
+naive slide re-runs the query per window. CommonGraph makes every window
+an *addition-only* hop from a shared anchor:
+
+* Sliding is NOT deletion-free between consecutive windows — ``T(i,j) ⊄
+  T(i+1,j+1)`` in general. The sound warm start is any common
+  SUPER-window's apex: for windows spanning ``[lo..hi]`` the tightest is
+  ``T(lo, hi)`` (every window's common graph contains it), which
+  ``window_anchor`` picks by default.
+* With one anchor fixpoint in hand, each window apex is reached by
+  streaming ``slide_block(window, anchor)`` — pure additions. The hops are
+  mutually independent, so the batched executor stacks them as lanes of a
+  single ``incremental_additions_batched`` launch
+  (``SnapshotStore.slide_stack``), exactly the level-batching machinery of
+  ``core/trigrid.py`` with windows instead of plan levels.
+
+Executor contract (same as core/trigrid.py, enforced by
+tests/test_window.py):
+
+* **Bit-identical results.** ``run_window_slide_batched`` returns values
+  (and parents, when tracked) bit-identical to the sequential
+  ``run_window_slide`` for the same windows/anchor/options: every lane
+  converges over exactly the edge set the sequential hop uses (anchor
+  blocks + that window's slide Δ), and the monotone fixpoint is
+  order-free. Both match a from-scratch fixpoint on each window's common
+  graph up to float tolerance.
+* **Shape-bucketing invariant.** The stacked slide Δ has shape
+  ``(num_windows, pow2 bucket of the widest lane)`` — jit traces are keyed
+  on the bucket, never on exact ragged Δ sizes.
+* **Degenerate cases.** A single window equal to the anchor is legal: its
+  Δ is empty, the seed sweep finds no improvements, and the anchor state
+  is returned unchanged. Likewise ``width == num_snapshots`` yields one
+  window (the global CG query itself).
+* **Work accounting.** Padding never counts toward ``edge_work``; batched
+  and sequential slides report equal per-window totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+
+import jax.numpy as jnp
+
+from repro.core.kickstarter import StreamStats
+from repro.core.snapshots import SnapshotStore
+from repro.core.trigrid import _anchor_base, _shard_snapshot_axis
+from repro.graph.engine import (
+    gather_lane_states,
+    incremental_additions,
+    incremental_additions_batched,
+)
+from repro.graph.semiring import Semiring
+
+Window = tuple[int, int]
+
+
+def slide_windows(num_snapshots: int, width: int, step: int = 1,
+                  start: int = 0) -> list[Window]:
+    """Window plan construction: all width-``width`` windows sliding by ``step``.
+
+    Windows are inclusive snapshot-index pairs ``(i, i + width - 1)``; the
+    last one ends at the final snapshot. Degenerate cases are explicit: a
+    width covering the whole (remaining) sequence yields exactly one
+    window.
+    """
+    if not 1 <= width <= num_snapshots - start:
+        raise ValueError(
+            f"window width {width} not in [1, {num_snapshots - start}] "
+            f"(num_snapshots={num_snapshots}, start={start})")
+    if step < 1:
+        raise ValueError(f"step must be >= 1, got {step}")
+    return [(i, i + width - 1)
+            for i in range(start, num_snapshots - width + 1, step)]
+
+
+def window_anchor(windows: list[Window]) -> Window:
+    """Tightest common super-window: the span of all windows.
+
+    Every window's common graph contains the span's (nested windows ⇒
+    nested CGs), so the span apex warm-starts every slide hop with the
+    largest possible shared state — strictly less Δ volume than anchoring
+    at the global CG when the windows don't cover the whole sequence.
+    """
+    if not windows:
+        raise ValueError("need at least one window")
+    return min(i for i, _ in windows), max(j for _, j in windows)
+
+
+@dataclasses.dataclass
+class WindowSlideRun:
+    results: dict[Window, jnp.ndarray]  # window -> values
+    anchor: Window
+    base_stats: StreamStats             # the shared anchor fixpoint
+    hop_stats: list[StreamStats]        # per-window (seq) or 1 launch (batched)
+    wall_s: float
+    added_edges: int                    # total slide-Δ volume streamed
+
+
+def _slide_added_edges(store: SnapshotStore, windows: list[Window],
+                       anchor: Window) -> int:
+    a = store.window_size(*anchor)
+    return sum(store.window_size(*w) - a for w in windows)
+
+
+def _resolve(store: SnapshotStore, width: int | None, windows, step, start,
+             anchor):
+    if windows is None:
+        if width is None:
+            raise ValueError("pass either width= or windows=")
+        windows = slide_windows(store.seq.num_snapshots, width, step=step,
+                                start=start)
+    windows = [tuple(w) for w in windows]
+    if anchor is None:
+        anchor = window_anchor(windows)
+    return windows, tuple(anchor)
+
+
+def run_window_slide(
+    store: SnapshotStore,
+    semiring: Semiring,
+    source: int,
+    width: int | None = None,
+    *,
+    windows: "list[Window] | None" = None,
+    step: int = 1,
+    start: int = 0,
+    anchor: Window | None = None,
+    max_iters: int = 10_000,
+    gated: bool = False,
+    cg_split: int = 1,
+    track_parents: bool = False,
+) -> WindowSlideRun:
+    """Sequential window slide: one anchor fixpoint, then per-window hops.
+
+    The baseline the batched executor is measured (and bit-compared)
+    against: each window re-executes ``incremental_additions`` from the
+    anchor state with that window's slide Δ.
+    """
+    t_all = time.perf_counter()
+    windows, anchor = _resolve(store, width, windows, step, start, anchor)
+    anchor_view, base, base_stats = _anchor_base(
+        store, anchor, semiring, source, max_iters, gated, cg_split,
+        track_parents)
+
+    results: dict[Window, jnp.ndarray] = {}
+    hop_stats: list[StreamStats] = []
+    for wnd in windows:
+        t0 = time.perf_counter()
+        delta = store.slide_block(wnd, anchor)
+        view = anchor_view.extended(delta)       # shared immutable blocks
+        res = incremental_additions(view, delta, semiring, base.values,
+                                    base.parent, max_iters, gated=gated,
+                                    track_parents=track_parents)
+        res.values.block_until_ready()
+        hop_stats.append(StreamStats(time.perf_counter() - t0,
+                                     float(res.edge_work),
+                                     int(res.iterations)))
+        results[wnd] = res.values
+    return WindowSlideRun(results, anchor, base_stats, hop_stats,
+                          time.perf_counter() - t_all,
+                          _slide_added_edges(store, windows, anchor))
+
+
+def run_window_slide_batched(
+    store: SnapshotStore,
+    semiring: Semiring,
+    source: int,
+    width: int | None = None,
+    *,
+    windows: "list[Window] | None" = None,
+    step: int = 1,
+    start: int = 0,
+    anchor: Window | None = None,
+    max_iters: int = 10_000,
+    gated: bool = False,
+    cg_split: int = 1,
+    track_parents: bool = False,
+    mesh=None,
+) -> WindowSlideRun:
+    """Batched window slide: every slide hop as a lane of ONE stacked launch.
+
+    The anchor state broadcasts to all window lanes
+    (``gather_lane_states`` with an all-zeros lane map), the per-window
+    slide Δs stack shape-bucketed (``SnapshotStore.slide_stack``), and one
+    ``incremental_additions_batched`` call re-converges every window. On a
+    mesh the window-lane axis shards over ``data`` exactly like the TG
+    executor's snapshot axis (``launch/evolve.py --shard --window-batch``).
+    """
+    t_all = time.perf_counter()
+    windows, anchor = _resolve(store, width, windows, step, start, anchor)
+    anchor_view, base, base_stats = _anchor_base(
+        store, anchor, semiring, source, max_iters, gated, cg_split,
+        track_parents)
+
+    t0 = time.perf_counter()
+    stacked = store.slide_stack(windows, anchor)
+    values, parent = gather_lane_states(base.values[None], base.parent[None],
+                                        [0] * len(windows))
+    delta_blocks = (stacked,)
+    values, parent, delta_blocks, sharded = _shard_snapshot_axis(
+        mesh, values, parent, delta_blocks)
+    if mesh is not None and not sharded:
+        warnings.warn(
+            f"run_window_slide_batched: {len(windows)} window lanes do not "
+            f"divide the {mesh.shape['data']}-device data axis; running "
+            "replicated (ROADMAP: pow2 lane bucketing)", stacklevel=2)
+    res = incremental_additions_batched(
+        store.num_nodes, semiring, values, parent,
+        shared_blocks=tuple(anchor_view.blocks), delta_blocks=delta_blocks,
+        max_iters=max_iters, track_parents=track_parents, gated=gated,
+        seed_blocks=(delta_blocks[-1],))
+    res.values.block_until_ready()
+    hop_stats = [StreamStats(time.perf_counter() - t0,
+                             float(jnp.sum(res.edge_work)),
+                             int(jnp.max(res.iterations)))]
+    results = {wnd: res.values[lane] for lane, wnd in enumerate(windows)}
+    return WindowSlideRun(results, anchor, base_stats, hop_stats,
+                          time.perf_counter() - t_all,
+                          _slide_added_edges(store, windows, anchor))

@@ -29,6 +29,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graph.edgeset import EdgeBlock, EdgeView
 from repro.graph.semiring import Semiring
@@ -232,6 +233,22 @@ def incremental_additions(
 # dependency" parallelism, realized as one extra tensor axis. Shared blocks
 # broadcast; per-snapshot Δ blocks are stacked on axis 0.
 # ---------------------------------------------------------------------------
+
+def gather_lane_states(values: jnp.ndarray, parent: jnp.ndarray,
+                       lane_to_parent) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather per-lane warm-start states for a batched launch.
+
+    ``values``/``parent`` are the previous level's stacked states
+    ``[P, N]``; ``lane_to_parent[l]`` names the parent lane whose state
+    seeds lane ``l``. Both batched executors route through here: the
+    level-synchronous TG executor gathers each sibling's parent state
+    (a permutation-with-repeats of the previous level), and the
+    sliding-window executor broadcasts the single anchor state to every
+    window lane (``lane_to_parent == zeros``). One gather instead of a
+    host-side stack keeps the states on-device (and sharded, if they are).
+    """
+    idx = jnp.asarray(np.asarray(lane_to_parent, dtype=np.int32))
+    return values[idx], parent[idx]
 
 def batched_incremental(semiring, num_nodes, max_iters,
                         values, parent, shared_blocks, delta_blocks,

@@ -10,10 +10,17 @@ Modes: ks (KickStarter streaming baseline), dh (CommonGraph Direct-Hop),
 dhb (batched Direct-Hop — snapshot-parallel), ws (Triangular-Grid
 work-sharing, DP-optimal plan), wsb (level-synchronous batched TG executor).
 
-``--shard`` places the batched executors' snapshot axis over a 1-D ``data``
-mesh spanning all local devices (launch/mesh.py::make_snapshot_mesh) — on one
-CPU device it is a no-op, on a multi-chip host each level's lanes split
-across chips.
+``--window W`` additionally runs the sliding-window executors: a width-W
+window slides over the sequence and every window is answered by an
+addition-only hop from the windows' common super-window apex
+(core/window.py). ``--window-batch`` runs the batched slide too — all hops
+as lanes of ONE stacked launch — and reports its speedup over the
+sequential slide.
+
+``--shard`` places the batched executors' lane axis (snapshots for
+dhb/wsb, windows for --window-batch) over a 1-D ``data`` mesh spanning all
+local devices (launch/mesh.py::make_snapshot_mesh) — on one CPU device it
+is a no-op, on a multi-chip host each launch's lanes split across chips.
 """
 
 from __future__ import annotations
@@ -32,6 +39,9 @@ from repro.core import (
     run_kickstarter_stream,
     run_plan,
     run_plan_batched,
+    run_window_slide,
+    run_window_slide_batched,
+    slide_windows,
 )
 from repro.graph import make_evolving_sequence, run_to_fixpoint
 from repro.graph.semiring import ALL_SEMIRINGS
@@ -49,9 +59,23 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--verify", action="store_true")
     p.add_argument("--shard", action="store_true",
-                   help="shard the batched executors' snapshot axis over a "
-                        "1-D data mesh of all local devices")
+                   help="shard the batched executors' lane axis (snapshots, "
+                        "or windows with --window-batch) over a 1-D data "
+                        "mesh of all local devices")
+    p.add_argument("--window", type=int, default=None, metavar="W",
+                   help="also run the sliding-window executor: slide a "
+                        "width-W window over the sequence, answering every "
+                        "window by an addition-only hop from the shared "
+                        "super-window anchor (core/window.py)")
+    p.add_argument("--window-step", type=int, default=1, metavar="S",
+                   help="slide stride for --window (default 1)")
+    p.add_argument("--window-batch", action="store_true",
+                   help="with --window: also run the batched slide — every "
+                        "window hop as one lane of a single stacked launch "
+                        "(composes with --shard)")
     args = p.parse_args(argv)
+    if args.window_batch and args.window is None:
+        p.error("--window-batch requires --window W")
     mesh = make_snapshot_mesh() if args.shard else None
 
     sr = ALL_SEMIRINGS[args.alg]
@@ -88,6 +112,23 @@ def main(argv=None):
           f"({len(wsb.hop_stats)} level launches vs "
           f"{len(ws.hop_stats)} sequential hops)")
 
+    if args.window is not None:
+        windows = slide_windows(args.snapshots, args.window,
+                                step=args.window_step)
+        sl = run_window_slide(store, sr, args.source, args.window,
+                              step=args.window_step)
+        print(f"[evolve] Window slide (seq):   {sl.wall_s:.2f}s  "
+              f"({len(windows)} windows of width {args.window}, "
+              f"anchor T{sl.anchor}, Δ-edges {sl.added_edges})")
+        slb = None
+        if args.window_batch:
+            slb = run_window_slide_batched(store, sr, args.source,
+                                           args.window, step=args.window_step,
+                                           mesh=mesh)
+            print(f"[evolve] Window slide (batch): {slb.wall_s:.2f}s  "
+                  f"speedup {sl.wall_s / slb.wall_s:.2f}x  "
+                  f"(1 stacked launch vs {len(sl.hop_stats)} hops)")
+
     if args.verify:
         for i in range(args.snapshots):
             ref = run_to_fixpoint(store.snapshot_view(i), sr, args.source).values
@@ -97,6 +138,22 @@ def main(argv=None):
                 np.testing.assert_allclose(np.asarray(res), np.asarray(ref),
                                            rtol=1e-6, err_msg=f"{label} snap {i}")
         print("[evolve] verify: all modes match from-scratch on every snapshot")
+        if args.window is not None:
+            from repro.graph import EdgeView
+            for wnd in windows:
+                ref = run_to_fixpoint(
+                    EdgeView((store.window_block(*wnd),), store.num_nodes),
+                    sr, args.source).values
+                np.testing.assert_allclose(np.asarray(sl.results[wnd]),
+                                           np.asarray(ref), rtol=1e-6,
+                                           err_msg=f"window slide {wnd}")
+                if slb is not None:
+                    np.testing.assert_array_equal(
+                        np.asarray(slb.results[wnd]),
+                        np.asarray(sl.results[wnd]),
+                        err_msg=f"batched window slide {wnd}")
+            print("[evolve] verify: window slide exact on every window"
+                  + (" (batched bit-identical)" if slb is not None else ""))
 
 
 def _dh_plan(n):

@@ -1,0 +1,202 @@
+"""Sliding-window executors + SnapshotStore block-cache eviction.
+
+Covers the core/window.py contract (batched slide bit-identical to the
+sequential slide, both exact vs from-scratch per-window fixpoints) and the
+SnapshotStore LRU/explicit-release guarantees (eviction frees delta_stack
+buffers; re-fetch rebuilds bit-identical blocks; results never change).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SnapshotStore,
+    run_window_slide,
+    run_window_slide_batched,
+    slide_windows,
+    window_anchor,
+)
+from repro.core.snapshots import _block_nbytes
+from repro.graph import EdgeView, make_evolving_sequence, run_to_fixpoint
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def _store(n=300, e=2400, snaps=6, changes=150, seed=11, granule=128,
+           **kw):
+    return SnapshotStore(make_evolving_sequence(n, e, snaps, changes,
+                                                seed=seed),
+                         granule=granule, **kw)
+
+
+# -- window plan construction -------------------------------------------------
+
+def test_slide_windows_construction():
+    assert slide_windows(6, 3) == [(0, 2), (1, 3), (2, 4), (3, 5)]
+    assert slide_windows(6, 3, step=2) == [(0, 2), (2, 4)]
+    assert slide_windows(6, 3, start=2) == [(2, 4), (3, 5)]
+    assert slide_windows(6, 1) == [(i, i) for i in range(6)]
+    # degenerate: width covering the whole sequence -> exactly one window
+    assert slide_windows(6, 6) == [(0, 5)]
+    with pytest.raises(ValueError):
+        slide_windows(6, 7)
+    with pytest.raises(ValueError):
+        slide_windows(6, 0)
+    with pytest.raises(ValueError):
+        slide_windows(6, 3, step=0)
+
+
+def test_window_anchor_is_span():
+    assert window_anchor([(1, 3), (2, 4), (3, 5)]) == (1, 5)
+    assert window_anchor([(2, 2)]) == (2, 2)
+    with pytest.raises(ValueError):
+        window_anchor([])
+
+
+# -- batched-vs-sequential equivalence on random evolving graphs --------------
+
+# one min-order and one max-order semiring cover both reduce directions
+@pytest.mark.parametrize("alg", ["sssp", "sswp"])
+@pytest.mark.parametrize("seed", [11, 37])
+def test_window_slide_batched_identical_and_exact(alg, seed):
+    store = _store(seed=seed)
+    sr = ALL_SEMIRINGS[alg]
+    for width in (2, 4):
+        seq_run = run_window_slide(store, sr, 0, width)
+        bat_run = run_window_slide_batched(store, sr, 0, width)
+        windows = slide_windows(store.seq.num_snapshots, width)
+        assert list(seq_run.results) == list(bat_run.results) == windows
+        assert seq_run.anchor == bat_run.anchor == window_anchor(windows)
+        for wnd in windows:
+            np.testing.assert_array_equal(
+                np.asarray(bat_run.results[wnd]),
+                np.asarray(seq_run.results[wnd]),
+                err_msg=f"{alg}/width {width}/window {wnd}: batched != seq")
+            ref = run_to_fixpoint(
+                EdgeView((store.window_block(*wnd),), store.num_nodes), sr, 0)
+            np.testing.assert_allclose(
+                np.asarray(bat_run.results[wnd]), np.asarray(ref.values),
+                rtol=1e-6, err_msg=f"{alg}/width {width}/window {wnd} vs scratch")
+
+
+def test_window_slide_edge_work_parity():
+    """Padding excluded from work: batched totals equal sequential totals."""
+    store = _store(seed=5)
+    sr = ALL_SEMIRINGS["sssp"]
+    for width in (2, 3):
+        seq_run = run_window_slide(store, sr, 0, width, track_parents=True)
+        bat_run = run_window_slide_batched(store, sr, 0, width,
+                                           track_parents=True)
+        seq_work = sum(h.edge_work for h in seq_run.hop_stats)
+        bat_work = sum(h.edge_work for h in bat_run.hop_stats)
+        assert seq_work == pytest.approx(bat_work)
+
+
+def test_window_slide_degenerate_single_window():
+    """width == num_snapshots: one window == the anchor, empty Δ, anchor
+    state returned unchanged."""
+    store = _store(snaps=4, seed=3)
+    sr = ALL_SEMIRINGS["sssp"]
+    bat = run_window_slide_batched(store, sr, 0, 4)
+    assert list(bat.results) == [(0, 3)]
+    assert bat.anchor == (0, 3)
+    assert bat.added_edges == 0
+    ref = run_to_fixpoint(store.common_graph_view(0, 3), sr, 0)
+    np.testing.assert_array_equal(np.asarray(bat.results[(0, 3)]),
+                                  np.asarray(ref.values))
+
+
+def test_window_slide_explicit_windows_and_anchor():
+    """Non-contiguous windows + explicit anchor; anchor must be a
+    super-window of every window."""
+    store = _store(snaps=6, seed=19)
+    sr = ALL_SEMIRINGS["sssp"]
+    windows = [(1, 2), (3, 4)]
+    seq_run = run_window_slide(store, sr, 0, windows=windows, anchor=(0, 5))
+    bat_run = run_window_slide_batched(store, sr, 0, windows=windows,
+                                       anchor=(0, 5))
+    for wnd in windows:
+        np.testing.assert_array_equal(np.asarray(bat_run.results[wnd]),
+                                      np.asarray(seq_run.results[wnd]))
+    with pytest.raises(ValueError):  # anchor not a super-window of (1,2)
+        run_window_slide_batched(store, sr, 0, windows=windows, anchor=(2, 5))
+
+
+def test_window_slide_on_snapshot_mesh():
+    """--shard --window-batch path: window lanes over a 1-D data mesh."""
+    from repro.launch.mesh import make_snapshot_mesh
+    store = _store(n=200, e=1400, snaps=5, changes=100, seed=29, granule=64)
+    sr = ALL_SEMIRINGS["sssp"]
+    bat = run_window_slide_batched(store, sr, 0, 2,
+                                   mesh=make_snapshot_mesh())
+    seq = run_window_slide(store, sr, 0, 2)
+    for wnd in slide_windows(5, 2):
+        np.testing.assert_array_equal(np.asarray(bat.results[wnd]),
+                                      np.asarray(seq.results[wnd]))
+
+
+# -- SnapshotStore block-cache eviction ---------------------------------------
+
+def _stack_arrays(blk):
+    return [np.asarray(a).copy() for a in blk]
+
+
+def test_store_lru_eviction_frees_delta_stacks():
+    """A byte budget evicts least-recently-used blocks (delta_stack lane
+    buffers included) and re-fetching rebuilds bit-identical arrays."""
+    unbounded = _store(seed=7)
+    first = _stack_arrays(unbounded.slide_stack(slide_windows(6, 2)))
+    one_stack = _block_nbytes(unbounded.slide_stack(slide_windows(6, 2)))
+
+    store = _store(seed=7, cache_bytes=one_stack)  # room for ~one stack
+    blk = store.slide_stack(slide_windows(6, 2))
+    for x, y in zip(first, _stack_arrays(blk)):
+        np.testing.assert_array_equal(x, y)
+    tag = next(t for t in store._blocks if t[0] == "DS")
+    store.slide_stack(slide_windows(6, 3))   # pushes the budget over
+    store.slide_stack(slide_windows(6, 4))
+    assert store.evictions > 0
+    assert tag not in store._blocks          # the width-2 stack was evicted
+    # re-fetch rebuilds a bit-identical stack from the retained key arrays
+    rebuilt = _stack_arrays(store.slide_stack(slide_windows(6, 2)))
+    for x, y in zip(first, rebuilt):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_store_lru_keeps_newest_block_even_over_budget():
+    store = _store(seed=7, cache_bytes=1)    # absurdly tight budget
+    blk = store.slide_stack(slide_windows(6, 2))
+    assert len(store._blocks) == 1           # the block just built is kept
+    again = store.slide_stack(slide_windows(6, 2))
+    assert again is blk                      # and it is a cache hit
+
+
+def test_store_explicit_release_by_family():
+    store = _store(seed=7)
+    store.window_block(0, 5)                         # "T" family
+    store.delta_block((0, 5), (1, 2))                # "D" family
+    store.slide_stack(slide_windows(6, 2))           # "DS" family
+    before = store.cached_nbytes
+    freed = store.release(("DS",))
+    assert freed > 0
+    assert store.cached_nbytes == before - freed
+    assert all(t[0] != "DS" for t in store._blocks)
+    assert any(t[0] == "T" for t in store._blocks)   # others stay warm
+    assert any(t[0] == "D" for t in store._blocks)
+    rest = store.release()                           # drop everything
+    assert store.cached_nbytes == 0 and not store._blocks
+    assert rest > 0
+
+
+def test_window_slide_results_unchanged_under_eviction():
+    """End-to-end: a memory-tight store (constant rebuilds) returns results
+    bit-identical to an unbounded store's."""
+    sr = ALL_SEMIRINGS["sssp"]
+    free = _store(seed=13)
+    tight = _store(seed=13, cache_bytes=64 * 1024)
+    for width in (2, 3):
+        a = run_window_slide_batched(free, sr, 0, width)
+        b = run_window_slide_batched(tight, sr, 0, width)
+        for wnd in a.results:
+            np.testing.assert_array_equal(np.asarray(a.results[wnd]),
+                                          np.asarray(b.results[wnd]))
+    assert tight.evictions > 0
