@@ -4,10 +4,13 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract, and
 writes one machine-readable ``BENCH_<bench>.json`` per bench into
 ``--out-dir`` (default: current directory) — the schema is documented in
 docs/BENCHMARKS.md. Scales are container-sized (DESIGN.md §7.4); pass
---full for larger graphs.
+--full for larger graphs, or --smoke for the tiny-graph tier CI runs on
+every push (each bench still asserts its own correctness at smoke scale,
+and the JSON artifacts give PRs a perf trajectory to diff against — the
+committed seed baseline lives in benchmarks/baselines/).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only BENCH] \
-        [--out-dir DIR]
+    PYTHONPATH=src python -m benchmarks.run [--full | --smoke] \
+        [--only BENCH] [--out-dir DIR]
 """
 
 from __future__ import annotations
@@ -21,13 +24,16 @@ import time
 BENCH_SCHEMA_VERSION = 1
 
 
-def bench_table1(full: bool):
+def bench_table1(scale: str):
     from benchmarks.table1 import run_table1
-    graphs = {"RM-20k": (20_000, 200_000)} if not full else \
-        {"RM-100k": (100_000, 1_000_000), "RM-20k": (20_000, 200_000)}
+    graphs, snaps, changes = {
+        "smoke": ({"RM-2k": (2_000, 20_000)}, 4, 600),
+        "default": ({"RM-20k": (20_000, 200_000)}, 6, 6_000),
+        "full": ({"RM-100k": (100_000, 1_000_000),
+                  "RM-20k": (20_000, 200_000)}, 12, 20_000),
+    }[scale]
     t0 = time.perf_counter()
-    rows = run_table1(graphs, num_snapshots=6 if not full else 12,
-                      batch_changes=6_000 if not full else 20_000)
+    rows = run_table1(graphs, num_snapshots=snaps, batch_changes=changes)
     dt = time.perf_counter() - t0
     out = []
     for r in rows:
@@ -41,22 +47,28 @@ def bench_table1(full: bool):
     return out
 
 
-def bench_del_vs_add(full: bool):
+def bench_del_vs_add(scale: str):
     from benchmarks.del_vs_add import run_del_vs_add
+    n, e, k, repeats = {"smoke": (2_000, 20_000, 600, 1),
+                        "default": (10_000, 100_000, 3_000, 2),
+                        "full": (10_000, 100_000, 3_000, 5)}[scale]
     out = []
     for alg in ("bfs", "sssp", "sswp", "ssnp", "viterbi"):
-        r = run_del_vs_add(alg=alg, n=10_000, e=100_000, k=3_000,
-                           repeats=2 if not full else 5)
+        r = run_del_vs_add(alg=alg, n=n, e=e, k=k, repeats=repeats)
         assert r["verified"], f"del_vs_add {alg} verification failed"
         out.append((f"del_vs_add/{alg}", r["t_del_s"] * 1e6,
                     f"del/add-time={r['ratio_time']:.2f}x work={r['ratio_work']:.2f}x"))
     return out
 
 
-def bench_tg_sharing(full: bool):
+def bench_tg_sharing(scale: str):
     from benchmarks.tg_sharing import run_tg_sharing
-    rows = run_tg_sharing(n=10_000, e=100_000, batch_changes=4_000,
-                          windows=(4, 8, 16) if not full else (4, 8, 16, 32))
+    n, e, changes, windows = {
+        "smoke": (2_000, 20_000, 800, (4,)),
+        "default": (10_000, 100_000, 4_000, (4, 8, 16)),
+        "full": (10_000, 100_000, 4_000, (4, 8, 16, 32)),
+    }[scale]
+    rows = run_tg_sharing(n=n, e=e, batch_changes=changes, windows=windows)
     out = []
     for r in rows:
         out.append((f"tg_sharing/window{r['window']}",
@@ -69,14 +81,14 @@ def bench_tg_sharing(full: bool):
     return out
 
 
-def bench_kernels(full: bool):
+def bench_kernels(scale: str):
     """Interpret-mode kernels vs jnp oracle: correctness + oracle timing."""
     import jax
     import numpy as np
     from repro.kernels import edge_relax
     from repro.kernels.edge_relax.ref import edge_relax_ref
 
-    n, e = 5_000, 60_000
+    n, e = (1_000, 12_000) if scale == "smoke" else (5_000, 60_000)
     key = jax.random.PRNGKey(0)
     vals = jax.random.uniform(key, (n,)) * 10
     src = jax.random.randint(jax.random.PRNGKey(1), (e,), 0, n)
@@ -95,11 +107,12 @@ def bench_kernels(full: bool):
     return out
 
 
-def bench_window_slide(full: bool):
+def bench_window_slide(scale: str):
     from benchmarks.window_slide import run_window_slide_bench
-    rows = run_window_slide_bench(widths=(2, 4, 8) if not full
-                                  else (2, 4, 8, 16),
-                                  snaps=12 if not full else 24)
+    widths, snaps = {"smoke": ((2,), 6),
+                     "default": ((2, 4, 8), 12),
+                     "full": ((2, 4, 8, 16), 24)}[scale]
+    rows = run_window_slide_bench(widths=widths, snaps=snaps)
     # equivalence is asserted inside run_window_slide_bench (bit-compare per
     # window); a mismatch raises there and the harness reports FAILED
     out = []
@@ -110,12 +123,81 @@ def bench_window_slide(full: bool):
     return out
 
 
+def bench_evolve(scale: str):
+    """End-to-end wall time of every executor mode the evolve driver runs,
+    verified against from-scratch fixpoints — the committed seed baseline
+    (benchmarks/baselines/BENCH_evolve.json) that future PRs diff against.
+    """
+    import numpy as np
+
+    from repro.core import (
+        SnapshotStore,
+        optimal_plan,
+        run_direct_hop,
+        run_direct_hop_batched,
+        run_kickstarter_stream,
+        run_plan,
+        run_plan_batched,
+        run_window_slide,
+        run_window_slide_batched,
+    )
+    from repro.graph import make_evolving_sequence, run_to_fixpoint
+    from repro.graph.semiring import ALL_SEMIRINGS
+
+    n, e, snaps, changes, width = {
+        "smoke": (2_000, 20_000, 5, 600, 3),
+        "default": (10_000, 100_000, 8, 3_000, 4),
+        "full": (20_000, 200_000, 10, 10_000, 4),
+    }[scale]
+    sr = ALL_SEMIRINGS["sssp"]
+    store = SnapshotStore(make_evolving_sequence(n, e, snaps, changes, seed=0))
+    plan = optimal_plan(store)
+
+    def timed(fn):
+        fn()  # warm up (compile + block caches)
+        t0 = time.perf_counter()
+        res = fn()
+        return time.perf_counter() - t0, res
+
+    t_ks, (ks_res, _) = timed(lambda: run_kickstarter_stream(store, sr, 0))
+    modes = [
+        ("dh", lambda: run_direct_hop(store, sr, 0)),
+        ("dhb", lambda: run_direct_hop_batched(store, sr, 0)),
+        ("ws", lambda: run_plan(store, plan, sr, 0)),
+        ("wsb", lambda: run_plan_batched(store, plan, sr, 0)),
+        ("window_seq", lambda: run_window_slide(store, sr, 0, width)),
+        ("window_bat", lambda: run_window_slide_batched(store, sr, 0, width)),
+    ]
+    out = [("evolve/ks", t_ks * 1e6, f"snapshots={snaps} edges~{e}")]
+    runs = {}
+    for name, fn in modes:
+        dt, res = timed(fn)
+        runs[name] = res
+        out.append((f"evolve/{name}", dt * 1e6,
+                    f"speedup-vs-ks={t_ks / dt:.2f}x"))
+    for i in range(snaps):
+        ref = run_to_fixpoint(store.snapshot_view(i), sr, 0).values
+        for name in ("dh", "dhb"):
+            np.testing.assert_allclose(np.asarray(runs[name].results[i]),
+                                       np.asarray(ref), rtol=1e-6)
+        for name in ("ws", "wsb"):
+            np.testing.assert_allclose(np.asarray(runs[name].results[i]),
+                                       np.asarray(ref), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ks_res[i]), np.asarray(ref),
+                                   rtol=1e-6)
+    for wnd, vals in runs["window_bat"].results.items():
+        np.testing.assert_array_equal(np.asarray(vals),
+                                      np.asarray(runs["window_seq"].results[wnd]))
+    return out
+
+
 BENCHES = {
     "table1": bench_table1,
     "del_vs_add": bench_del_vs_add,
     "tg_sharing": bench_tg_sharing,
     "window_slide": bench_window_slide,
     "kernels": bench_kernels,
+    "evolve": bench_evolve,
 }
 
 
@@ -138,11 +220,17 @@ def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
-    p.add_argument("--full", action="store_true")
+    scale_group = p.add_mutually_exclusive_group()
+    scale_group.add_argument("--full", action="store_true",
+                             help="larger graphs (paper-representative)")
+    scale_group.add_argument("--smoke", action="store_true",
+                             help="tiny graphs — the CI tier: correctness "
+                                  "asserts + artifact emission in minutes")
     p.add_argument("--only", default=None, choices=list(BENCHES))
     p.add_argument("--out-dir", default=".", type=pathlib.Path,
                    help="directory for the BENCH_<bench>.json files")
     args = p.parse_args(argv)
+    scale = "full" if args.full else "smoke" if args.smoke else "default"
 
     print("name,us_per_call,derived")
     ok = True
@@ -150,7 +238,7 @@ def main(argv=None) -> int:
         if args.only and name != args.only:
             continue
         try:
-            rows = list(fn(args.full))
+            rows = list(fn(scale))
             for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
             write_bench_json(args.out_dir, name, "ok", rows, None)

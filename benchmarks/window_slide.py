@@ -10,8 +10,9 @@ same level-batching machinery, windows instead of plan levels.
 
     PYTHONPATH=src python -m benchmarks.window_slide [--smoke]
 
-``--smoke`` runs a tiny graph (CI's docs job uses it as the benchmark
-smoke test; see docs/BENCHMARKS.md for the emitted BENCH_*.json schema).
+``--smoke`` runs a tiny graph for a seconds-long local check; CI covers
+the same path via the bench job's ``benchmarks.run --smoke`` harness pass
+(see docs/BENCHMARKS.md for the emitted BENCH_*.json schema).
 """
 
 from __future__ import annotations

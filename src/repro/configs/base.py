@@ -45,6 +45,7 @@ class Cell:
     out_specs: Any = None        # optional pytree of PartitionSpec
     donate: tuple[int, ...] = ()
     static_argnums: tuple[int, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)  # dryrun-reported extras
 
 
 def named(mesh, spec_tree):

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import Cell, MeshAxes
-from repro.graph.edgeset import EdgeBlock
+from repro.graph.edgeset import EdgeBlock, lane_bucket
 from repro.graph.engine import batched_incremental
 from repro.graph.semiring import SSSP
 
@@ -36,10 +36,18 @@ def make_commongraph_cell(shape_id: str, mesh, max_iters: int = 64) -> Cell:
     f32, i32 = jnp.float32, jnp.int32
     semiring = SSSP
 
-    values = S((s, n), f32)
-    parent = S((s, n), i32)
+    # The executors' lane-bucketing invariant, applied on the production
+    # mesh: pad the snapshot axis to a pow2 bucket divisible by the batch
+    # extent, mask the padding lanes, and the cell shards for ANY protocol
+    # snapshot count — not just counts that happen to divide the mesh.
+    extent = ax.n_batch_shards(mesh)
+    sb = lane_bucket(s, extent)
+
+    values = S((sb, n), f32)
+    parent = S((sb, n), i32)
     cg = EdgeBlock(S((e_cg,), i32), S((e_cg,), i32), S((e_cg,), f32))
-    delta = EdgeBlock(S((s, e_d), i32), S((s, e_d), i32), S((s, e_d), f32))
+    delta = EdgeBlock(S((sb, e_d), i32), S((sb, e_d), i32), S((sb, e_d), f32))
+    lane_valid = S((sb,), jnp.bool_)
 
     bd = ax.batch
     # snapshots over (pod, data); node state replicated within a snapshot
@@ -48,20 +56,23 @@ def make_commongraph_cell(shape_id: str, mesh, max_iters: int = 64) -> Cell:
     cg_spec = EdgeBlock(P(ax.model), P(ax.model), P(ax.model))
     delta_spec = EdgeBlock(P(bd, ax.model), P(bd, ax.model), P(bd, ax.model))
 
-    def evolve_step(values, parent, cg_block, delta_block):
+    def evolve_step(values, parent, cg_block, delta_block, lane_valid):
         # track_parents=False: the deletion-free schedule never trims, so
         # dependence tracking is dead weight — measured −50% flops/bytes and
         # −49.9% collective per sweep on this cell (EXPERIMENTS.md §Perf A).
         res = batched_incremental(
             semiring, n, max_iters, values, parent, (cg_block,), (delta_block,),
-            track_parents=False)
+            track_parents=False, lane_valid=lane_valid)
         return res.values, res.parent, res.iterations, res.edge_work
 
     return Cell(
         name=f"commongraph/{shape_id}",
         fn=evolve_step,
-        args=(values, parent, cg, delta),
-        in_specs=(state_spec, state_spec, cg_spec, delta_spec),
+        args=(values, parent, cg, delta, lane_valid),
+        in_specs=(state_spec, state_spec, cg_spec, delta_spec, P(bd)),
         out_specs=(state_spec, state_spec, P(bd), P(bd)),
         donate=(0, 1),
+        meta={"lanes": s, "lane_bucket": sb,
+              "lanes_per_device": sb // extent,
+              "lane_padding_overhead": round(sb / s - 1, 4)},
     )

@@ -27,6 +27,9 @@ class DirectHopRun:
     base_stats: StreamStats          # the one-off CommonGraph fixpoint
     hop_stats: list[StreamStats]     # per-snapshot addition hops
     wall_s: float
+    # (valid lanes, lane_bucket) of the batched launch; empty when sequential
+    lane_layout: "list[tuple[int, int]]" = dataclasses.field(
+        default_factory=list)
 
 
 def run_direct_hop(
@@ -101,4 +104,5 @@ def run_direct_hop_batched(
                           max_iters, gated=gated, cg_split=cg_split,
                           track_parents=track_parents, mesh=mesh)
     return DirectHopRun([ws.results[i] for i in range(n_snap)],
-                        ws.base_stats, ws.hop_stats, ws.wall_s)
+                        ws.base_stats, ws.hop_stats, ws.wall_s,
+                        ws.lane_layout)

@@ -28,8 +28,12 @@ Store contract (what every executor may assume):
   explicitly via :meth:`SnapshotStore.release`.
 * **Shape bucketing.** Blocks are padded to granule buckets (pow2 by
   default) so jit trace shapes depend only on the bucket, not exact ragged
-  sizes (see ``graph/edgeset.py``). Host-side key arrays (``window_keys``)
-  are never evicted — they are the cheap part and keep rebuilds exact.
+  sizes (see ``graph/edgeset.py``); stacked lane buffers additionally
+  bucket their LANE axis (``delta_stack``/``slide_stack`` ``num_lanes=``,
+  trailing lanes all-sentinel) so trace keys are ``(pow2 lanes, pow2
+  width)`` and the lane axis always divides a mesh's ``data`` extent.
+  Host-side key arrays (``window_keys``) are never evicted — they are the
+  cheap part and keep rebuilds exact.
 """
 
 from __future__ import annotations
@@ -91,8 +95,12 @@ class SnapshotStore:
         return blk
 
     def _cache_put(self, tag: tuple, blk: EdgeBlock) -> EdgeBlock:
+        # Overwriting an existing tag must displace the old entry's bytes,
+        # or cached_nbytes drifts upward and triggers spurious evictions.
+        old = self._blocks.pop(tag, None)
+        if old is not None:
+            self._cached_nbytes -= _block_nbytes(old)
         self._blocks[tag] = blk
-        self._blocks.move_to_end(tag)
         self._cached_nbytes += _block_nbytes(blk)
         if self.cache_bytes is not None:
             while self._cached_nbytes > self.cache_bytes and len(self._blocks) > 1:
@@ -126,13 +134,26 @@ class SnapshotStore:
     # -- window intersections -------------------------------------------------
 
     def window_keys(self, i: int, j: int) -> np.ndarray:
-        """Sorted keys of T(i,j) = ⋂_{k∈[i..j]} S_k (cached, built left-to-right)."""
+        """Sorted keys of T(i,j) = ⋂_{k∈[i..j]} S_k (cached, built left-to-right).
+
+        Iterative from the widest cached prefix (i, k): a cold (0, n−1)
+        request on a multi-thousand-snapshot sequence must not hit the
+        Python recursion limit. (i, i) is always cached, so the prefix scan
+        terminates.
+        """
         if (i, j) in self._t:
             return self._t[(i, j)]
-        cur = self.window_keys(i, j - 1)
-        out = np.intersect1d(cur, self.seq.snapshot_keys[j], assume_unique=True)
-        self._t[(i, j)] = out
-        return out
+        if j < i:
+            raise ValueError(f"window ({i}, {j}) is empty: need i <= j")
+        k = j
+        while (i, k) not in self._t:
+            k -= 1
+        cur = self._t[(i, k)]
+        for m in range(k + 1, j + 1):
+            cur = np.intersect1d(cur, self.seq.snapshot_keys[m],
+                                 assume_unique=True)
+            self._t[(i, m)] = cur
+        return cur
 
     def window_size(self, i: int, j: int) -> int:
         return int(self.window_keys(i, j).shape[0])
@@ -181,7 +202,8 @@ class SnapshotStore:
                                    ("D", parent, child))
 
     def delta_stack(
-        self, hops: "list[tuple[tuple[int, int], tuple[int, int]]]"
+        self, hops: "list[tuple[tuple[int, int], tuple[int, int]]]",
+        num_lanes: int | None = None,
     ) -> EdgeBlock:
         """Stacked Δ-batches for several parent→child hops (one lane per hop).
 
@@ -189,8 +211,15 @@ class SnapshotStore:
         them (shape-bucketed, see ``stack_delta_blocks``) turns the level
         into a single snapshot-axis launch of the batched engine. Cached by
         the hop list so re-running a plan rebuilds nothing.
+
+        ``num_lanes`` buckets the LANE axis: the batched executors pass
+        ``lane_bucket(len(hops), data_extent)`` so every stack's lane count
+        is pow2 and mesh-divisible, with trailing all-sentinel masked lanes
+        (see ``stack_delta_blocks``). The bucketed lane count is part of the
+        cache tag, so trace keys — which follow the stacked shape — become
+        ``(pow2 lanes, pow2 width)``.
         """
-        tag = ("DS",) + tuple(hops)
+        tag = ("DS", num_lanes or len(hops)) + tuple(hops)
         blk = self._cache_get(tag)
         if blk is not None:
             return blk
@@ -200,7 +229,7 @@ class SnapshotStore:
             s, d = keys_to_edges(keys, self.num_nodes)
             lanes.append((s, d, self.seq.weights_for(keys)))
         blk = stack_delta_blocks(lanes, self.num_nodes, granule=self.granule,
-                                 pad_pow2=self.pad_pow2)
+                                 pad_pow2=self.pad_pow2, num_lanes=num_lanes)
         return self._cache_put(tag, blk)
 
     def snapshot_view(self, i: int) -> EdgeView:
@@ -244,15 +273,18 @@ class SnapshotStore:
         return self.delta_block(anchor, new_window)
 
     def slide_stack(self, windows: "list[tuple[int, int]]",
-                    anchor: tuple[int, int] | None = None) -> EdgeBlock:
+                    anchor: tuple[int, int] | None = None,
+                    num_lanes: int | None = None) -> EdgeBlock:
         """Stacked slide deltas: one lane per window, all hopping from ``anchor``.
 
         The batched window-slide executor's block assembly: every
         ``slide_block(window, anchor)`` becomes one lane of a single stacked
         EdgeBlock (shape-bucketed like any ``delta_stack``), so the whole
         slide runs as ONE ``incremental_additions_batched`` launch
-        (core/window.py). ``anchor`` defaults to the global window.
+        (core/window.py). ``anchor`` defaults to the global window;
+        ``num_lanes`` buckets the lane axis exactly as in ``delta_stack``.
         """
         if anchor is None:
             anchor = (0, self.seq.num_snapshots - 1)
-        return self.delta_stack([(anchor, w) for w in windows])
+        return self.delta_stack([(anchor, w) for w in windows],
+                                num_lanes=num_lanes)

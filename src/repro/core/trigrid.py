@@ -32,11 +32,18 @@ Executor contract (both ``run_plan`` and ``run_plan_batched``):
   use (apex blocks + the lane's cumulative Δ + the hop Δ), and the monotone
   fixpoint is order-free — tests/test_trigrid_batched.py enforces this.
 * **Shape-bucketing invariant.** Batched levels consume
-  ``SnapshotStore.delta_stack`` buffers whose stacked shape depends only on
-  ``(num_lanes, pow2 bucket of the widest lane)`` — never on exact ragged Δ
-  sizes — so the number of distinct jit traces stays bounded by the bucket
-  count, not the plan count.
-* **Work accounting.** Padding edges never count toward ``edge_work``; the
+  ``SnapshotStore.delta_stack`` buffers whose stacked shape is ``(pow2 lane
+  bucket, pow2 width bucket)`` — never the exact lane count or ragged Δ
+  sizes. The lane axis pads to ``lane_bucket(lanes, data_extent)`` with
+  trailing *masked* lanes (all-sentinel Δ, parent-state copy, frontier
+  never seeded, ``lane_valid=False``), so the number of distinct jit traces
+  stays bounded by bucket combinations across ALL plans, and every level
+  divides the mesh's ``data`` axis.
+* **Always sharded on a mesh.** With ``mesh=`` given, every level's lane
+  axis shards over ``data`` — lane bucketing removed the old
+  replicated-execution fallback (and its UserWarning) entirely.
+* **Work accounting.** Padding edges never count toward ``edge_work``, and
+  masked padding lanes are zeroed out of ``edge_work``/``iterations``; the
   batched seed relaxes only the final parent→child hop Δ (``seed_blocks``),
   so per-plan total edge work equals the sequential executor's.
 
@@ -47,16 +54,14 @@ windows instead of plan levels and inherits the same contract.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
-from repro.graph.edgeset import EdgeBlock, EdgeView
+from repro.graph.edgeset import EdgeBlock, EdgeView, lane_bucket
 from repro.graph.engine import (
     gather_lane_states,
     incremental_additions,
@@ -83,45 +88,55 @@ class PlanNode:
 
 
 def optimal_plan(store: SnapshotStore, i: int = 0, j: int | None = None) -> PlanNode:
-    """Interval-DP plan minimizing total added-edge volume."""
+    """Interval-DP plan minimizing total added-edge volume.
+
+    Bottom-up over interval spans (and an explicit-stack tree build), so
+    neither the DP nor a maximally skewed optimal plan can hit Python's
+    recursion limit on long snapshot sequences.
+    """
     if j is None:
         j = store.seq.num_snapshots - 1
     size = store.window_size  # cached |T(a,b)|
 
-    @functools.lru_cache(maxsize=None)
-    def cost(a: int, b: int) -> int:
+    cost: dict[Window, int] = {(a, a): 0 for a in range(i, j + 1)}
+    split: dict[Window, int] = {}
+    for span in range(1, j - i + 1):
+        for a in range(i, j + 1 - span):
+            b = a + span
+            s_ab = size(a, b)
+            best, arg = None, a
+            for m in range(a, b):
+                c = ((size(a, m) - s_ab) + cost[(a, m)]
+                     + (size(m + 1, b) - s_ab) + cost[(m + 1, b)])
+                if best is None or c < best:
+                    best, arg = c, m
+            cost[(a, b)] = best
+            split[(a, b)] = arg
+
+    root = PlanNode((i, j), [])
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        a, b = node.window
         if a == b:
-            return 0
-        best = None
-        for m in range(a, b):
-            c = ((size(a, m) - size(a, b)) + cost(a, m)
-                 + (size(m + 1, b) - size(a, b)) + cost(m + 1, b))
-            best = c if best is None else min(best, c)
-        return best
+            continue
+        m = split[(a, b)]
+        node.children = [PlanNode((a, m), []), PlanNode((m + 1, b), [])]
+        stack.extend(node.children)
+    return root
 
-    @functools.lru_cache(maxsize=None)
-    def split(a: int, b: int) -> int:
-        best, arg = None, a
-        for m in range(a, b):
-            c = ((size(a, m) - size(a, b)) + cost(a, m)
-                 + (size(m + 1, b) - size(a, b)) + cost(m + 1, b))
-            if best is None or c < best:
-                best, arg = c, m
-        return arg
 
-    def build(a: int, b: int) -> PlanNode:
-        if a == b:
-            return PlanNode((a, b), [])
-        m = split(a, b)
-        return PlanNode((a, b), [build(a, m), build(m + 1, b)])
-
-    return build(i, j)
+def _resolve_last(j: int | None, n: int | None) -> int:
+    if j is None:
+        if n is None:
+            raise ValueError("pass either j= or n=")
+        j = n - 1
+    return j
 
 
 def bisection_plan(i: int = 0, j: int | None = None, *, n: int | None = None) -> PlanNode:
     """Balanced bisection heuristic (no size table needed)."""
-    if j is None:
-        j = n - 1
+    j = _resolve_last(j, n)
     def build(a: int, b: int) -> PlanNode:
         if a == b:
             return PlanNode((a, b), [])
@@ -131,8 +146,7 @@ def bisection_plan(i: int = 0, j: int | None = None, *, n: int | None = None) ->
 
 
 def direct_hop_plan(i: int = 0, j: int | None = None, *, n: int | None = None) -> PlanNode:
-    if j is None:
-        j = n - 1
+    j = _resolve_last(j, n)
     return PlanNode((i, j), [PlanNode((k, k), []) for k in range(i, j + 1)]) \
         if i != j else PlanNode((i, i), [])
 
@@ -156,6 +170,10 @@ class WorkSharingRun:
     hop_stats: list[StreamStats]
     wall_s: float
     added_edges: int
+    # (valid lanes, lane_bucket) per batched launch — what actually ran,
+    # for lanes-per-device / padding reporting. Empty on sequential runs.
+    lane_layout: "list[tuple[int, int]]" = dataclasses.field(
+        default_factory=list)
 
 
 def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
@@ -235,21 +253,28 @@ def plan_levels(plan: PlanNode) -> list[list[tuple[int, PlanNode]]]:
         cur = [c for _, c in nxt]
 
 
-def _shard_snapshot_axis(mesh, values, parent, blocks):
+def _shard_snapshot_axis(mesh, values, parent, blocks, lane_valid):
     """Place the lane (snapshot) axis over the mesh's ``data`` axis.
 
-    Returns (values, parent, blocks, sharded): a level whose lane count does
-    not divide the device count stays replicated (sharded=False) — the
-    caller surfaces that so "--shard" can't silently mean "replicated".
+    Callers bucket the lane axis to a ``lane_bucket`` count (pow2, divisible
+    by the ``data`` extent) before arriving here, so a mesh launch ALWAYS
+    shards — there is no replicated fallback. ``lane_valid`` rides along so
+    the mask is placed lane-aligned with the states it gates.
     """
-    if mesh is None or values.shape[0] % mesh.shape["data"]:
-        return values, parent, blocks, False
+    if mesh is None:
+        return values, parent, blocks, lane_valid
+    if values.shape[0] % mesh.shape["data"]:
+        raise ValueError(
+            f"lane axis of {values.shape[0]} does not divide the "
+            f"{mesh.shape['data']}-device data axis — callers must bucket "
+            "lane counts with lane_bucket() before sharding")
     row = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     values = jax.device_put(values, row)
     parent = jax.device_put(parent, row)
+    lane_valid = jax.device_put(lane_valid, row)
     blocks = tuple(EdgeBlock(*(jax.device_put(a, row) for a in b))
                    for b in blocks)
-    return values, parent, blocks, True
+    return values, parent, blocks, lane_valid
 
 
 def run_plan_batched(
@@ -280,7 +305,11 @@ def run_plan_batched(
     frontier is seeded from the hop Δ only (``seed_blocks``), matching the
     sequential seeding and its edge-work accounting.
 
-    On a mesh, the snapshot axis shards over ``data`` (see launch/evolve.py).
+    Each level's lane count pads to ``lane_bucket(lanes, data_extent)``:
+    trailing masked lanes carry empty (all-sentinel) Δs and inert state
+    copies, and only valid lanes are gathered back into ``results``. On a
+    mesh the bucketed snapshot axis therefore ALWAYS shards over ``data``
+    (see launch/evolve.py) — no lane count triggers replicated execution.
 
     ``gated`` stays exact here but buys no skip: inside vmap the block gate's
     ``lax.cond`` lowers to a select that relaxes every block for every lane.
@@ -294,39 +323,45 @@ def run_plan_batched(
 
     results: dict[int, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
+    lane_layout: list[tuple[int, int]] = []
     if not plan.children:
         results[plan.window[0]] = base.values
 
     apex_window = plan.window
     n = store.num_nodes
+    data_extent = mesh.shape["data"] if mesh is not None else 1
     prev_nodes = [plan]
     prev_values = base.values[None]
     prev_parent = base.parent[None]
     for level in plan_levels(plan):
         t0 = time.perf_counter()
+        lanes = len(level)
+        bucket = lane_bucket(lanes, data_extent)
+        lane_layout.append((lanes, bucket))
         hop_stacked = store.delta_stack(
-            [(prev_nodes[pi].window, c.window) for pi, c in level])
+            [(prev_nodes[pi].window, c.window) for pi, c in level],
+            num_lanes=bucket)
         if any(prev_nodes[pi].window != apex_window for pi, _ in level):
             prefix_stacked = store.delta_stack(
-                [(apex_window, prev_nodes[pi].window) for pi, _ in level])
+                [(apex_window, prev_nodes[pi].window) for pi, _ in level],
+                num_lanes=bucket)
             delta_blocks = (prefix_stacked, hop_stacked)
         else:
             delta_blocks = (hop_stacked,)   # level 1: parents ARE the apex
 
-        values, parent = gather_lane_states(prev_values, prev_parent,
-                                            [pi for pi, _ in level])
-        values, parent, delta_blocks, sharded = _shard_snapshot_axis(
-            mesh, values, parent, delta_blocks)
-        if mesh is not None and not sharded:
-            warnings.warn(
-                f"run_plan_batched: level of {len(level)} lanes does not "
-                f"divide the {mesh.shape['data']}-device data axis; running "
-                "replicated (ROADMAP: pow2 lane bucketing)", stacklevel=2)
+        # Masked padding lanes re-run lane 0's parent state over an empty Δ:
+        # no frontier is ever seeded, values stay an inert copy, and
+        # lane_valid zeroes them out of the work accounting.
+        lane_map = [pi for pi, _ in level] + [0] * (bucket - lanes)
+        values, parent = gather_lane_states(prev_values, prev_parent, lane_map)
+        lane_valid = jnp.arange(bucket) < lanes
+        values, parent, delta_blocks, lane_valid = _shard_snapshot_axis(
+            mesh, values, parent, delta_blocks, lane_valid)
         res = incremental_additions_batched(
             n, semiring, values, parent,
             shared_blocks=tuple(apex_view.blocks), delta_blocks=delta_blocks,
             max_iters=max_iters, track_parents=track_parents, gated=gated,
-            seed_blocks=(delta_blocks[-1],))
+            seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
         res.values.block_until_ready()
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(jnp.sum(res.edge_work)),
@@ -339,4 +374,4 @@ def run_plan_batched(
 
     return WorkSharingRun(results, base_stats, hop_stats,
                           time.perf_counter() - t_all,
-                          plan_added_edges(store, plan))
+                          plan_added_edges(store, plan), lane_layout)

@@ -30,8 +30,12 @@ tests/test_window.py):
   order-free. Both match a from-scratch fixpoint on each window's common
   graph up to float tolerance.
 * **Shape-bucketing invariant.** The stacked slide Δ has shape
-  ``(num_windows, pow2 bucket of the widest lane)`` — jit traces are keyed
-  on the bucket, never on exact ragged Δ sizes.
+  ``(pow2 lane bucket, pow2 width bucket)``: the window-lane axis pads to
+  ``lane_bucket(num_windows, data_extent)`` with trailing masked lanes
+  (all-sentinel Δ, anchor-state copy, ``lane_valid=False``, zero
+  work/iterations), so jit traces are keyed on buckets alone and any
+  window count shards over a ``data`` mesh — the replicated fallback (and
+  its UserWarning) no longer exists.
 * **Degenerate cases.** A single window equal to the anchor is legal: its
   Δ is empty, the seed sweep finds no improvements, and the anchor state
   is returned unchanged. Likewise ``width == num_snapshots`` yields one
@@ -44,13 +48,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 
 import jax.numpy as jnp
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
 from repro.core.trigrid import _anchor_base, _shard_snapshot_axis
+from repro.graph.edgeset import lane_bucket
 from repro.graph.engine import (
     gather_lane_states,
     incremental_additions,
@@ -101,6 +105,9 @@ class WindowSlideRun:
     hop_stats: list[StreamStats]        # per-window (seq) or 1 launch (batched)
     wall_s: float
     added_edges: int                    # total slide-Δ volume streamed
+    # (valid lanes, lane_bucket) of the batched launch; empty when sequential
+    lane_layout: "list[tuple[int, int]]" = dataclasses.field(
+        default_factory=list)
 
 
 def _slide_added_edges(store: SnapshotStore, windows: list[Window],
@@ -188,10 +195,12 @@ def run_window_slide_batched(
 
     The anchor state broadcasts to all window lanes
     (``gather_lane_states`` with an all-zeros lane map), the per-window
-    slide Δs stack shape-bucketed (``SnapshotStore.slide_stack``), and one
-    ``incremental_additions_batched`` call re-converges every window. On a
-    mesh the window-lane axis shards over ``data`` exactly like the TG
-    executor's snapshot axis (``launch/evolve.py --shard --window-batch``).
+    slide Δs stack shape-bucketed (``SnapshotStore.slide_stack``, lane axis
+    padded to ``lane_bucket(num_windows, data_extent)`` with masked inert
+    lanes), and one ``incremental_additions_batched`` call re-converges
+    every window. On a mesh the bucketed window-lane axis ALWAYS shards
+    over ``data`` exactly like the TG executor's snapshot axis
+    (``launch/evolve.py --shard --window-batch``).
     """
     t_all = time.perf_counter()
     windows, anchor = _resolve(store, width, windows, step, start, anchor)
@@ -200,22 +209,23 @@ def run_window_slide_batched(
         track_parents)
 
     t0 = time.perf_counter()
-    stacked = store.slide_stack(windows, anchor)
+    data_extent = mesh.shape["data"] if mesh is not None else 1
+    bucket = lane_bucket(len(windows), data_extent)
+    stacked = store.slide_stack(windows, anchor, num_lanes=bucket)
+    # The anchor state broadcasts to every lane, masked padding lanes
+    # included: their Δ is all-sentinel, so they stay inert copies and
+    # lane_valid zeroes them out of the work accounting.
     values, parent = gather_lane_states(base.values[None], base.parent[None],
-                                        [0] * len(windows))
+                                        [0] * bucket)
+    lane_valid = jnp.arange(bucket) < len(windows)
     delta_blocks = (stacked,)
-    values, parent, delta_blocks, sharded = _shard_snapshot_axis(
-        mesh, values, parent, delta_blocks)
-    if mesh is not None and not sharded:
-        warnings.warn(
-            f"run_window_slide_batched: {len(windows)} window lanes do not "
-            f"divide the {mesh.shape['data']}-device data axis; running "
-            "replicated (ROADMAP: pow2 lane bucketing)", stacklevel=2)
+    values, parent, delta_blocks, lane_valid = _shard_snapshot_axis(
+        mesh, values, parent, delta_blocks, lane_valid)
     res = incremental_additions_batched(
         store.num_nodes, semiring, values, parent,
         shared_blocks=tuple(anchor_view.blocks), delta_blocks=delta_blocks,
         max_iters=max_iters, track_parents=track_parents, gated=gated,
-        seed_blocks=(delta_blocks[-1],))
+        seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
     res.values.block_until_ready()
     hop_stats = [StreamStats(time.perf_counter() - t0,
                              float(jnp.sum(res.edge_work)),
@@ -223,4 +233,5 @@ def run_window_slide_batched(
     results = {wnd: res.values[lane] for lane, wnd in enumerate(windows)}
     return WindowSlideRun(results, anchor, base_stats, hop_stats,
                           time.perf_counter() - t_all,
-                          _slide_added_edges(store, windows, anchor))
+                          _slide_added_edges(store, windows, anchor),
+                          [(len(windows), bucket)])

@@ -15,7 +15,13 @@ from repro.graph.semiring import (
     VITERBI,
     ALL_SEMIRINGS,
 )
-from repro.graph.edgeset import EdgeBlock, EdgeView, PAD_SRC, concat_views
+from repro.graph.edgeset import (
+    EdgeBlock,
+    EdgeView,
+    PAD_SRC,
+    concat_views,
+    lane_bucket,
+)
 from repro.graph.engine import (
     FixpointResult,
     init_values,
@@ -39,6 +45,7 @@ __all__ = [
     "EdgeView",
     "PAD_SRC",
     "concat_views",
+    "lane_bucket",
     "FixpointResult",
     "init_values",
     "relax_sweep",

@@ -49,6 +49,30 @@ def _pad_to(n: int, granule: int, pow2: bool = False) -> int:
     return ((n + granule - 1) // granule) * granule
 
 
+def lane_bucket(num_lanes: int, data_extent: int = 1) -> int:
+    """Lane-axis bucket: pow2 lanes-per-device times ``data_extent``.
+
+    The batched executors pad their lane (snapshot/window) axis to this
+    count so (a) jit trace keys depend only on ``(lane bucket, width
+    bucket)`` — not the exact lane count of a level — and (b) the lane axis
+    always divides a ``data`` mesh axis of ``data_extent`` devices, so a
+    mesh launch shards instead of falling back to replicated execution.
+    For pow2 device counts (the only shapes real meshes use) the bucket is
+    itself pow2. Padding is < 2x ``num_lanes`` whenever the level has at
+    least one lane per device; below that the bucket is exactly
+    ``data_extent`` — the minimum divisible lane count.
+    """
+    if num_lanes < 1:
+        raise ValueError(f"need at least one lane, got {num_lanes}")
+    if data_extent < 1:
+        raise ValueError(f"data_extent must be >= 1, got {data_extent}")
+    per_device = -(-num_lanes // data_extent)
+    b = 1
+    while b < per_device:
+        b *= 2
+    return b * data_extent
+
+
 def pad_edges(
     src: np.ndarray,
     dst: np.ndarray,
@@ -136,6 +160,7 @@ def stack_delta_blocks(
     granule: int = DEFAULT_GRANULE,
     pad_pow2: bool = True,
     sort_by_dst: bool = True,
+    num_lanes: int | None = None,
 ) -> EdgeBlock:
     """Stack ragged per-lane edge lists into one EdgeBlock with a leading
     lane (snapshot) axis.
@@ -146,15 +171,30 @@ def stack_delta_blocks(
     ``(num_lanes, bucket)`` and not on the exact ragged sizes. This is the
     shared stacking path of the batched executors (level-synchronous TG and
     Direct-Hop): sibling Δ-batches become lanes of a single launch.
+
+    ``num_lanes`` (default: ``len(edge_lists)``) pads the LANE axis too:
+    trailing masked lanes are all-sentinel (empty Δ — every edge is a
+    padding edge), so they relax nothing, seed no frontier, and contribute
+    zero ``edge_work``. The batched executors pass a ``lane_bucket`` here so
+    the lane axis always divides the mesh's ``data`` extent; the matching
+    validity mask is ``lane index < len(edge_lists)`` (see
+    ``graph/engine.py`` ``lane_valid``).
     """
     if not edge_lists:
         raise ValueError("stack_delta_blocks needs at least one lane")
+    if num_lanes is not None and num_lanes < len(edge_lists):
+        raise ValueError(f"num_lanes={num_lanes} < {len(edge_lists)} lanes")
     width = _pad_to(max(np.asarray(s).shape[0] for s, _, _ in edge_lists),
                     granule, pow2=pad_pow2)
     # granule=width + pad_pow2=False pads each lane to exactly `width`.
     blocks = [make_block(s, d, w, num_nodes, granule=width,
                          sort_by_dst=sort_by_dst, pad_pow2=False)
               for s, d, w in edge_lists]
+    if num_lanes is not None and num_lanes > len(blocks):
+        empty = np.empty(0, np.int32)
+        masked = make_block(empty, empty, None, num_nodes, granule=width,
+                            sort_by_dst=sort_by_dst, pad_pow2=False)
+        blocks.extend([masked] * (num_lanes - len(blocks)))
     return EdgeBlock(jnp.stack([b.src for b in blocks]),
                      jnp.stack([b.dst for b in blocks]),
                      jnp.stack([b.w for b in blocks]))

@@ -252,7 +252,8 @@ def gather_lane_states(values: jnp.ndarray, parent: jnp.ndarray,
 
 def batched_incremental(semiring, num_nodes, max_iters,
                         values, parent, shared_blocks, delta_blocks,
-                        track_parents=True, gated=False, seed_blocks=None):
+                        track_parents=True, gated=False, seed_blocks=None,
+                        lane_valid=None):
     """vmapped incremental additions (unjitted; launch/dryrun jits with shardings).
 
     values/parent: [S, N]; shared_blocks: tuple of EdgeBlock (broadcast);
@@ -264,6 +265,13 @@ def batched_incremental(semiring, num_nodes, max_iters,
     seeds only from the lane's final parent→child hop, matching the
     sequential executor's per-hop seeding (and its edge-work accounting)
     exactly.
+
+    ``lane_valid`` ([S] bool, default: all valid): marks padding lanes the
+    executors appended to reach a ``lane_bucket`` (pow2, mesh-divisible)
+    lane count. A masked lane carries an all-sentinel Δ and a copied anchor
+    state, so its values stay inert by construction; the mask additionally
+    zeroes its ``iterations``/``edge_work`` so work accounting stays
+    bit-equal to the sequential executors regardless of padding.
     """
     seed = delta_blocks if seed_blocks is None else seed_blocks
 
@@ -278,18 +286,24 @@ def batched_incremental(semiring, num_nodes, max_iters,
         return FixpointResult(res.values, res.parent, res.iterations + 1,
                               res.edge_work + seed_work)
 
-    return jax.vmap(one, in_axes=(0, 0, 0, 0))(values, parent,
-                                               delta_blocks, seed)
+    res = jax.vmap(one, in_axes=(0, 0, 0, 0))(values, parent,
+                                              delta_blocks, seed)
+    if lane_valid is None:
+        return res
+    return FixpointResult(
+        res.values, res.parent,
+        jnp.where(lane_valid, res.iterations, 0),
+        jnp.where(lane_valid, res.edge_work, jnp.float32(0)))
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
 def _batched_incremental_jit(semiring, num_nodes, max_iters,
                              values, parent, shared_blocks, delta_blocks,
                              track_parents=True, gated=False,
-                             seed_blocks=None):
+                             seed_blocks=None, lane_valid=None):
     return batched_incremental(semiring, num_nodes, max_iters,
                                values, parent, shared_blocks, delta_blocks,
-                               track_parents, gated, seed_blocks)
+                               track_parents, gated, seed_blocks, lane_valid)
 
 
 def incremental_additions_batched(
@@ -303,9 +317,10 @@ def incremental_additions_batched(
     track_parents: bool = True,
     gated: bool = False,
     seed_blocks: Blocks | None = None,
+    lane_valid: jnp.ndarray | None = None,  # [S] bool; False = padding lane
 ) -> FixpointResult:
     return _batched_incremental_jit(semiring, num_nodes, max_iters,
                                     values, parent, tuple(shared_blocks),
                                     tuple(delta_blocks), track_parents, gated,
                                     None if seed_blocks is None
-                                    else tuple(seed_blocks))
+                                    else tuple(seed_blocks), lane_valid)

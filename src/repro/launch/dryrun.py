@@ -25,6 +25,22 @@ from repro.configs import ARCH_IDS, make_cell, shapes_for          # noqa: E402
 from repro.configs.base import with_sharding, named                # noqa: E402
 from repro.launch.mesh import make_production_mesh                 # noqa: E402
 
+def _mesh_context(mesh):
+    """jax.sharding.set_mesh when available (jax >= 0.5), else the legacy
+    Mesh context manager — the cells pass explicit NamedShardings either way."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict (jax >= 0.5) or a one-element
+    list of dicts (older releases); normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else None
+    return cost or {}
+
+
 # -- collective-bytes extraction from lowered/compiled HLO --------------------
 
 _COLL_RE = re.compile(
@@ -74,14 +90,14 @@ def dryrun_cell(arch: str, shape: str, mesh, verbose: bool = True) -> dict:
 
     jitted = jax.jit(cell.fn, out_shardings=out_shardings,
                      donate_argnums=cell.donate)
-    with jax.sharding.set_mesh(mesh):
+    with _mesh_context(mesh):
         lowered = jitted.lower(*args)
         t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
     t_all = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
 
     rec = {
@@ -89,8 +105,8 @@ def dryrun_cell(arch: str, shape: str, mesh, verbose: bool = True) -> dict:
         "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_all - t_lower, 2),
-        "flops": cost.get("flops", 0.0) if cost else 0.0,
-        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
         "collective_bytes": coll,
         "mem_per_device": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -99,12 +115,16 @@ def dryrun_cell(arch: str, shape: str, mesh, verbose: bool = True) -> dict:
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
         },
     }
+    if cell.meta:
+        rec["lane_axis"] = cell.meta
     if verbose:
         print(f"[dryrun] {cell.name} mesh={rec['mesh']} "
               f"lower={rec['lower_s']}s compile={rec['compile_s']}s")
         print(f"  memory_analysis: {mem}")
         print(f"  flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
               f"collectives={ {k: f'{v:.2e}' for k, v in coll.items()} }")
+        if cell.meta:
+            print(f"  lane_axis: {cell.meta}")
     return rec
 
 
@@ -168,18 +188,18 @@ def _dryrun_prepared(cell, mesh) -> dict:
     out_shardings = named(mesh, cell.out_specs) if cell.out_specs is not None else None
     jitted = jax.jit(cell.fn, out_shardings=out_shardings,
                      donate_argnums=cell.donate)
-    with jax.sharding.set_mesh(mesh):
+    with _mesh_context(mesh):
         compiled = jitted.lower(*args).compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     rec = {
         "cell": cell.name,
         "mesh": dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names))),
         "lower_s": None,
         "compile_s": round(time.perf_counter() - t0, 2),
-        "flops": cost.get("flops", 0.0) if cost else 0.0,
-        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
         "collective_bytes": coll,
         "mem_per_device": {
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -188,10 +208,16 @@ def _dryrun_prepared(cell, mesh) -> dict:
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
         },
     }
+    if cell.meta:
+        # lane-bucketed cells (commongraph): lanes-per-device + padding
+        # overhead of the pow2 snapshot-axis bucket (graph/edgeset.py).
+        rec["lane_axis"] = cell.meta
     print(f"[dryrun] {cell.name} mesh={rec['mesh']} compile={rec['compile_s']}s")
     print(f"  memory_analysis: {mem}")
     print(f"  flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
           f"collectives={ {k: f'{v:.2e}' for k, v in coll.items()} }")
+    if cell.meta:
+        print(f"  lane_axis: {cell.meta}")
     return rec
 
 

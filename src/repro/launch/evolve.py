@@ -48,6 +48,26 @@ from repro.graph.semiring import ALL_SEMIRINGS
 from repro.launch.mesh import make_snapshot_mesh
 
 
+def _shard_report(mesh, label: str,
+                  lane_layout: "list[tuple[int, int]]") -> None:
+    """Per-launch lane placement, from the (lanes, bucket) pairs the batched
+    executor recorded for what it actually launched: every lane axis buckets
+    to a pow2 count divisible by the data axis, so each launch shards — the
+    padding overhead is the price of never running replicated."""
+    extent = mesh.shape["data"]
+    if not lane_layout:
+        print(f"[evolve]   shard[{label}]: no batched launches "
+              "(single-snapshot leaf plan)")
+        return
+    lanes = [c for c, _ in lane_layout]
+    buckets = [b for _, b in lane_layout]
+    pad = sum(buckets) / sum(lanes) - 1
+    print(f"[evolve]   shard[{label}]: lanes {lanes} -> buckets "
+          f"{buckets} over {extent} devices "
+          f"({[b // extent for b in buckets]} lanes/device, "
+          f"padding overhead {pad:.0%})")
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--nodes", type=int, default=20_000)
@@ -98,6 +118,8 @@ def main(argv=None):
     dhb = run_direct_hop_batched(store, sr, args.source, mesh=mesh)
     print(f"[evolve] Direct-Hop (batched):  {dhb.wall_s:.2f}s  "
           f"speedup {t_ks / dhb.wall_s:.2f}x")
+    if mesh is not None:
+        _shard_report(mesh, "dhb", dhb.lane_layout)
 
     plan = optimal_plan(store)
     ws = run_plan(store, plan, sr, args.source)
@@ -111,6 +133,8 @@ def main(argv=None):
           f"speedup {t_ks / wsb.wall_s:.2f}x  "
           f"({len(wsb.hop_stats)} level launches vs "
           f"{len(ws.hop_stats)} sequential hops)")
+    if mesh is not None:
+        _shard_report(mesh, "wsb", wsb.lane_layout)
 
     if args.window is not None:
         windows = slide_windows(args.snapshots, args.window,
@@ -128,6 +152,8 @@ def main(argv=None):
             print(f"[evolve] Window slide (batch): {slb.wall_s:.2f}s  "
                   f"speedup {sl.wall_s / slb.wall_s:.2f}x  "
                   f"(1 stacked launch vs {len(sl.hop_stats)} hops)")
+            if mesh is not None:
+                _shard_report(mesh, "windows", slb.lane_layout)
 
     if args.verify:
         for i in range(args.snapshots):

@@ -28,3 +28,30 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def forced_cpu_mesh_run():
+    """Run a Python snippet in a subprocess with 4 forced CPU devices.
+
+    The multi-device sharding tests need XLA_FLAGS set before jax first
+    initializes, which the in-process suite must not do (see the module
+    docstring) — so they ship their assertions to a child interpreter and
+    assert on its exit status. Returns the child's stdout.
+    """
+    import os
+    import subprocess
+
+    def run(script: str) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.run([sys.executable, "-c", script], env=env,
+                              capture_output=True, text=True, timeout=540)
+        assert proc.returncode == 0, (
+            f"forced-mesh subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+        return proc.stdout
+
+    return run

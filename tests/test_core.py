@@ -124,3 +124,49 @@ def test_slide_block_rejects_non_nested():
     s = SnapshotStore(seq, granule=64)
     with pytest.raises(ValueError):
         s.slide_block((1, 4), anchor=(2, 3))  # anchor not a super-window
+
+
+def test_window_keys_long_sequence_iterative():
+    """A cold T(0, n−1) on a 3000-snapshot keys-only sequence must not hit
+    the recursion limit (the old window_keys recursed once per snapshot)."""
+    import sys
+
+    from repro.graph import EvolvingSequence
+    n_snap = 3000
+    common = np.arange(64, dtype=np.int64)
+    snaps = tuple(np.sort(np.concatenate([common, [np.int64(64 + k % 7)]]))
+                  for k in range(n_snap))
+    store = SnapshotStore(EvolvingSequence(num_nodes=100, snapshot_keys=snaps,
+                                           additions=(), deletions=()))
+    assert n_snap > sys.getrecursionlimit() // 2
+    np.testing.assert_array_equal(store.window_keys(0, n_snap - 1), common)
+    # intermediate prefixes are cached by the left-to-right build
+    np.testing.assert_array_equal(store.window_keys(0, n_snap // 2), common)
+
+
+def test_optimal_plan_is_nonrecursive():
+    """Bottom-up interval DP: the plan (cost, split, AND tree build) must
+    not consume stack proportional to the snapshot count."""
+    import inspect
+    import sys
+    seq = make_evolving_sequence(80, 400, 40, 20, seed=9)
+    store = SnapshotStore(seq, granule=64)
+    store.window_keys(0, 39)  # pre-warm the prefix cache outside the limit
+    limit = sys.getrecursionlimit()
+    try:
+        sys.setrecursionlimit(len(inspect.stack()) + 30)
+        plan = optimal_plan(store)
+    finally:
+        sys.setrecursionlimit(limit)
+    assert sorted(w[0] for w in plan.leaves()) == list(range(40))
+
+
+def test_plan_constructors_require_j_or_n():
+    """j=None + n=None used to crash with an opaque TypeError on n - 1."""
+    with pytest.raises(ValueError, match="either j= or n="):
+        bisection_plan()
+    with pytest.raises(ValueError, match="either j= or n="):
+        direct_hop_plan()
+    # explicit j (or n) still works, including the i == j degenerate plan
+    assert bisection_plan(j=3).window == (0, 3)
+    assert direct_hop_plan(n=1).window == (0, 0)

@@ -134,6 +134,55 @@ def test_window_slide_on_snapshot_mesh():
                                       np.asarray(seq.results[wnd]))
 
 
+_FORCED_MESH_SLIDE_SCRIPT = """
+import warnings
+
+import numpy as np
+import jax
+
+assert len(jax.devices()) == 4, jax.devices()
+
+from repro.core import SnapshotStore, run_window_slide, \\
+    run_window_slide_batched, slide_windows
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+from repro.launch.mesh import make_snapshot_mesh
+
+store = SnapshotStore(make_evolving_sequence(150, 900, 5, 120, seed=11),
+                      granule=64)
+sr = ALL_SEMIRINGS["sssp"]
+mesh = make_snapshot_mesh()
+assert mesh.shape["data"] == 4
+
+windows = slide_windows(5, 3)
+assert len(windows) == 3 and len(windows) % 4  # 3 lanes do not divide 4
+seq_run = run_window_slide(store, sr, 0, 3, track_parents=True)
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    bat_run = run_window_slide_batched(store, sr, 0, 3, track_parents=True,
+                                       mesh=mesh)
+ours = [w for w in caught
+        if issubclass(w.category, UserWarning) and "repro" in w.filename]
+assert not ours, [str(w.message) for w in ours]
+for wnd in windows:
+    np.testing.assert_array_equal(np.asarray(bat_run.results[wnd]),
+                                  np.asarray(seq_run.results[wnd]),
+                                  err_msg=f"window {wnd}")
+seq_work = sum(h.edge_work for h in seq_run.hop_stats)
+bat_work = sum(h.edge_work for h in bat_run.hop_stats)
+assert abs(seq_work - bat_work) < 1e-6, (seq_work, bat_work)
+print("MESH-OK")
+"""
+
+
+def test_window_slide_shards_on_forced_multidevice_mesh(forced_cpu_mesh_run):
+    """A 3-window slide on a real 4-device data mesh: the window-lane axis
+    buckets to 4 (one masked lane), shards without any replicated-fallback
+    warning, and stays bit-identical to the sequential slide with unchanged
+    edge-work totals."""
+    assert "MESH-OK" in forced_cpu_mesh_run(_FORCED_MESH_SLIDE_SCRIPT)
+
+
 # -- SnapshotStore block-cache eviction ---------------------------------------
 
 def _stack_arrays(blk):
@@ -185,6 +234,30 @@ def test_store_explicit_release_by_family():
     rest = store.release()                           # drop everything
     assert store.cached_nbytes == 0 and not store._blocks
     assert rest > 0
+
+
+def test_cache_put_overwrite_subtracts_displaced_bytes():
+    """Re-inserting an existing tag must displace the old entry's bytes:
+    cached_nbytes always equals the sum over cached blocks, so the LRU
+    budget never sees phantom bytes (which caused spurious evictions)."""
+    store = _store(seed=7)
+
+    def actual():
+        return sum(_block_nbytes(b) for b in store._blocks.values())
+
+    for _ in range(3):  # repeated put/release cycles
+        store.window_block(0, 5)
+        blk = store.slide_stack(slide_windows(6, 2))
+        assert store.cached_nbytes == actual()
+        # overwrite the same tag directly (the drift the LRU used to suffer)
+        tag = next(t for t in store._blocks if t[0] == "DS")
+        before = store.cached_nbytes
+        store._cache_put(tag, blk)
+        assert store.cached_nbytes == before == actual()
+        store.release(("DS",))
+        assert store.cached_nbytes == actual()
+    store.release()
+    assert store.cached_nbytes == 0
 
 
 def test_window_slide_results_unchanged_under_eviction():
