@@ -34,7 +34,6 @@ Run standalone (own process — the XLA flag must precede jax init):
 import argparse          # noqa: E402
 import dataclasses       # noqa: E402
 import json              # noqa: E402
-import math              # noqa: E402
 import sys               # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -43,7 +42,7 @@ import jax               # noqa: E402
 
 from repro.configs import ARCH_IDS, get_arch, shapes_for              # noqa: E402
 from repro.configs.base import named, with_sharding                   # noqa: E402
-from repro.launch.dryrun import collective_bytes, dryrun_cell         # noqa: E402
+from repro.launch.dryrun import collective_bytes                      # noqa: E402
 from repro.launch.mesh import make_production_mesh                    # noqa: E402
 
 PEAK_FLOPS = 197e12

@@ -2,12 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV per the harness contract, and
 writes one machine-readable ``BENCH_<bench>.json`` per bench into
-``--out-dir`` (default: current directory) — the schema is documented in
-docs/BENCHMARKS.md. Scales are container-sized (DESIGN.md §7.4); pass
---full for larger graphs, or --smoke for the tiny-graph tier CI runs on
-every push (each bench still asserts its own correctness at smoke scale,
-and the JSON artifacts give PRs a perf trajectory to diff against — the
-committed seed baseline lives in benchmarks/baselines/).
+``--out-dir`` (default: current directory; created — parents included — if
+missing, so fresh CI runners and first local runs never trip on it) — the
+schema is documented in docs/BENCHMARKS.md. Scales are container-sized
+(DESIGN.md §7.4); pass --full for larger graphs, or --smoke for the
+tiny-graph tier CI runs on every push (each bench still asserts its own
+correctness at smoke scale).
+
+Schema v2: a row may carry an ``exact`` dict of machine-independent fields
+(edge/work counts, verification booleans, lane counts). The CI
+perf-regression gate (scripts/bench_gate.py) diffs each run's JSON against
+the committed smoke baselines in benchmarks/baselines/smoke/ — wall-time
+within a tolerance factor, ``exact`` fields strictly equal.
 
     PYTHONPATH=src python -m benchmarks.run [--full | --smoke] \
         [--only BENCH] [--out-dir DIR]
@@ -21,7 +27,7 @@ import pathlib
 import sys
 import time
 
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2
 
 
 def bench_table1(scale: str):
@@ -40,10 +46,12 @@ def bench_table1(scale: str):
         assert r.verified, f"table1 row {r.graph}/{r.alg} failed verification"
         out.append((f"table1/{r.graph}/{r.alg}/ks", r.ks_time_s * 1e6,
                     f"dh={r.dh_speedup:.2f}x ws={r.ws_speedup:.2f}x "
-                    f"dhb={r.dhb_speedup:.2f}x"))
+                    f"dhb={r.dhb_speedup:.2f}x",
+                    {"verified": True}))
     spe = [r.ws_speedup for r in rows]
     out.append(("table1/summary", dt * 1e6,
-                f"ws-speedup-range={min(spe):.2f}x..{max(spe):.2f}x"))
+                f"ws-speedup-range={min(spe):.2f}x..{max(spe):.2f}x",
+                {"rows": len(rows)}))
     return out
 
 
@@ -57,7 +65,9 @@ def bench_del_vs_add(scale: str):
         r = run_del_vs_add(alg=alg, n=n, e=e, k=k, repeats=repeats)
         assert r["verified"], f"del_vs_add {alg} verification failed"
         out.append((f"del_vs_add/{alg}", r["t_del_s"] * 1e6,
-                    f"del/add-time={r['ratio_time']:.2f}x work={r['ratio_work']:.2f}x"))
+                    f"del/add-time={r['ratio_time']:.2f}x work={r['ratio_work']:.2f}x",
+                    {"verified": True,
+                     "ratio_work": round(float(r["ratio_work"]), 4)}))
     return out
 
 
@@ -77,7 +87,9 @@ def bench_tg_sharing(scale: str):
                     f"saving={r['optimal_saving']:.1%} "
                     f"batched-speedup dh={r['dh_bat_speedup']:.2f}x "
                     f"bisect={r['bisect_bat_speedup']:.2f}x "
-                    f"opt={r['optimal_bat_speedup']:.2f}x"))
+                    f"opt={r['optimal_bat_speedup']:.2f}x",
+                    {"dh_edges": int(r["dh_edges"]),
+                     "optimal_edges": int(r["optimal_edges"])}))
     return out
 
 
@@ -103,7 +115,8 @@ def bench_kernels(scale: str):
         t0 = time.perf_counter()
         edge_relax_ref(vals, src, dst, w, op=op, num_nodes=n).block_until_ready()
         dt = time.perf_counter() - t0
-        out.append((f"kernels/edge_relax/{op}", dt * 1e6, "allclose=1"))
+        out.append((f"kernels/edge_relax/{op}", dt * 1e6, "allclose=1",
+                    {"allclose": True}))
     return out
 
 
@@ -119,7 +132,36 @@ def bench_window_slide(scale: str):
     for r in rows:
         out.append((f"window_slide/width{r['width']}", r["bat_s"] * 1e6,
                     f"lanes={r['lanes']} edges={r['added_edges']} "
-                    f"batched-speedup={r['bat_speedup']:.2f}x"))
+                    f"batched-speedup={r['bat_speedup']:.2f}x",
+                    {"lanes": int(r["lanes"]),
+                     "added_edges": int(r["added_edges"]),
+                     "edge_work": int(round(r["bat_work"]))}))
+    return out
+
+
+def bench_window_stream(scale: str):
+    from benchmarks.window_stream import run_window_stream_bench
+    widths, snaps, cw = {"smoke": ((2, 3), 6, 2),
+                         "default": ((3, 4), 12, 3),
+                         "full": ((4, 8), 24, 4)}[scale]
+    rows = run_window_stream_bench(widths=widths, snaps=snaps,
+                                   campaign_width=cw)
+    # bit-identity vs cold campaigns AND strictly-fewer-rebuilds are
+    # asserted inside run_window_stream_bench; a failure raises there
+    out = []
+    for r in rows:
+        out.append((f"window_stream/width{r['width']}", r["stream_s"] * 1e6,
+                    f"campaigns={r['campaigns']} "
+                    f"rebuilds={r['rebuilds_stream']}+{r['anchor_hops']}hops "
+                    f"vs cold {r['rebuilds_cold']} "
+                    f"speedup={r['stream_speedup']:.2f}x",
+                    {"campaigns": int(r["campaigns"]),
+                     "rebuilds_stream": int(r["rebuilds_stream"]),
+                     "anchor_hops": int(r["anchor_hops"]),
+                     "rebuilds_cold": int(r["rebuilds_cold"]),
+                     "added_edges": int(r["added_edges"]),
+                     "anchor_delta_edges": int(r["anchor_delta_edges"]),
+                     "edge_work": int(round(r["stream_work"]))}))
     return out
 
 
@@ -140,6 +182,7 @@ def bench_evolve(scale: str):
         run_plan_batched,
         run_window_slide,
         run_window_slide_batched,
+        run_window_stream_batched,
     )
     from repro.graph import make_evolving_sequence, run_to_fixpoint
     from repro.graph.semiring import ALL_SEMIRINGS
@@ -167,14 +210,22 @@ def bench_evolve(scale: str):
         ("wsb", lambda: run_plan_batched(store, plan, sr, 0)),
         ("window_seq", lambda: run_window_slide(store, sr, 0, width)),
         ("window_bat", lambda: run_window_slide_batched(store, sr, 0, width)),
+        # anchor cache released per run: times the streamed path (1 rebuild
+        # + incremental hops), not the all-hits replay
+        ("window_stream", lambda: (
+            store.release(("AS",)),
+            run_window_stream_batched(store, sr, 0, width,
+                                      campaign_width=2))[1]),
     ]
-    out = [("evolve/ks", t_ks * 1e6, f"snapshots={snaps} edges~{e}")]
+    out = [("evolve/ks", t_ks * 1e6, f"snapshots={snaps} edges~{e}",
+            {"snapshots": snaps})]
     runs = {}
     for name, fn in modes:
         dt, res = timed(fn)
         runs[name] = res
         out.append((f"evolve/{name}", dt * 1e6,
-                    f"speedup-vs-ks={t_ks / dt:.2f}x"))
+                    f"speedup-vs-ks={t_ks / dt:.2f}x",
+                    {"verified": True}))
     for i in range(snaps):
         ref = run_to_fixpoint(store.snapshot_view(i), sr, 0).values
         for name in ("dh", "dhb"):
@@ -188,6 +239,11 @@ def bench_evolve(scale: str):
     for wnd, vals in runs["window_bat"].results.items():
         np.testing.assert_array_equal(np.asarray(vals),
                                       np.asarray(runs["window_seq"].results[wnd]))
+    # the streamed campaigns anchor differently per campaign, yet the
+    # monotone fixpoint is unique — still bit-identical to the slide
+    for wnd, vals in runs["window_stream"].results.items():
+        np.testing.assert_array_equal(np.asarray(vals),
+                                      np.asarray(runs["window_seq"].results[wnd]))
     return out
 
 
@@ -196,15 +252,39 @@ BENCHES = {
     "del_vs_add": bench_del_vs_add,
     "tg_sharing": bench_tg_sharing,
     "window_slide": bench_window_slide,
+    "window_stream": bench_window_stream,
     "kernels": bench_kernels,
     "evolve": bench_evolve,
 }
 
 
+def ensure_out_dir(out_dir: pathlib.Path) -> pathlib.Path:
+    """Create ``out_dir`` (parents included) up front with a clear error.
+
+    Centralized so a fresh CI runner or first local run never trips on a
+    missing directory mid-run, and a path that collides with an existing
+    FILE fails immediately with an actionable message instead of at the
+    first JSON write.
+    """
+    try:
+        out_dir.mkdir(parents=True, exist_ok=True)
+    except (FileExistsError, NotADirectoryError) as exc:
+        raise SystemExit(
+            f"--out-dir {out_dir} collides with an existing file: {exc}")
+    return out_dir
+
+
 def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
                      rows, error: str | None) -> pathlib.Path:
-    """Emit BENCH_<bench>.json (schema: docs/BENCHMARKS.md)."""
-    out_dir.mkdir(parents=True, exist_ok=True)
+    """Emit BENCH_<bench>.json (schema v2: docs/BENCHMARKS.md).
+
+    Rows are ``(name, us_per_call, derived)`` or ``(name, us_per_call,
+    derived, exact)`` — ``exact`` holds the machine-independent fields
+    (edge/work counts, verification booleans) the regression gate
+    (scripts/bench_gate.py) compares strictly; wall times only ever get a
+    tolerance.
+    """
+    ensure_out_dir(out_dir)
     path = out_dir / f"BENCH_{bench}.json"
     path.write_text(json.dumps({
         "bench": bench,
@@ -212,8 +292,9 @@ def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
         "generated_unix": time.time(),
         "status": status,
         "error": error,
-        "rows": [{"name": n, "us_per_call": us, "derived": d}
-                 for n, us, d in rows],
+        "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2],
+                  "exact": r[3] if len(r) > 3 else {}}
+                 for r in rows],
     }, indent=2) + "\n")
     return path
 
@@ -231,6 +312,7 @@ def main(argv=None) -> int:
                    help="directory for the BENCH_<bench>.json files")
     args = p.parse_args(argv)
     scale = "full" if args.full else "smoke" if args.smoke else "default"
+    ensure_out_dir(args.out_dir)
 
     print("name,us_per_call,derived")
     ok = True

@@ -1,0 +1,117 @@
+"""Streaming slide campaigns: incremental anchor maintenance vs cold rebuilds.
+
+The window analogue of a streaming ingest: an advancing window sequence is
+consumed as campaigns of ``campaign_width`` windows
+(``run_window_stream_batched``, core/window.py). The streamed path maintains
+its anchor state incrementally — 1 from-scratch rebuild + one
+``incremental_additions`` hop per later campaign — while the cold baseline
+(``run_window_slide_batched`` per campaign, same anchors) rebuilds its
+anchor from the base snapshot every campaign. Both paths run with warm block
+caches and cold anchor caches after a compile warm-up, results are
+bit-compared per window each round, and the streamed path must perform
+STRICTLY FEWER anchor rebuilds — a benchmark row is also the acceptance
+check for the scheduler.
+
+    PYTHONPATH=src python -m benchmarks.window_stream [--smoke]
+
+``--smoke`` runs a tiny graph for a seconds-long local check; CI covers the
+same path via the bench job's ``benchmarks.run --smoke`` harness pass and
+diffs the emitted BENCH_window_stream.json against the committed smoke
+baseline (scripts/bench_gate.py; see docs/BENCHMARKS.md).
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import (
+    SnapshotStore,
+    run_window_slide_batched,
+    run_window_stream_batched,
+    slide_windows,
+)
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def run_window_stream_bench(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
+                            widths=(3, 4), campaign_width=3, step=1, seed=0,
+                            alg="sssp", source=0):
+    """Rows of {width, campaigns, stream/cold wall+work+rebuild counts}."""
+    sr = ALL_SEMIRINGS[alg]
+    seq = make_evolving_sequence(n, e, snaps, batch_changes, seed=seed)
+    store = SnapshotStore(seq)
+    rows = []
+    for width in widths:
+        windows = slide_windows(snaps, width, step=step)
+        # Warm-up: compiles traces and builds every block both paths touch.
+        run_window_stream_batched(store, sr, source, windows=windows,
+                                  campaign_width=campaign_width)
+        # Timed stream: warm blocks, cold anchors (the streaming scenario —
+        # block assembly is ingest-side, anchor state is the query side).
+        store.release(("AS",))
+        stream = run_window_stream_batched(store, sr, source, windows=windows,
+                                           campaign_width=campaign_width)
+        # Timed cold baseline: one slide launch per campaign with the SAME
+        # anchors; run_window_slide_batched never consults the anchor cache,
+        # so every campaign pays a from-scratch anchor fixpoint.
+        cold = [run_window_slide_batched(store, sr, source, windows=c,
+                                         anchor=a)
+                for c, a in zip(stream.campaigns, stream.anchors)]
+        for cold_run, campaign in zip(cold, stream.campaigns):
+            for wnd in campaign:
+                np.testing.assert_array_equal(
+                    np.asarray(stream.results[wnd]),
+                    np.asarray(cold_run.results[wnd]),
+                    err_msg=f"width {width} window {wnd}: stream != cold")
+        rebuilds_cold = len(cold)
+        assert stream.anchor_rebuilds < rebuilds_cold, (
+            f"width {width}: streamed path must rebuild strictly fewer "
+            f"anchors ({stream.anchor_rebuilds} vs {rebuilds_cold})")
+        stream_work = (sum(s.edge_work for s in stream.anchor_stats)
+                       + sum(s.edge_work for s in stream.hop_stats))
+        cold_work = sum(r.base_stats.edge_work
+                        + sum(s.edge_work for s in r.hop_stats)
+                        for r in cold)
+        cold_s = sum(r.wall_s for r in cold)
+        rows.append({
+            "width": width,
+            "campaign_width": campaign_width,
+            "campaigns": len(stream.campaigns),
+            "lanes": len(windows),
+            "stream_s": stream.wall_s,
+            "cold_s": cold_s,
+            "stream_speedup": cold_s / stream.wall_s,
+            "rebuilds_stream": stream.anchor_rebuilds,
+            "anchor_hops": stream.anchor_hops,
+            "rebuilds_cold": rebuilds_cold,
+            "added_edges": stream.added_edges,
+            "anchor_delta_edges": stream.anchor_delta_edges,
+            "stream_work": stream_work,
+            "cold_work": cold_work,
+        })
+    return rows
+
+
+SMOKE = dict(n=400, e=3_000, snaps=6, batch_changes=200, widths=(2, 3),
+             campaign_width=2)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny graph (CI smoke run)")
+    args = p.parse_args(argv)
+    rows = run_window_stream_bench(**(SMOKE if args.smoke else {}))
+    for r in rows:
+        print(f"width={r['width']:3d}  campaigns={r['campaigns']:3d}  "
+              f"rebuilds {r['rebuilds_stream']} (+{r['anchor_hops']} hops) "
+              f"vs cold {r['rebuilds_cold']}  "
+              f"stream {r['stream_s']:.3f}s  cold {r['cold_s']:.3f}s  "
+              f"({r['stream_speedup']:.2f}x, work {r['stream_work']:,.0f} vs "
+              f"{r['cold_work']:,.0f})  bit-identical ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

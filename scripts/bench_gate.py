@@ -1,0 +1,126 @@
+"""CI perf-regression gate: diff a bench run against committed baselines.
+
+Compares every ``BENCH_<name>.json`` the smoke harness emitted
+(``benchmarks.run --smoke --out-dir <run-dir>``) against the committed
+smoke baselines in ``benchmarks/baselines/smoke/`` and fails (exit 1) on:
+
+* a failed or missing bench (baseline exists, run JSON absent or
+  ``status != ok``);
+* a row present in the baseline but absent from the run, or vice versa
+  (adding/removing a bench case requires refreshing the baselines in the
+  same PR — see docs/BENCHMARKS.md);
+* any ``exact`` field differing — these are machine-independent
+  (edge/work counts, rebuild counts, verification booleans), so ANY drift
+  is a real behaviour change, never noise;
+* ``us_per_call`` exceeding baseline × ``--time-tol`` — wall time on
+  shared CI runners is noisy and baselines may come from a different
+  hardware class, so the tolerance is deliberately coarse (default 10x)
+  and catches only order-of-magnitude slowdowns; the exact fields are the
+  precise teeth.
+
+Stdlib-only (like scripts/check_links.py) so the CI step needs no extras:
+
+    python scripts/bench_gate.py --run-dir bench-artifacts
+    python scripts/bench_gate.py --run-dir bench-artifacts --time-tol 4
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_BASELINE_DIR = pathlib.Path("benchmarks/baselines/smoke")
+DEFAULT_TIME_TOL = 10.0
+
+REFRESH_HINT = ("refresh the committed baselines: PYTHONPATH=src python -m "
+                "benchmarks.run --smoke --out-dir benchmarks/baselines/smoke")
+
+
+def diff_bench(baseline: dict, run: dict, time_tol: float) -> "list[str]":
+    """All regressions of one bench's run JSON vs its baseline JSON."""
+    problems: "list[str]" = []
+    name = baseline.get("bench", "?")
+    if run.get("status") != "ok":
+        problems.append(f"{name}: status={run.get('status')!r} "
+                        f"error={run.get('error')!r}")
+        return problems  # rows are empty/meaningless on failure
+    if run.get("schema_version") != baseline.get("schema_version"):
+        problems.append(
+            f"{name}: schema_version {run.get('schema_version')} != baseline "
+            f"{baseline.get('schema_version')} — {REFRESH_HINT}")
+    base_rows = {r["name"]: r for r in baseline.get("rows", [])}
+    run_rows = {r["name"]: r for r in run.get("rows", [])}
+    for missing in sorted(base_rows.keys() - run_rows.keys()):
+        problems.append(f"{name}: row {missing} missing from run")
+    for extra in sorted(run_rows.keys() - base_rows.keys()):
+        problems.append(f"{name}: row {extra} has no baseline — "
+                        f"{REFRESH_HINT}")
+    for row_name in sorted(base_rows.keys() & run_rows.keys()):
+        b, r = base_rows[row_name], run_rows[row_name]
+        b_exact, r_exact = b.get("exact", {}), r.get("exact", {})
+        for key in sorted(b_exact.keys() | r_exact.keys()):
+            if b_exact.get(key) != r_exact.get(key):
+                problems.append(
+                    f"{name}: row {row_name} exact field {key!r}: "
+                    f"run {r_exact.get(key)!r} != baseline "
+                    f"{b_exact.get(key)!r}")
+        limit = b["us_per_call"] * time_tol
+        if r["us_per_call"] > limit:
+            problems.append(
+                f"{name}: row {row_name} wall time {r['us_per_call']:.0f}us "
+                f"exceeds baseline {b['us_per_call']:.0f}us x tol {time_tol} "
+                f"= {limit:.0f}us")
+    return problems
+
+
+def gate(run_dir: pathlib.Path, baseline_dir: pathlib.Path,
+         time_tol: float) -> "list[str]":
+    """Regressions across all benches; empty list = gate passes."""
+    problems: "list[str]" = []
+    baselines = sorted(baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        return [f"no BENCH_*.json baselines under {baseline_dir} — "
+                f"{REFRESH_HINT}"]
+    for base_path in baselines:
+        run_path = run_dir / base_path.name
+        if not run_path.exists():
+            problems.append(f"{base_path.name}: baseline exists but the run "
+                            f"emitted no {run_path}")
+            continue
+        problems.extend(diff_bench(json.loads(base_path.read_text()),
+                                   json.loads(run_path.read_text()),
+                                   time_tol))
+    known = {p.name for p in baselines}
+    for run_path in sorted(run_dir.glob("BENCH_*.json")):
+        if run_path.name not in known:
+            problems.append(f"{run_path.name}: no committed baseline — "
+                            f"{REFRESH_HINT}")
+    return problems
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--run-dir", type=pathlib.Path, required=True,
+                   help="directory with the run's BENCH_*.json files")
+    p.add_argument("--baseline-dir", type=pathlib.Path,
+                   default=DEFAULT_BASELINE_DIR,
+                   help=f"committed baselines (default {DEFAULT_BASELINE_DIR})")
+    p.add_argument("--time-tol", type=float, default=DEFAULT_TIME_TOL,
+                   help="allowed us_per_call slowdown factor vs baseline "
+                        f"(default {DEFAULT_TIME_TOL}x; exact fields always "
+                        "compare strictly)")
+    args = p.parse_args(argv)
+    problems = gate(args.run_dir, args.baseline_dir, args.time_tol)
+    if problems:
+        print(f"bench gate: FAIL ({len(problems)} problem(s))")
+        for prob in problems:
+            print(f"  - {prob}")
+        return 1
+    n = len(list(args.baseline_dir.glob("BENCH_*.json")))
+    print(f"bench gate: OK ({n} benches within tolerance, exact fields "
+          "identical)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import importlib
 
-from repro.configs.base import Cell, MeshAxes
+from repro.configs.base import Cell
 
 ARCH_IDS = [
     "qwen3-moe-30b-a3b",

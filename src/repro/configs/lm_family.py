@@ -104,7 +104,6 @@ def lm_opt_specs(param_specs, cfg: LMConfig | None = None, ax: MeshAxes | None =
     state_specs = param_specs
     if cfg is not None and cfg.expert_zero1 and "moe" in param_specs:
         # fp32 m/v for experts re-shard the D dim over data (ZeRO-1)
-        import copy
         state_specs = dict(param_specs)
         moe = dict(param_specs["moe"])
         for k in ("w_gate", "w_up"):

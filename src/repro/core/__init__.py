@@ -24,18 +24,26 @@ from repro.core.trigrid import (
 )
 from repro.core.window import (
     WindowSlideRun,
+    WindowStream,
+    WindowStreamRun,
     run_window_slide,
     run_window_slide_batched,
+    run_window_stream_batched,
     slide_windows,
+    stream_campaigns,
     window_anchor,
 )
 
 __all__ = [
     "SnapshotStore",
     "WindowSlideRun",
+    "WindowStream",
+    "WindowStreamRun",
     "run_window_slide",
     "run_window_slide_batched",
+    "run_window_stream_batched",
     "slide_windows",
+    "stream_campaigns",
     "window_anchor",
     "StreamStats",
     "run_kickstarter_stream",

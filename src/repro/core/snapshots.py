@@ -34,6 +34,13 @@ Store contract (what every executor may assume):
   width)`` and the lane axis always divides a mesh's ``data`` extent.
   Host-side key arrays (``window_keys``) are never evicted — they are the
   cheap part and keep rebuilds exact.
+* **Anchor-state family ("AS" tags).** Converged anchor query states
+  (``QueryState``) live in the SAME LRU alongside edge blocks — the first
+  cross-launch reuse: a streaming campaign scheduler (core/window.py) seeds
+  campaign k+1's anchor from campaign k's cached state instead of
+  recomputing from the base snapshot. Values of a cached state are a pure
+  function of ``(window, query key)`` (the monotone rounded fixpoint is
+  unique), so eviction again costs only recompute, never correctness.
 """
 
 from __future__ import annotations
@@ -117,9 +124,11 @@ class SnapshotStore:
 
         ``kinds`` filters by tag family — e.g. ``("DS",)`` drops only the
         stacked ``delta_stack`` buffers the batched executors built, leaving
-        the sequential executors' per-hop "D" blocks warm. ``None`` drops
-        everything. Host-side key arrays are never dropped, so subsequent
-        fetches rebuild bit-identical blocks.
+        the sequential executors' per-hop "D" blocks warm, and ``("AS",)``
+        drops cached anchor query states (the streaming scheduler then
+        rebuilds its next anchor cold). ``None`` drops everything. Host-side
+        key arrays are never dropped, so subsequent fetches rebuild
+        bit-identical blocks.
         """
         if isinstance(kinds, str):  # release("DS") must not match family "D"
             kinds = (kinds,)
@@ -130,6 +139,47 @@ class SnapshotStore:
             freed += _block_nbytes(self._blocks.pop(t))
         self._cached_nbytes -= freed
         return freed
+
+    # -- anchor-state cache (cross-launch reuse, streaming campaigns) ----------
+    #
+    # Tags are ("AS", qkey, (i, j)): qkey identifies the query (semiring,
+    # source, options — see core/window.py::_stream_qkey), (i, j) the anchor
+    # window the state converged on. States share the LRU byte budget with
+    # edge blocks: a cached anchor family can be evicted mid-stream, which
+    # costs the scheduler one rebuild and never changes results (values are
+    # the unique monotone fixpoint of (window, qkey)).
+
+    def anchor_state_get(self, qkey: tuple, window: "tuple[int, int]"):
+        """Cached converged QueryState for exactly this (qkey, window)."""
+        return self._cache_get(("AS", qkey, tuple(window)))
+
+    def anchor_state_put(self, qkey: tuple, window: "tuple[int, int]", state):
+        """Cache a converged anchor state (LRU-participating, "AS" family)."""
+        return self._cache_put(("AS", qkey, tuple(window)), state)
+
+    def anchor_state_cover(self, qkey: tuple, window: "tuple[int, int]"):
+        """Tightest cached anchor state whose window COVERS ``window``.
+
+        A state converged on a super-window (i, j) ⊇ (a, b) warm-starts
+        T(a, b) by pure additions (T(i,j) ⊆ T(a,b)); among cached covers the
+        tightest — largest |T(cover)| — minimizes the Δ volume of the hop.
+        Returns ``(cover_window, state)`` or ``None``. The exact window
+        itself is excluded; use :meth:`anchor_state_get` for hits.
+        """
+        a, b = window
+        best: "tuple[int, int] | None" = None
+        best_size = -1
+        for tag in self._blocks:
+            if tag[0] != "AS" or tag[1] != qkey or tag[2] == (a, b):
+                continue
+            ci, cj = tag[2]
+            if ci <= a and b <= cj:
+                size = self.window_size(ci, cj)
+                if size > best_size:
+                    best, best_size = (ci, cj), size
+        if best is None:
+            return None
+        return best, self._cache_get(("AS", qkey, best))  # touches LRU
 
     # -- window intersections -------------------------------------------------
 

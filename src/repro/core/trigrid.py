@@ -176,6 +176,17 @@ class WorkSharingRun:
         default_factory=list)
 
 
+def _anchor_view(store, window, cg_split):
+    """The anchor window's edge view, split per ``cg_split``.
+
+    The ONE place the split policy lives: the TG/window anchor rebuilds and
+    the streaming scheduler's cache-hit/cover paths (core/window.py) all
+    route through here, so hit/hop/rebuild views can never diverge.
+    """
+    return (store.window_view_split(*window, cg_split) if cg_split > 1
+            else store.common_graph_view(*window))
+
+
 def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
                  track_parents):
     """Anchor-window fixpoint shared by all executors: (view, result, stats).
@@ -184,8 +195,7 @@ def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
     (core/window.py) anchor at the windows' common super-window.
     """
     t0 = time.perf_counter()
-    apex_view = (store.window_view_split(*window, cg_split) if cg_split > 1
-                 else store.common_graph_view(*window))
+    apex_view = _anchor_view(store, window, cg_split)
     base = run_to_fixpoint(apex_view, semiring, source, max_iters, gated=gated,
                            track_parents=track_parents)
     base.values.block_until_ready()

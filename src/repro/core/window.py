@@ -42,6 +42,27 @@ tests/test_window.py):
   window (the global CG query itself).
 * **Work accounting.** Padding never counts toward ``edge_work``; batched
   and sequential slides report equal per-window totals.
+
+Streaming campaigns (``WindowStream`` / ``run_window_stream_batched``) layer
+cross-launch anchor reuse on top: an advancing window sequence is cut into
+campaigns of ``campaign_width`` windows, each campaign runs as one batched
+slide launch anchored at ``(campaign_lo, stream_hi)``, and the anchor STATE
+is maintained incrementally — campaign k+1's anchor window is nested in
+campaign k's (its common graph is a pure-addition extension), so k's
+converged state seeds an ``incremental_additions`` hop instead of a
+from-scratch rebuild. States live in ``SnapshotStore``'s LRU-cached "AS"
+family, so back-to-back campaigns (and repeat stream calls) hit memory, not
+recompute; eviction mid-stream costs exactly one rebuild and never changes
+results. The stream contract, enforced by tests/test_window_stream.py:
+
+* **Bit-identical to cold campaigns.** ``run_window_stream_batched`` window
+  values equal ``run_window_slide_batched`` run cold per campaign (same
+  windows, same anchor) bit-for-bit — the monotone rounded fixpoint of a
+  window's common graph is unique, so how the anchor state was reached
+  (from-scratch vs incremental hops) is unobservable in values.
+* **Strictly fewer rebuilds.** A K-campaign stream performs 1 anchor
+  rebuild + K−1 incremental anchor hops (plus one rebuild per mid-stream
+  eviction) vs the cold path's K rebuilds.
 """
 
 from __future__ import annotations
@@ -53,9 +74,11 @@ import jax.numpy as jnp
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
-from repro.core.trigrid import _anchor_base, _shard_snapshot_axis
+from repro.core.trigrid import _anchor_base, _anchor_view, _shard_snapshot_axis
 from repro.graph.edgeset import lane_bucket
 from repro.graph.engine import (
+    QueryState,
+    extract_state,
     gather_lane_states,
     incremental_additions,
     incremental_additions_batched,
@@ -209,14 +232,38 @@ def run_window_slide_batched(
         track_parents)
 
     t0 = time.perf_counter()
+    res, bucket = _slide_launch(store, semiring, anchor_view,
+                                extract_state(base), windows, anchor,
+                                max_iters=max_iters, gated=gated,
+                                track_parents=track_parents, mesh=mesh)
+    hop_stats = [StreamStats(time.perf_counter() - t0,
+                             float(jnp.sum(res.edge_work)),
+                             int(jnp.max(res.iterations)))]
+    results = {wnd: res.values[lane] for lane, wnd in enumerate(windows)}
+    return WindowSlideRun(results, anchor, base_stats, hop_stats,
+                          time.perf_counter() - t_all,
+                          _slide_added_edges(store, windows, anchor),
+                          [(len(windows), bucket)])
+
+
+def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
+                  state: QueryState, windows: "list[Window]", anchor: Window,
+                  *, max_iters: int, gated: bool, track_parents: bool, mesh):
+    """ONE stacked launch re-converging every window from an anchor state.
+
+    The shared campaign body of ``run_window_slide_batched`` and the
+    streaming scheduler: the anchor state broadcasts to all window lanes
+    (masked padding lanes included — their Δ is all-sentinel, so they stay
+    inert copies and ``lane_valid`` zeroes them out of the work
+    accounting), the per-window slide Δs stack shape-bucketed, and one
+    ``incremental_additions_batched`` call runs the lanes (sharded over
+    ``data`` when a mesh is given). Returns ``(FixpointResult, bucket)``.
+    """
     data_extent = mesh.shape["data"] if mesh is not None else 1
     bucket = lane_bucket(len(windows), data_extent)
     stacked = store.slide_stack(windows, anchor, num_lanes=bucket)
-    # The anchor state broadcasts to every lane, masked padding lanes
-    # included: their Δ is all-sentinel, so they stay inert copies and
-    # lane_valid zeroes them out of the work accounting.
-    values, parent = gather_lane_states(base.values[None], base.parent[None],
-                                        [0] * bucket)
+    values, parent = gather_lane_states(state.values[None],
+                                        state.parent[None], [0] * bucket)
     lane_valid = jnp.arange(bucket) < len(windows)
     delta_blocks = (stacked,)
     values, parent, delta_blocks, lane_valid = _shard_snapshot_axis(
@@ -227,11 +274,264 @@ def run_window_slide_batched(
         max_iters=max_iters, track_parents=track_parents, gated=gated,
         seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
     res.values.block_until_ready()
-    hop_stats = [StreamStats(time.perf_counter() - t0,
-                             float(jnp.sum(res.edge_work)),
-                             int(jnp.max(res.iterations)))]
-    results = {wnd: res.values[lane] for lane, wnd in enumerate(windows)}
-    return WindowSlideRun(results, anchor, base_stats, hop_stats,
-                          time.perf_counter() - t_all,
-                          _slide_added_edges(store, windows, anchor),
-                          [(len(windows), bucket)])
+    return res, bucket
+
+
+# ---------------------------------------------------------------------------
+# Streaming slide campaigns: cross-launch incremental anchor maintenance.
+# ---------------------------------------------------------------------------
+
+
+def _validate_advancing(windows: "list[Window]", tail: Window | None = None):
+    prev = tail
+    for wnd in windows:
+        i, j = wnd
+        if j < i:
+            raise ValueError(f"window {wnd} is empty: need i <= j")
+        if prev is not None and (i < prev[0] or j < prev[1]):
+            raise ValueError(
+                f"windows must advance: {wnd} steps backwards from {prev} "
+                "(both endpoints must be nondecreasing)")
+        prev = wnd
+
+
+@dataclasses.dataclass
+class WindowStream:
+    """An advancing window sequence consumed campaign-by-campaign.
+
+    The streaming producer side of ``run_window_stream_batched``: windows
+    arrive in slide order (both endpoints nondecreasing — enforced), are
+    buffered here, and each executor call drains the pending buffer as
+    campaigns of ``campaign_width`` windows. The stream object itself holds
+    no query state — anchors live in the SnapshotStore's "AS" cache family,
+    which is what lets a stream span many launches (and many stream
+    objects) while anchor work stays incremental.
+    """
+
+    campaign_width: int
+    windows: "list[Window]" = dataclasses.field(default_factory=list)
+    consumed: int = 0
+
+    def __post_init__(self):
+        if self.campaign_width < 1:
+            raise ValueError(
+                f"campaign_width must be >= 1, got {self.campaign_width}")
+        self.windows = [tuple(w) for w in self.windows]
+        _validate_advancing(self.windows)
+
+    def extend(self, windows: "list[Window]") -> "WindowStream":
+        """Append newly arrived windows (must keep the sequence advancing)."""
+        windows = [tuple(w) for w in windows]
+        _validate_advancing(windows,
+                            tail=self.windows[-1] if self.windows else None)
+        self.windows.extend(windows)
+        return self
+
+    def pending(self) -> "list[Window]":
+        return self.windows[self.consumed:]
+
+    def take(self) -> "list[Window]":
+        """Drain and return the pending windows (executor entry point)."""
+        out = self.pending()
+        self.consumed = len(self.windows)
+        return out
+
+
+def stream_campaigns(windows: "list[Window]",
+                     campaign_width: int) -> "list[list[Window]]":
+    """Cut an advancing window sequence into consecutive campaigns.
+
+    Campaigns are disjoint chunks of ``campaign_width`` windows (the last
+    may be short); their SPANS overlap whenever consecutive windows do —
+    which is exactly what the incremental anchor chain exploits.
+    """
+    if campaign_width < 1:
+        raise ValueError(f"campaign_width must be >= 1, got {campaign_width}")
+    return [windows[k:k + campaign_width]
+            for k in range(0, len(windows), campaign_width)]
+
+
+def _stream_qkey(semiring: Semiring, source: int, max_iters: int, gated: bool,
+                 cg_split: int, track_parents: bool) -> tuple:
+    """Anchor-state cache key: everything that selects the query.
+
+    ``values`` of a converged state depend only on (semiring, source) — the
+    rest is included conservatively so cached parents/behaviour always match
+    the options of the run that would have rebuilt the state.
+    """
+    return (semiring.name, source, max_iters, gated, cg_split, track_parents)
+
+
+@dataclasses.dataclass
+class WindowStreamRun:
+    results: dict[Window, jnp.ndarray]   # window -> values
+    campaigns: "list[list[Window]]"
+    anchors: "list[Window]"              # per-campaign anchor window
+    # per-campaign anchor acquisition: "rebuild" (from-scratch fixpoint),
+    # "hop" (incremental_additions from a cached covering state), or "hit"
+    # (exact cached state — zero anchor work)
+    anchor_events: "list[str]"
+    anchor_stats: "list[StreamStats]"    # per-campaign anchor acquisition
+    hop_stats: "list[StreamStats]"       # per-campaign stacked launch
+    wall_s: float
+    added_edges: int                     # total window-hop Δ volume
+    anchor_delta_edges: int              # Δ volume of incremental anchor hops
+    lane_layout: "list[tuple[int, int]]"
+
+    @property
+    def anchor_rebuilds(self) -> int:
+        return self.anchor_events.count("rebuild")
+
+    @property
+    def anchor_hops(self) -> int:
+        return self.anchor_events.count("hop")
+
+    @property
+    def anchor_hits(self) -> int:
+        return self.anchor_events.count("hit")
+
+
+def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
+                          semiring: Semiring, source: int, max_iters: int,
+                          gated: bool, cg_split: int, track_parents: bool):
+    """Anchor state via cache hit, incremental hop, or from-scratch rebuild.
+
+    Returns ``(anchor_view, state, stats, event, delta_edges)`` —
+    ``delta_edges`` is the hop's Δ volume (0 on hit/rebuild). The view's
+    blocks UNION to exactly T(anchor) in every case (anchor view on
+    hit/rebuild, cover view ⊕ hop Δ after a hop) — per-sweep reductions are
+    block-partition invariant, so downstream campaign results do not depend
+    on which path ran. The acquired state is (re-)cached under the anchor's
+    "AS" tag.
+    """
+    t0 = time.perf_counter()
+    state = store.anchor_state_get(qkey, anchor)
+    if state is not None:
+        view = _anchor_view(store, anchor, cg_split)
+        return view, state, StreamStats(time.perf_counter() - t0, 0.0, 0), \
+            "hit", 0
+    cover = store.anchor_state_cover(qkey, anchor)
+    if cover is not None:
+        cover_window, cover_state = cover
+        delta = store.delta_block(cover_window, anchor)
+        view = _anchor_view(store, cover_window, cg_split).extended(delta)
+        res = incremental_additions(view, delta, semiring, cover_state.values,
+                                    cover_state.parent, max_iters,
+                                    gated=gated, track_parents=track_parents)
+        res.values.block_until_ready()
+        state = store.anchor_state_put(qkey, anchor, extract_state(res))
+        delta_edges = (store.window_size(*anchor)
+                       - store.window_size(*cover_window))
+        return view, state, StreamStats(time.perf_counter() - t0,
+                                        float(res.edge_work),
+                                        int(res.iterations)), "hop", \
+            delta_edges
+    anchor_view, base, base_stats = _anchor_base(
+        store, anchor, semiring, source, max_iters, gated, cg_split,
+        track_parents)
+    state = store.anchor_state_put(qkey, anchor, extract_state(base))
+    return anchor_view, state, base_stats, "rebuild", 0
+
+
+def run_window_stream_batched(
+    store: SnapshotStore,
+    semiring: Semiring,
+    source: int,
+    width: int | None = None,
+    *,
+    windows: "list[Window] | None" = None,
+    stream: WindowStream | None = None,
+    step: int = 1,
+    start: int = 0,
+    campaign_width: int | None = None,
+    max_iters: int = 10_000,
+    gated: bool = False,
+    cg_split: int = 1,
+    track_parents: bool = False,
+    mesh=None,
+) -> WindowStreamRun:
+    """Streaming slide campaigns with incremental anchor maintenance.
+
+    Consumes an advancing window sequence (``stream.take()``, an explicit
+    ``windows`` list, or a ``slide_windows`` plan from ``width``), cuts it
+    into campaigns of ``campaign_width`` windows (default 4; a
+    ``WindowStream`` carries its own width, so passing both together is an
+    error), and runs each campaign as
+    ONE masked pow2-lane ``incremental_additions_batched`` launch (the
+    ``run_window_slide_batched`` machinery, sharded over ``data`` when a
+    mesh is given).
+
+    Campaign k anchors at ``(lo_k, stream_hi)`` — its windows' span widened
+    to the stream's last snapshot. Widening is what makes the anchor chain
+    monotone: campaign k+1's anchor interval is nested in campaign k's, so
+    its common graph is reachable from k's converged state by PURE
+    ADDITIONS, and the scheduler seeds it with one incremental hop instead
+    of recomputing from the base snapshot. Anchor states are cached in the
+    store's "AS" LRU family, so only the first campaign (or a campaign
+    whose predecessors were evicted, or one whose stream has advanced past
+    every cached cover) pays a from-scratch rebuild.
+
+    Results are bit-identical to running ``run_window_slide_batched`` cold
+    per campaign with the same anchors; the streamed path just performs
+    strictly fewer anchor rebuilds (1 + evictions vs one per campaign).
+    """
+    t_all = time.perf_counter()
+    if stream is not None:
+        if windows is not None or width is not None:
+            raise ValueError("pass stream= alone, not with width=/windows=")
+        if campaign_width is not None:
+            raise ValueError("campaign_width= conflicts with stream=: the "
+                             "WindowStream carries its own campaign width")
+        windows = stream.take()
+        campaign_width = stream.campaign_width
+    else:
+        if campaign_width is None:
+            campaign_width = 4
+        if windows is None:
+            if width is None:
+                raise ValueError("pass width=, windows= or stream=")
+            windows = slide_windows(store.seq.num_snapshots, width, step=step,
+                                    start=start)
+        windows = [tuple(w) for w in windows]
+        _validate_advancing(windows)
+    if not windows:
+        return WindowStreamRun({}, [], [], [], [], [],
+                               time.perf_counter() - t_all, 0, 0, [])
+    campaigns = stream_campaigns(windows, campaign_width)
+    stream_hi = windows[-1][1]
+    qkey = _stream_qkey(semiring, source, max_iters, gated, cg_split,
+                        track_parents)
+
+    results: dict[Window, jnp.ndarray] = {}
+    anchors: "list[Window]" = []
+    anchor_events: "list[str]" = []
+    anchor_stats: "list[StreamStats]" = []
+    hop_stats: "list[StreamStats]" = []
+    lane_layout: "list[tuple[int, int]]" = []
+    added_edges = 0
+    anchor_delta_edges = 0
+    for campaign in campaigns:
+        anchor = (min(i for i, _ in campaign), stream_hi)
+        anchor_view, state, stats, event, delta_edges = _acquire_anchor_state(
+            store, qkey, anchor, semiring, source, max_iters, gated, cg_split,
+            track_parents)
+        anchors.append(anchor)
+        anchor_events.append(event)
+        anchor_stats.append(stats)
+        anchor_delta_edges += delta_edges
+        t0 = time.perf_counter()
+        res, bucket = _slide_launch(store, semiring, anchor_view, state,
+                                    campaign, anchor, max_iters=max_iters,
+                                    gated=gated, track_parents=track_parents,
+                                    mesh=mesh)
+        hop_stats.append(StreamStats(time.perf_counter() - t0,
+                                     float(jnp.sum(res.edge_work)),
+                                     int(jnp.max(res.iterations))))
+        lane_layout.append((len(campaign), bucket))
+        for lane, wnd in enumerate(campaign):
+            results[wnd] = res.values[lane]
+        added_edges += _slide_added_edges(store, campaign, anchor)
+    return WindowStreamRun(results, campaigns, anchors, anchor_events,
+                           anchor_stats, hop_stats,
+                           time.perf_counter() - t_all, added_edges,
+                           anchor_delta_edges, lane_layout)

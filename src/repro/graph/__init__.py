@@ -24,6 +24,8 @@ from repro.graph.edgeset import (
 )
 from repro.graph.engine import (
     FixpointResult,
+    QueryState,
+    extract_state,
     init_values,
     relax_sweep,
     run_to_fixpoint,
@@ -47,6 +49,8 @@ __all__ = [
     "concat_views",
     "lane_bucket",
     "FixpointResult",
+    "QueryState",
+    "extract_state",
     "init_values",
     "relax_sweep",
     "run_to_fixpoint",

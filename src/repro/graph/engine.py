@@ -25,7 +25,7 @@ blocks).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,28 @@ class FixpointResult(NamedTuple):
     parent: jnp.ndarray      # int32  [num_nodes], -1 = none/source
     iterations: jnp.ndarray  # int32 scalar — sweeps executed
     edge_work: jnp.ndarray   # float32 scalar — frontier-masked edge relaxations
+
+
+class QueryState(NamedTuple):
+    """A converged query state detached from its run statistics.
+
+    The cross-launch unit of reuse: a ``(values, parent)`` pair extracted
+    from a :class:`FixpointResult` can be cached (SnapshotStore's anchor
+    family), re-seeded into a later incremental launch, or broadcast into
+    batched lanes via :func:`gather_lane_states`. Values are a pure function
+    of ``(edge set, semiring, source)`` — the monotone rounded fixpoint is
+    unique, so a state reached by warm hops equals the from-scratch one
+    bit-for-bit. Parents are dependence-valid but tie-break by construction
+    path (only the deletion-trimming baseline consumes them).
+    """
+
+    values: jnp.ndarray      # float32 [num_nodes]
+    parent: jnp.ndarray      # int32  [num_nodes]
+
+
+def extract_state(res: FixpointResult) -> QueryState:
+    """Detach the reusable (values, parent) state from a fixpoint result."""
+    return QueryState(res.values, res.parent)
 
 
 def init_values(num_nodes: int, semiring: Semiring, source: int) -> jnp.ndarray:
@@ -106,7 +128,6 @@ def relax_sweep(
     """
     ident = jnp.float32(semiring.identity)
     best = jnp.full((num_nodes,), ident)
-    winner_src = jnp.full((num_nodes,), INT_MAX, dtype=jnp.int32)
     bests = []
     work = jnp.float32(0)
     for src, dst, w in blocks:

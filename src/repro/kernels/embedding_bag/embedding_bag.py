@@ -18,8 +18,6 @@ ref for tables over the VMEM budget). D pads to the 128-lane boundary.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -49,13 +47,14 @@ def embedding_bag_pallas(table, ids, bags, weights, *, n_bags: int,
                          interpret: bool = True):
     """table [V, D]; ids/bags [L] i32 (bag == n_bags for padding); weights [L]."""
     v, d = table.shape
-    l = ids.shape[0]
-    assert l % BLOCK_L == 0, f"lookup count {l} must be padded to {BLOCK_L}"
+    num_ids = ids.shape[0]
+    assert num_ids % BLOCK_L == 0, \
+        f"lookup count {num_ids} must be padded to {BLOCK_L}"
     d_pad = (-d) % LANE
     if d_pad:
         table = jnp.pad(table, ((0, 0), (0, d_pad)))
     dp = d + d_pad
-    grid = (l // BLOCK_L,)
+    grid = (num_ids // BLOCK_L,)
 
     out = pl.pallas_call(
         _kernel,

@@ -22,8 +22,8 @@ def embedding_bag_fused(table, ids, bags, weights, *, n_bags: int,
     table_bytes = table.shape[0] * table.shape[1] * table.dtype.itemsize
     if not use_pallas or table_bytes > VMEM_TABLE_BUDGET:
         return embedding_bag_ref(table, ids, bags, weights, n_bags=n_bags)
-    l = ids.shape[0]
-    pad = (-l) % BLOCK_L
+    num_ids = ids.shape[0]
+    pad = (-num_ids) % BLOCK_L
     if pad:
         ids = jnp.concatenate([ids, jnp.zeros((pad,), ids.dtype)])
         bags = jnp.concatenate([bags, jnp.full((pad,), n_bags, bags.dtype)])

@@ -15,7 +15,11 @@ window slides over the sequence and every window is answered by an
 addition-only hop from the windows' common super-window apex
 (core/window.py). ``--window-batch`` runs the batched slide too — all hops
 as lanes of ONE stacked launch — and reports its speedup over the
-sequential slide.
+sequential slide. ``--stream`` (with ``--campaign-width C``) feeds the same
+windows through the streaming-campaign scheduler instead: campaigns of C
+windows whose anchors are maintained incrementally across launches
+(1 rebuild + hops, vs one rebuild per campaign cold), reported against the
+cold per-campaign baseline.
 
 ``--shard`` places the batched executors' lane axis (snapshots for
 dhb/wsb, windows for --window-batch) over a 1-D ``data`` mesh spanning all
@@ -41,6 +45,7 @@ from repro.core import (
     run_plan_batched,
     run_window_slide,
     run_window_slide_batched,
+    run_window_stream_batched,
     slide_windows,
 )
 from repro.graph import make_evolving_sequence, run_to_fixpoint
@@ -93,9 +98,19 @@ def main(argv=None):
                    help="with --window: also run the batched slide — every "
                         "window hop as one lane of a single stacked launch "
                         "(composes with --shard)")
+    p.add_argument("--stream", action="store_true",
+                   help="with --window: run the streaming-campaign scheduler "
+                        "too — the slide windows consumed as campaigns with "
+                        "incremental anchor maintenance (core/window.py "
+                        "run_window_stream_batched; composes with --shard)")
+    p.add_argument("--campaign-width", type=int, default=4, metavar="C",
+                   help="windows per streaming campaign for --stream "
+                        "(default 4)")
     args = p.parse_args(argv)
     if args.window_batch and args.window is None:
         p.error("--window-batch requires --window W")
+    if args.stream and args.window is None:
+        p.error("--stream requires --window W")
     mesh = make_snapshot_mesh() if args.shard else None
 
     sr = ALL_SEMIRINGS[args.alg]
@@ -154,6 +169,38 @@ def main(argv=None):
                   f"(1 stacked launch vs {len(sl.hop_stats)} hops)")
             if mesh is not None:
                 _shard_report(mesh, "windows", slb.lane_layout)
+        stm = None
+        if args.stream:
+            # Warm-up: compiles the campaign-shaped traces and builds the
+            # blocks BOTH paths touch, then the anchor cache is dropped so
+            # the timed stream pays its real 1-rebuild + hops cost — without
+            # this the stream eats all compile time and the cold baseline
+            # free-rides on its traces (see benchmarks/window_stream.py).
+            run_window_stream_batched(store, sr, args.source, args.window,
+                                      step=args.window_step,
+                                      campaign_width=args.campaign_width,
+                                      mesh=mesh)
+            store.release(("AS",))
+            stm = run_window_stream_batched(store, sr, args.source,
+                                            args.window, step=args.window_step,
+                                            campaign_width=args.campaign_width,
+                                            mesh=mesh)
+            # the cold baseline rebuilds its anchor per campaign: one
+            # slide-batched call per campaign with the stream's own anchors
+            t0 = time.perf_counter()
+            cold = [run_window_slide_batched(store, sr, args.source,
+                                             windows=c, anchor=a, mesh=mesh)
+                    for c, a in zip(stm.campaigns, stm.anchors)]
+            t_cold = time.perf_counter() - t0
+            print(f"[evolve] Window stream:        {stm.wall_s:.2f}s  "
+                  f"vs cold campaigns {t_cold:.2f}s  "
+                  f"({len(stm.campaigns)} campaigns of "
+                  f"<={args.campaign_width}: {stm.anchor_rebuilds} rebuilds "
+                  f"+ {stm.anchor_hops} anchor hops + {stm.anchor_hits} hits "
+                  f"vs {len(cold)} rebuilds; anchor-Δ "
+                  f"{stm.anchor_delta_edges} edges)")
+            if mesh is not None:
+                _shard_report(mesh, "stream", stm.lane_layout)
 
     if args.verify:
         for i in range(args.snapshots):
@@ -178,8 +225,17 @@ def main(argv=None):
                         np.asarray(slb.results[wnd]),
                         np.asarray(sl.results[wnd]),
                         err_msg=f"batched window slide {wnd}")
+            if stm is not None:
+                for cold_run, campaign in zip(cold, stm.campaigns):
+                    for wnd in campaign:
+                        np.testing.assert_array_equal(
+                            np.asarray(stm.results[wnd]),
+                            np.asarray(cold_run.results[wnd]),
+                            err_msg=f"stream vs cold campaign {wnd}")
             print("[evolve] verify: window slide exact on every window"
-                  + (" (batched bit-identical)" if slb is not None else ""))
+                  + (" (batched bit-identical)" if slb is not None else "")
+                  + (" (stream bit-identical to cold campaigns)"
+                     if stm is not None else ""))
 
 
 def _dh_plan(n):

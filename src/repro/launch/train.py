@@ -19,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced_config
 from repro.data import DataCursor, dien_batch, gnn_full_batch, lm_batch
-from repro.launch.mesh import make_local_mesh
 from repro.models.dien import dien_loss, init_dien_params
 from repro.models.gnn import gnn_loss, init_gnn_params
 from repro.models.transformer import init_lm_params, lm_loss

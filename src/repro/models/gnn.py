@@ -13,7 +13,6 @@ encode(grid→mesh) / process(mesh) / decode(mesh→grid) edge sets.
 
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 from typing import Any
 
@@ -21,7 +20,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import (
-    layer_norm,
     mlp_apply,
     mlp_params,
     mse_loss,

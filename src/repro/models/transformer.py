@@ -86,7 +86,7 @@ class LMConfig:
 
     def param_count(self) -> int:
         p = jax.eval_shape(lambda k: init_lm_params(k, self), jax.random.PRNGKey(0))
-        return sum(int(math.prod(l.shape)) for l in jax.tree.leaves(p))
+        return sum(int(math.prod(leaf.shape)) for leaf in jax.tree.leaves(p))
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +231,7 @@ def _chunked_causal_attention(xq, kf, vf, scale, chunk: int,
     q_pos = jnp.arange(s)
 
     def step(carry, ci):
-        m, l, acc = carry                      # [B,H,S], [B,H,S], [B,S,H,Dh]
+        m, den, acc = carry                    # [B,H,S], [B,H,S], [B,S,H,Dh]
         k_blk = jax.lax.dynamic_slice_in_dim(kf, ci * chunk, chunk, axis=1)
         v_blk = jax.lax.dynamic_slice_in_dim(vf, ci * chunk, chunk, axis=1)
         sc = jnp.einsum("bqhk,bchk->bhqc", xq, k_blk,
@@ -243,18 +243,18 @@ def _chunked_causal_attention(xq, kf, vf, scale, chunk: int,
         new_m = jnp.maximum(m, blk_m)
         p = jnp.exp(sc - new_m[..., None])
         corr = jnp.exp(m - new_m)
-        new_l = l * corr + jnp.sum(p, axis=-1)
+        new_den = den * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bhqc,bchk->bqhk", p.astype(vf.dtype), v_blk,
                         preferred_element_type=jnp.float32)
         new_acc = acc * jnp.moveaxis(corr, 1, 2)[..., None] + pv
-        return (new_m, new_l, new_acc), None
+        return (new_m, new_den, new_acc), None
 
     m0 = jnp.full((b, h, s), -jnp.inf, jnp.float32)
-    l0 = jnp.zeros((b, h, s), jnp.float32)
+    den0 = jnp.zeros((b, h, s), jnp.float32)
     a0 = jnp.zeros((b, s, h, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks),
-                                  unroll=True if unroll else 1)
-    out = acc / jnp.moveaxis(l, 1, 2)[..., None]
+    (m, den, acc), _ = jax.lax.scan(step, (m0, den0, a0), jnp.arange(n_chunks),
+                                    unroll=True if unroll else 1)
+    out = acc / jnp.moveaxis(den, 1, 2)[..., None]
     return out.astype(vf.dtype)
 
 

@@ -20,7 +20,6 @@ import dataclasses
 import time
 from typing import Callable
 
-import jax
 import numpy as np
 
 from repro.runtime.checkpoint import CheckpointManager

@@ -1,0 +1,165 @@
+"""CI perf-regression gate (scripts/bench_gate.py) behaviour.
+
+Pure-JSON tests: a clean run passes, an injected synthetic regression
+(exact-field drift or a wall-time blowout) fails the gate, and structural
+drift (missing/extra benches or rows) demands a baseline refresh.
+"""
+
+import copy
+import importlib.util
+import json
+import pathlib
+
+SCRIPT = pathlib.Path(__file__).parent.parent / "scripts" / "bench_gate.py"
+_spec = importlib.util.spec_from_file_location("bench_gate", SCRIPT)
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+BASE = {
+    "bench": "window_stream",
+    "schema_version": 2,
+    "generated_unix": 0.0,
+    "status": "ok",
+    "error": None,
+    "rows": [
+        {"name": "window_stream/width2", "us_per_call": 1000.0,
+         "derived": "campaigns=3 rebuilds=1+2hops vs cold 3",
+         "exact": {"campaigns": 3, "rebuilds_stream": 1,
+                   "rebuilds_cold": 3, "edge_work": 8706}},
+        {"name": "window_stream/width3", "us_per_call": 2000.0,
+         "derived": "campaigns=2 rebuilds=1+1hops vs cold 2",
+         "exact": {"campaigns": 2, "rebuilds_stream": 1,
+                   "rebuilds_cold": 2, "edge_work": 7446}},
+    ],
+}
+
+
+def _write(dirpath, doc):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / f"BENCH_{doc['bench']}.json").write_text(json.dumps(doc))
+
+
+def _dirs(tmp_path, run_doc):
+    base_dir, run_dir = tmp_path / "baselines", tmp_path / "run"
+    _write(base_dir, BASE)
+    _write(run_dir, run_doc)
+    return base_dir, run_dir
+
+
+def _gate(tmp_path, run_doc, time_tol=4.0):
+    base_dir, run_dir = _dirs(tmp_path, run_doc)
+    return bench_gate.gate(run_dir, base_dir, time_tol)
+
+
+def test_gate_passes_identical_run(tmp_path):
+    assert _gate(tmp_path, copy.deepcopy(BASE)) == []
+
+
+def test_gate_tolerates_wall_time_noise(tmp_path):
+    run = copy.deepcopy(BASE)
+    run["rows"][0]["us_per_call"] *= 3.5      # noisy but under 4x
+    run["rows"][1]["us_per_call"] *= 0.1      # speedups always pass
+    assert _gate(tmp_path, run) == []
+
+
+def test_gate_fails_wall_time_regression(tmp_path):
+    run = copy.deepcopy(BASE)
+    run["rows"][1]["us_per_call"] *= 10       # injected 10x slowdown
+    problems = _gate(tmp_path, run)
+    assert len(problems) == 1
+    assert "width3" in problems[0] and "exceeds" in problems[0]
+    # a looser tolerance waves the same run through
+    assert _gate(tmp_path, run, time_tol=20.0) == []
+
+
+def test_gate_fails_exact_field_drift(tmp_path):
+    run = copy.deepcopy(BASE)
+    # the synthetic regression of the acceptance criterion: anchor reuse
+    # silently broken -> rebuild count drifts -> gate must fail
+    run["rows"][0]["exact"]["rebuilds_stream"] = 3
+    problems = _gate(tmp_path, run)
+    assert len(problems) == 1
+    assert "rebuilds_stream" in problems[0]
+    assert "run 3" in problems[0] and "baseline 1" in problems[0]
+
+
+def test_gate_fails_failed_bench(tmp_path):
+    run = copy.deepcopy(BASE)
+    run["status"], run["error"], run["rows"] = "failed", "boom", []
+    problems = _gate(tmp_path, run)
+    assert len(problems) == 1 and "status='failed'" in problems[0]
+
+
+def test_gate_fails_row_set_drift(tmp_path):
+    run = copy.deepcopy(BASE)
+    run["rows"][0]["name"] = "window_stream/width99"
+    problems = _gate(tmp_path, run)
+    assert any("missing from run" in p for p in problems)
+    assert any("no baseline" in p for p in problems)
+
+
+def test_gate_fails_missing_and_extra_bench_files(tmp_path):
+    base_dir, run_dir = _dirs(tmp_path, copy.deepcopy(BASE))
+    extra = dict(copy.deepcopy(BASE), bench="novel")
+    _write(run_dir, extra)                     # run-only bench
+    other = dict(copy.deepcopy(BASE), bench="gone")
+    _write(base_dir, other)                    # baseline-only bench
+    problems = bench_gate.gate(run_dir, base_dir, 4.0)
+    assert any("BENCH_gone.json" in p and "emitted no" in p
+               for p in problems)
+    assert any("BENCH_novel.json" in p and "no committed baseline" in p
+               for p in problems)
+
+
+def test_gate_fails_empty_baseline_dir(tmp_path):
+    problems = bench_gate.gate(tmp_path / "run", tmp_path / "nothing", 4.0)
+    assert len(problems) == 1 and "no BENCH_*.json baselines" in problems[0]
+
+
+def test_gate_main_exit_codes(tmp_path, capsys):
+    base_dir, run_dir = _dirs(tmp_path, copy.deepcopy(BASE))
+    assert bench_gate.main(["--run-dir", str(run_dir),
+                            "--baseline-dir", str(base_dir)]) == 0
+    assert "bench gate: OK" in capsys.readouterr().out
+    bad = copy.deepcopy(BASE)
+    bad["rows"][0]["exact"]["edge_work"] += 1
+    _write(run_dir, bad)
+    assert bench_gate.main(["--run-dir", str(run_dir),
+                            "--baseline-dir", str(base_dir)]) == 1
+    assert "bench gate: FAIL" in capsys.readouterr().out
+
+
+def test_run_out_dir_created_when_missing(tmp_path):
+    """benchmarks/run.py must create --out-dir (parents included) instead
+    of erroring on fresh CI runners, and fail clearly on a file collision."""
+    import pytest
+    run_path = pathlib.Path(__file__).parent.parent / "benchmarks" / "run.py"
+    spec = importlib.util.spec_from_file_location("bench_run", run_path)
+    bench_run = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bench_run)
+    out = tmp_path / "deeply" / "nested" / "artifacts"
+    path = bench_run.write_bench_json(out, "demo", "ok",
+                                      [("demo/x", 1.0, "d", {"k": 1})], None)
+    assert path.exists() and out.is_dir()
+    doc = json.loads(path.read_text())
+    assert doc["rows"] == [{"name": "demo/x", "us_per_call": 1.0,
+                            "derived": "d", "exact": {"k": 1}}]
+    clash = tmp_path / "file"
+    clash.write_text("")
+    with pytest.raises(SystemExit, match="collides"):
+        bench_run.ensure_out_dir(clash / "sub")
+
+
+def test_committed_smoke_baselines_self_consistent():
+    """The committed baselines must gate-pass against themselves (guards
+    against committing a failed/failed-status baseline)."""
+    baseline_dir = pathlib.Path(__file__).parent.parent / "benchmarks" / \
+        "baselines" / "smoke"
+    problems = bench_gate.gate(baseline_dir, baseline_dir, 1.0001)
+    assert problems == []
+    docs = [json.loads(p.read_text())
+            for p in baseline_dir.glob("BENCH_*.json")]
+    assert docs, "no committed smoke baselines"
+    assert all(d["status"] == "ok" for d in docs)
+    assert all(d["schema_version"] == 2 for d in docs)

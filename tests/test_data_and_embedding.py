@@ -29,17 +29,17 @@ def test_gnn_and_dien_batch_shapes():
     assert int(jnp.max(d["hist_items"])) < 100
 
 
-@given(v=st.integers(4, 64), d=st.integers(1, 16), l=st.integers(1, 128),
+@given(v=st.integers(4, 64), d=st.integers(1, 16), n_ids=st.integers(1, 128),
        b=st.integers(1, 16), seed=st.integers(0, 99))
 @settings(max_examples=15, deadline=None)
-def test_embedding_bag_matches_loop(v, d, l, b, seed):
+def test_embedding_bag_matches_loop(v, d, n_ids, b, seed):
     key = jax.random.PRNGKey(seed)
     table = jax.random.normal(key, (v, d))
-    ids = jax.random.randint(jax.random.fold_in(key, 1), (l,), 0, v)
-    bags = jax.random.randint(jax.random.fold_in(key, 2), (l,), 0, b)
+    ids = jax.random.randint(jax.random.fold_in(key, 1), (n_ids,), 0, v)
+    bags = jax.random.randint(jax.random.fold_in(key, 2), (n_ids,), 0, b)
     out = embedding_bag(table, ids, bags, b, mode="sum")
     ref = np.zeros((b, d), np.float32)
-    for i in range(l):
+    for i in range(n_ids):
         ref[int(bags[i])] += np.asarray(table[int(ids[i])])
     np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
 

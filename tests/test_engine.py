@@ -8,7 +8,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import SnapshotStore
 from repro.graph import (
-    EdgeView,
     incremental_additions,
     incremental_additions_batched,
     make_evolving_sequence,

@@ -67,14 +67,15 @@ def test_segment_reduce_dtypes(dtype):
                                np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2)
 
 
-@pytest.mark.parametrize("v,d,l,b", [(100, 18, 500, 16), (4096, 36, 10_000, 256),
-                                     (777, 7, 3000, 33)])
-def test_embedding_bag_matches_ref(v, d, l, b):
+@pytest.mark.parametrize("v,d,n_ids,b",
+                         [(100, 18, 500, 16), (4096, 36, 10_000, 256),
+                          (777, 7, 3000, 33)])
+def test_embedding_bag_matches_ref(v, d, n_ids, b):
     k = jax.random.PRNGKey(v)
     table = jax.random.normal(k, (v, d))
-    ids = jax.random.randint(jax.random.PRNGKey(1), (l,), 0, v)
-    bags = jax.random.randint(jax.random.PRNGKey(2), (l,), 0, b)
-    wts = jax.random.uniform(jax.random.PRNGKey(3), (l,))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (n_ids,), 0, v)
+    bags = jax.random.randint(jax.random.PRNGKey(2), (n_ids,), 0, b)
+    wts = jax.random.uniform(jax.random.PRNGKey(3), (n_ids,))
     got = np.asarray(embedding_bag_fused(table, ids, bags, wts, n_bags=b))
     ref = np.asarray(embedding_bag_ref(table, ids, bags, wts, n_bags=b))
     np.testing.assert_allclose(got, ref, rtol=3e-5, atol=3e-5)

@@ -1,14 +1,12 @@
 """Runtime: checkpoint/restart, failure drills, stragglers, elastic, compression."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.optim import adamw_init, adamw_update
-from repro.optim.compress import ef_compress_update, init_residuals
+from repro.optim.compress import ef_compress_update
 from repro.runtime import (
     CheckpointManager,
     FaultTolerantRunner,

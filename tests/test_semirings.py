@@ -9,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.graph import EdgeView, run_to_fixpoint
 from repro.graph.edgeset import make_block
-from repro.graph.semiring import ALL_SEMIRINGS, BFS, SSSP, SSWP, SSNP, VITERBI
+from repro.graph.semiring import ALL_SEMIRINGS, SSSP
 
 
 def dijkstra_like(n, edges, sr, source):

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the paper's system (drivers + integration)."""
 
 import numpy as np
-import pytest
 
 from repro.core import (
     SnapshotStore,
@@ -69,7 +68,7 @@ def test_evolve_driver_cli():
 def test_dryrun_module_has_flag_first():
     """The XLA device-count override must precede every import (spec)."""
     src = open("src/repro/launch/dryrun.py").read()
-    first_code = [l for l in src.splitlines() if l and not l.startswith("#")]
+    first_code = [ln for ln in src.splitlines() if ln and not ln.startswith("#")]
     assert first_code[0] == "import os"
     assert "xla_force_host_platform_device_count=512" in first_code[1]
     idx_flag = src.index("XLA_FLAGS")

@@ -1,0 +1,289 @@
+"""Streaming-campaign scheduler + anchor-state cache contract.
+
+Covers the core/window.py stream contract (bit-identical to cold
+per-campaign slides while performing strictly fewer anchor rebuilds) and
+the SnapshotStore "AS" family guarantees (LRU participation with exact
+byte accounting across overwrites, eviction mid-stream forcing a rebuild
+that is bit-identical, explicit release, tightest-cover selection).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SnapshotStore,
+    WindowStream,
+    run_window_slide_batched,
+    run_window_stream_batched,
+    slide_windows,
+    stream_campaigns,
+)
+from repro.core.snapshots import _block_nbytes
+from repro.core.window import _stream_qkey
+from repro.graph import QueryState, make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def _store(n=300, e=2400, snaps=8, changes=150, seed=11, granule=128, **kw):
+    return SnapshotStore(make_evolving_sequence(n, e, snaps, changes,
+                                                seed=seed),
+                         granule=granule, **kw)
+
+
+def _qkey(sr, track_parents=False):
+    return _stream_qkey(sr, 0, 10_000, False, 1, track_parents)
+
+
+# -- stream plan construction -------------------------------------------------
+
+def test_stream_campaigns_partition():
+    windows = slide_windows(8, 3)  # 6 windows
+    assert stream_campaigns(windows, 2) == [windows[0:2], windows[2:4],
+                                            windows[4:6]]
+    assert stream_campaigns(windows, 4) == [windows[0:4], windows[4:6]]
+    assert stream_campaigns(windows, 10) == [windows]
+    with pytest.raises(ValueError):
+        stream_campaigns(windows, 0)
+
+
+def test_window_stream_object_buffers_and_drains():
+    ws = WindowStream(campaign_width=2)
+    ws.extend([(0, 2), (1, 3)])
+    assert ws.pending() == [(0, 2), (1, 3)]
+    assert ws.take() == [(0, 2), (1, 3)]
+    assert ws.pending() == []
+    ws.extend([(2, 4), (3, 5)])          # advancing past the drained tail
+    assert ws.pending() == [(2, 4), (3, 5)]
+    with pytest.raises(ValueError):       # steps backwards from (3, 5)
+        ws.extend([(1, 4)])
+    with pytest.raises(ValueError):
+        WindowStream(campaign_width=0)
+    with pytest.raises(ValueError):
+        WindowStream(campaign_width=2, windows=[(2, 4), (0, 3)])
+
+
+def test_window_stream_rejects_conflicting_inputs():
+    store = _store(snaps=4)
+    sr = ALL_SEMIRINGS["sssp"]
+    with pytest.raises(ValueError):
+        run_window_stream_batched(store, sr, 0)  # no width/windows/stream
+    with pytest.raises(ValueError):
+        run_window_stream_batched(store, sr, 0, 2,
+                                  stream=WindowStream(campaign_width=1))
+    with pytest.raises(ValueError):  # the stream carries its own width
+        run_window_stream_batched(store, sr, 0, campaign_width=8,
+                                  stream=WindowStream(campaign_width=1))
+    with pytest.raises(ValueError):  # non-advancing explicit windows
+        run_window_stream_batched(store, sr, 0, windows=[(2, 4), (0, 3)])
+
+
+def test_window_stream_empty_pending_is_noop():
+    store = _store(snaps=4)
+    sr = ALL_SEMIRINGS["sssp"]
+    run = run_window_stream_batched(store, sr, 0,
+                                    stream=WindowStream(campaign_width=2))
+    assert run.results == {} and run.campaigns == []
+    assert run.anchor_rebuilds == 0
+
+
+# -- bit-identity vs cold campaigns + strictly fewer rebuilds -----------------
+
+@pytest.mark.parametrize("alg", ["sssp", "sswp"])
+@pytest.mark.parametrize("track_parents", [False, True])
+def test_window_stream_identical_to_cold_campaigns(alg, track_parents):
+    """The acceptance criterion: streamed values == cold per-campaign
+    values bit-for-bit, with 1 rebuild + K-1 hops vs K cold rebuilds."""
+    sr = ALL_SEMIRINGS[alg]
+    store = _store()
+    run = run_window_stream_batched(store, sr, 0, 3, campaign_width=2,
+                                    track_parents=track_parents)
+    assert len(run.campaigns) == 3
+    assert run.anchor_events == ["rebuild", "hop", "hop"]
+    assert run.anchor_rebuilds == 1 < len(run.campaigns)
+    assert run.anchor_hops == len(run.campaigns) - 1
+
+    cold_store = _store()  # fresh: the cold path shares nothing
+    for campaign, anchor in zip(run.campaigns, run.anchors):
+        cold = run_window_slide_batched(cold_store, sr, 0, windows=campaign,
+                                        anchor=anchor,
+                                        track_parents=track_parents)
+        for wnd in campaign:
+            np.testing.assert_array_equal(
+                np.asarray(run.results[wnd]), np.asarray(cold.results[wnd]),
+                err_msg=f"{alg}/window {wnd}: stream != cold campaign")
+
+
+def test_window_stream_campaign_launch_work_parity():
+    """Given the same anchor state, a campaign's stacked launch performs
+    exactly the cold launch's edge work (anchor savings are the ONLY
+    difference between the paths)."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store(seed=5)
+    run = run_window_stream_batched(store, sr, 0, 2, campaign_width=2)
+    cold_store = _store(seed=5)
+    for campaign, anchor, hop in zip(run.campaigns, run.anchors,
+                                     run.hop_stats):
+        cold = run_window_slide_batched(cold_store, sr, 0, windows=campaign,
+                                        anchor=anchor)
+        cold_work = sum(s.edge_work for s in cold.hop_stats)
+        assert hop.edge_work == pytest.approx(cold_work)
+
+
+def test_window_stream_matches_plain_slide_values():
+    """Different anchors per campaign, same unique fixpoint: stream values
+    equal the one-anchor batched slide's bit-for-bit."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store(seed=23)
+    slide = run_window_slide_batched(store, sr, 0, 3)
+    stream = run_window_stream_batched(store, sr, 0, 3, campaign_width=2)
+    assert list(stream.results) == list(slide.results)
+    for wnd in slide.results:
+        np.testing.assert_array_equal(np.asarray(stream.results[wnd]),
+                                      np.asarray(slide.results[wnd]))
+
+
+def test_window_stream_cg_split_hops_stay_identical():
+    """cg_split > 1 splits the anchor view on every acquisition path
+    (rebuild, hop, hit) — block partitioning never changes values."""
+    sr = ALL_SEMIRINGS["sssp"]
+    plain = run_window_stream_batched(_store(seed=31), sr, 0, 3,
+                                      campaign_width=2)
+    split = run_window_stream_batched(_store(seed=31), sr, 0, 3,
+                                      campaign_width=2, cg_split=3)
+    assert split.anchor_events == plain.anchor_events
+    for wnd in plain.results:
+        np.testing.assert_array_equal(np.asarray(split.results[wnd]),
+                                      np.asarray(plain.results[wnd]))
+
+
+def test_window_stream_back_to_back_hits_memory():
+    """Re-running the same campaigns must be pure cache hits: zero anchor
+    rebuilds, zero hops, identical values."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    first = run_window_stream_batched(store, sr, 0, 3, campaign_width=2)
+    again = run_window_stream_batched(store, sr, 0, 3, campaign_width=2)
+    assert again.anchor_events == ["hit"] * len(first.campaigns)
+    assert again.anchor_rebuilds == 0 and again.anchor_hops == 0
+    for wnd in first.results:
+        np.testing.assert_array_equal(np.asarray(again.results[wnd]),
+                                      np.asarray(first.results[wnd]))
+
+
+def test_window_stream_advancing_calls_rebuild_only_on_extension():
+    """A later call whose stream extends past every cached anchor pays ONE
+    rebuild (the soundness boundary: a wider stream's anchor is not
+    reachable from a narrower one's by additions), then hops again."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store(snaps=8)
+    ws = WindowStream(campaign_width=2)
+    ws.extend(slide_windows(8, 3)[:4])          # windows up to (3, 5)
+    first = run_window_stream_batched(store, sr, 0, stream=ws)
+    assert first.anchor_events == ["rebuild", "hop"]
+    ws.extend(slide_windows(8, 3)[4:])          # arrivals extend to (5, 7)
+    second = run_window_stream_batched(store, sr, 0, stream=ws)
+    assert second.anchor_events[0] == "rebuild"  # hi advanced: no cover
+    assert set(second.anchor_events[1:]) <= {"hop", "hit"}
+    # every window still bit-identical to a cold campaign run
+    cold_store = _store(snaps=8)
+    for run in (first, second):
+        for campaign, anchor in zip(run.campaigns, run.anchors):
+            cold = run_window_slide_batched(cold_store, sr, 0,
+                                            windows=campaign, anchor=anchor)
+            for wnd in campaign:
+                np.testing.assert_array_equal(
+                    np.asarray(run.results[wnd]),
+                    np.asarray(cold.results[wnd]))
+
+
+def test_window_stream_on_snapshot_mesh():
+    """--shard --stream path: campaign lanes over a 1-D data mesh."""
+    from repro.launch.mesh import make_snapshot_mesh
+    store = _store(n=200, e=1400, snaps=5, changes=100, seed=29, granule=64)
+    sr = ALL_SEMIRINGS["sssp"]
+    meshed = run_window_stream_batched(store, sr, 0, 2, campaign_width=2,
+                                       mesh=make_snapshot_mesh())
+    plain = run_window_stream_batched(_store(n=200, e=1400, snaps=5,
+                                             changes=100, seed=29,
+                                             granule=64),
+                                      sr, 0, 2, campaign_width=2)
+    for wnd in plain.results:
+        np.testing.assert_array_equal(np.asarray(meshed.results[wnd]),
+                                      np.asarray(plain.results[wnd]))
+
+
+# -- anchor-state cache: LRU interplay ----------------------------------------
+
+def test_anchor_state_cache_roundtrip_and_cover():
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    run = run_window_stream_batched(store, sr, 0, 3, campaign_width=2)
+    qkey = _qkey(sr)
+    for anchor in run.anchors:
+        state = store.anchor_state_get(qkey, anchor)
+        assert isinstance(state, QueryState)
+    # cover for a narrower interval picks the TIGHTEST cached super-window
+    lo = max(a for a, _ in run.anchors)
+    hi = run.anchors[0][1]
+    cover_window, state = store.anchor_state_cover(qkey, (lo + 1, hi))
+    assert cover_window == (lo, hi)          # tightest, not the widest
+    assert isinstance(state, QueryState)
+    assert store.anchor_state_cover(qkey, (0, hi)) is None  # nothing covers
+    # a different query key shares nothing
+    assert store.anchor_state_get(_qkey(ALL_SEMIRINGS["sswp"]),
+                                  run.anchors[0]) is None
+
+
+def test_anchor_state_eviction_mid_stream_forces_identical_rebuild():
+    """A memory-tight store evicts cached anchor states between campaigns;
+    the scheduler rebuilds (strictly more rebuilds than unbounded) and the
+    results stay bit-identical."""
+    sr = ALL_SEMIRINGS["sssp"]
+    free = _store(seed=13)
+    tight = _store(seed=13, cache_bytes=8 * 1024)
+    a = run_window_stream_batched(free, sr, 0, 3, campaign_width=1)
+    b = run_window_stream_batched(tight, sr, 0, 3, campaign_width=1)
+    assert tight.evictions > 0
+    assert a.anchor_rebuilds == 1
+    assert b.anchor_rebuilds > a.anchor_rebuilds   # eviction cost = rebuilds
+    for wnd in a.results:
+        np.testing.assert_array_equal(np.asarray(a.results[wnd]),
+                                      np.asarray(b.results[wnd]))
+
+
+def test_anchor_state_lru_accounting_across_overwrites():
+    """cached_nbytes must equal the exact sum over cached entries while
+    anchor-state tags are inserted, overwritten and released."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store(seed=7)
+    qkey = _qkey(sr)
+
+    def actual():
+        return sum(_block_nbytes(b) for b in store._blocks.values())
+
+    for _ in range(3):
+        run = run_window_stream_batched(store, sr, 0, 3, campaign_width=2)
+        assert store.cached_nbytes == actual()
+        anchor = run.anchors[0]
+        state = store.anchor_state_get(qkey, anchor)
+        before = store.cached_nbytes
+        # overwrite the same AS tag: displaced bytes must be subtracted
+        store.anchor_state_put(qkey, anchor, state)
+        assert store.cached_nbytes == before == actual()
+        freed = store.release(("AS",))
+        assert freed > 0
+        assert store.cached_nbytes == actual()
+        assert all(t[0] != "AS" for t in store._blocks)
+    store.release()
+    assert store.cached_nbytes == 0
+
+
+def test_release_AS_leaves_blocks_warm():
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store(seed=7)
+    run_window_stream_batched(store, sr, 0, 2, campaign_width=2)
+    assert any(t[0] == "AS" for t in store._blocks)
+    assert any(t[0] == "DS" for t in store._blocks)
+    store.release(("AS",))
+    assert not any(t[0] == "AS" for t in store._blocks)
+    assert any(t[0] == "DS" for t in store._blocks)  # stacks stay warm
