@@ -165,6 +165,42 @@ def bench_window_stream(scale: str):
     return out
 
 
+def bench_window_overlap(scale: str):
+    from benchmarks.window_stream import run_window_overlap_bench
+    params = {
+        "smoke": dict(n=400, e=3_000, snaps=6, batch_changes=200,
+                      num_streams=2, width=3),
+        "default": dict(snaps=12, num_streams=3, width=4),
+        "full": dict(n=20_000, e=200_000, snaps=16, batch_changes=8_000,
+                     num_streams=4, width=6),
+    }[scale]
+    rows = run_window_overlap_bench(**params)
+    # bit-identity shared-vs-solo AND strictly-fewer-total-rebuilds are
+    # asserted inside run_window_overlap_bench; a failure raises there
+    out = []
+    for r in rows:
+        out.append((f"window_overlap/streams{r['streams']}",
+                    r["shared_s"] * 1e6,
+                    f"links={r['chain_links']} "
+                    f"rebuilds={r['rebuilds_shared']}+{r['hops_shared']}hops"
+                    f"+{r['hits_shared']}hits vs solo {r['rebuilds_solo']} "
+                    f"speedup={r['shared_speedup']:.2f}x "
+                    f"auto-widths={r['auto_widths']}",
+                    {"streams": int(r["streams"]),
+                     "chain_links": int(r["chain_links"]),
+                     "rebuilds_shared": int(r["rebuilds_shared"]),
+                     "hops_shared": int(r["hops_shared"]),
+                     "hits_shared": int(r["hits_shared"]),
+                     "rebuilds_solo": int(r["rebuilds_solo"]),
+                     "hops_solo": int(r["hops_solo"]),
+                     "added_edges": int(r["added_edges"]),
+                     "anchor_delta_edges": int(r["anchor_delta_edges"]),
+                     "shared_work": int(round(r["shared_work"])),
+                     "solo_work": int(round(r["solo_work"])),
+                     "auto_widths": [int(w) for w in r["auto_widths"]]}))
+    return out
+
+
 def bench_evolve(scale: str):
     """End-to-end wall time of every executor mode the evolve driver runs,
     verified against from-scratch fixpoints — the committed seed baseline
@@ -253,6 +289,7 @@ BENCHES = {
     "tg_sharing": bench_tg_sharing,
     "window_slide": bench_window_slide,
     "window_stream": bench_window_stream,
+    "window_overlap": bench_window_overlap,
     "kernels": bench_kernels,
     "evolve": bench_evolve,
 }

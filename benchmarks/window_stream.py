@@ -12,20 +12,33 @@ bit-compared per window each round, and the streamed path must perform
 STRICTLY FEWER anchor rebuilds — a benchmark row is also the acceptance
 check for the scheduler.
 
-    PYTHONPATH=src python -m benchmarks.window_stream [--smoke]
+    PYTHONPATH=src python -m benchmarks.window_stream [--smoke] [--overlap]
+
+``--overlap`` benches the OTHER sharing axis (``run_window_overlap_bench``):
+N overlapping streams registered on one ``AnchorChain`` — later streams hop
+off the chain links earlier streams left pinned — against each stream
+running solo on its own store. Rebuild/hop counts and frontier-masked edge
+work are reported for both, every window is bit-compared, and the shared
+path must rebuild strictly fewer anchors in total (docs/STREAMING.md
+explains the chain).
 
 ``--smoke`` runs a tiny graph for a seconds-long local check; CI covers the
-same path via the bench job's ``benchmarks.run --smoke`` harness pass and
-diffs the emitted BENCH_window_stream.json against the committed smoke
-baseline (scripts/bench_gate.py; see docs/BENCHMARKS.md).
+same paths via the bench job's ``benchmarks.run --smoke`` harness pass and
+diffs the emitted BENCH_window_stream.json / BENCH_window_overlap.json
+against the committed smoke baselines (scripts/bench_gate.py; see
+docs/BENCHMARKS.md).
 """
 
 import argparse
+import time
 
 import numpy as np
 
 from repro.core import (
+    AnchorChain,
     SnapshotStore,
+    WindowStream,
+    optimal_campaigns,
     run_window_slide_batched,
     run_window_stream_batched,
     slide_windows,
@@ -93,15 +106,123 @@ def run_window_stream_bench(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
     return rows
 
 
+def run_window_overlap_bench(n=10_000, e=100_000, snaps=12,
+                             batch_changes=4_000, num_streams=3, width=4,
+                             campaign_width=2, seed=0, alg="sssp", source=0):
+    """N overlapping streams sharing one AnchorChain vs running solo.
+
+    Stream s consumes a staggered suffix of the full slide plan (all
+    streams end at the sequence tail, so every later stream's anchors are
+    covered by the chain links earlier streams left behind — the sharing
+    regime; see docs/STREAMING.md). The shared path runs every stream
+    against ONE store + chain (registration up front, so early links stay
+    pinned for laggards); the solo baseline runs each stream on its own
+    fresh store. Every window is bit-compared and the shared path must
+    perform STRICTLY FEWER anchor rebuilds in total — the bench row doubles
+    as the acceptance check for chain sharing.
+    """
+    sr = ALL_SEMIRINGS[alg]
+    seq = make_evolving_sequence(n, e, snaps, batch_changes, seed=seed)
+    all_windows = slide_windows(snaps, width)
+    stagger = max(1, len(all_windows) // num_streams)
+    window_sets = [all_windows[s * stagger:] for s in range(num_streams)]
+    assert all(window_sets), \
+        f"staggering {len(all_windows)} windows over {num_streams} streams " \
+        "left an empty stream — widen the plan or drop streams"
+
+    def shared_run():
+        store = SnapshotStore(seq)
+        chain = AnchorChain(store, name="overlap")
+        streams = [WindowStream(campaign_width=campaign_width, windows=ws,
+                                name=f"overlap-{i}")
+                   for i, ws in enumerate(window_sets)]
+        for s in streams:
+            chain.register(s)  # up front: early links stay pinned for all
+        t0 = time.perf_counter()
+        runs = [run_window_stream_batched(store, sr, source, stream=s,
+                                          chain=chain) for s in streams]
+        dt = time.perf_counter() - t0
+        for s in streams:
+            chain.unregister(s)
+        return runs, dt, chain, store
+
+    def solo_run():
+        t0 = time.perf_counter()
+        runs = [run_window_stream_batched(SnapshotStore(seq), sr, source,
+                                          windows=ws,
+                                          campaign_width=campaign_width)
+                for ws in window_sets]
+        return runs, time.perf_counter() - t0
+
+    shared_run(), solo_run()  # warm-up: compile the campaign-shaped traces
+    shared, shared_s, chain, store = shared_run()
+    solo, solo_s = solo_run()
+    for sh, so in zip(shared, solo):
+        for wnd in so.results:
+            np.testing.assert_array_equal(
+                np.asarray(sh.results[wnd]), np.asarray(so.results[wnd]),
+                err_msg=f"window {wnd}: shared chain != solo")
+    rebuilds_shared = sum(r.anchor_rebuilds for r in shared)
+    rebuilds_solo = sum(r.anchor_rebuilds for r in solo)
+    assert rebuilds_shared < rebuilds_solo, (
+        f"chain sharing must rebuild strictly fewer anchors "
+        f"({rebuilds_shared} vs {rebuilds_solo} solo)")
+
+    def total_work(runs):
+        return sum(sum(s.edge_work for s in r.anchor_stats)
+                   + sum(s.edge_work for s in r.hop_stats) for r in runs)
+
+    return [{
+        "streams": num_streams,
+        "width": width,
+        "campaign_width": campaign_width,
+        "windows_per_stream": [len(ws) for ws in window_sets],
+        "chain_links": len(chain.links),
+        "rebuilds_shared": rebuilds_shared,
+        "hops_shared": sum(r.anchor_hops for r in shared),
+        "hits_shared": sum(r.anchor_hits for r in shared),
+        "rebuilds_solo": rebuilds_solo,
+        "hops_solo": sum(r.anchor_hops for r in solo),
+        "added_edges": sum(r.added_edges for r in shared),
+        "anchor_delta_edges": sum(r.anchor_delta_edges for r in shared),
+        "shared_work": total_work(shared),
+        "solo_work": total_work(solo),
+        "shared_s": shared_s,
+        "solo_s": solo_s,
+        "shared_speedup": solo_s / shared_s,
+        # planner regression canary: the Δ-volume DP's choice on stream 0's
+        # windows is a pure function of the seeded graph
+        "auto_widths": optimal_campaigns(store, window_sets[0],
+                                         lane_budget=8).widths,
+    }]
+
+
 SMOKE = dict(n=400, e=3_000, snaps=6, batch_changes=200, widths=(2, 3),
              campaign_width=2)
+SMOKE_OVERLAP = dict(n=400, e=3_000, snaps=6, batch_changes=200,
+                     num_streams=2, width=3)
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--smoke", action="store_true",
                    help="tiny graph (CI smoke run)")
+    p.add_argument("--overlap", action="store_true",
+                   help="bench N overlapping streams sharing one AnchorChain "
+                        "vs running solo (instead of stream-vs-cold)")
     args = p.parse_args(argv)
+    if args.overlap:
+        for r in run_window_overlap_bench(**(SMOKE_OVERLAP if args.smoke
+                                             else {})):
+            print(f"streams={r['streams']}  windows/stream="
+                  f"{r['windows_per_stream']}  chain links={r['chain_links']}  "
+                  f"rebuilds {r['rebuilds_shared']} (+{r['hops_shared']} hops "
+                  f"+{r['hits_shared']} hits) vs solo {r['rebuilds_solo']} "
+                  f"(+{r['hops_solo']} hops)  shared {r['shared_s']:.3f}s  "
+                  f"solo {r['solo_s']:.3f}s  ({r['shared_speedup']:.2f}x, "
+                  f"work {r['shared_work']:,.0f} vs {r['solo_work']:,.0f})  "
+                  f"auto-widths={r['auto_widths']}  bit-identical ✓")
+        return 0
     rows = run_window_stream_bench(**(SMOKE if args.smoke else {}))
     for r in rows:
         print(f"width={r['width']:3d}  campaigns={r['campaigns']:3d}  "

@@ -1,19 +1,36 @@
 #!/usr/bin/env python3
-"""Check that intra-repo links in docs/*.md and README.md resolve.
+"""Docs drift gate: links, API-reference names, embedded --help output.
 
-Stdlib-only (runs in CI's docs job before anything is installed). For each
-markdown file checked, every relative link target must exist on disk, and
-every ``#fragment`` — on another checked markdown file or within the same
-file — must match a heading's GitHub-style anchor. External links
-(http/https/mailto) are ignored.
+Stdlib-only (runs in CI's docs job before anything is installed). Three
+checks, all on by default:
+
+* **Links.** For each markdown file checked, every relative link target
+  must exist on disk, and every ``#fragment`` — on another checked
+  markdown file or within the same file — must match a heading's
+  GitHub-style anchor. External links (http/https/mailto) are ignored.
+* **API reference** (when docs/API.md is among the files). Every
+  ``### `name(...)` `` entry under a ``## `repro.x.y` `` module heading
+  must name a public def/class (or ``Class.method``) that still exists in
+  that module's source — renaming a function without updating API.md
+  fails CI — and, conversely, every public module-level def/class and
+  every public method of a public class must have an entry, so new API
+  surface cannot ship undocumented. Parsed with ``ast``, so nested helper
+  defs don't count as surface.
+* **Embedded --help** (when docs/BENCHMARKS.md is among the files). The
+  fenced block under the ``<!-- bench-gate-help -->`` marker must equal
+  ``scripts/bench_gate.py --help`` verbatim (COLUMNS=80), so the
+  documented CLI can't drift from the real one.
 
     python scripts/check_links.py [files...]   # default: README.md docs/*.md
 """
 
 from __future__ import annotations
 
+import ast
+import os
 import pathlib
 import re
+import subprocess
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
@@ -72,6 +89,108 @@ def check(files: list[pathlib.Path]) -> list[str]:
     return errors
 
 
+# -- API-reference drift (docs/API.md vs the source it documents) -------------
+
+API_MODULE_RE = re.compile(r"^##\s+`(repro\.[\w.]+)`", re.MULTILINE)
+API_ENTRY_RE = re.compile(r"^###\s+`([A-Za-z_][\w.]*)")
+
+
+def public_surface(src: pathlib.Path) -> set[str]:
+    """Public names an API reference must cover, via ``ast``:
+    module-level defs/classes plus public methods (and properties) of
+    public classes — nested helper defs are not surface."""
+    tree = ast.parse(src.read_text(encoding="utf-8"))
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                names.add(node.name)
+        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            names.add(node.name)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and not sub.name.startswith("_"):
+                    names.add(f"{node.name}.{sub.name}")
+    return names
+
+
+def check_api_doc(md: pathlib.Path) -> list[str]:
+    """Stale/missing-entry errors for the hand-written API reference."""
+    errors: list[str] = []
+    text = md.read_text(encoding="utf-8")
+    sections: dict[str, list[str]] = {}
+    module = None
+    for line in text.splitlines():
+        m = API_MODULE_RE.match(line)
+        if m:
+            module = m.group(1)
+            sections.setdefault(module, [])
+            continue
+        if line.startswith("## "):   # non-module section ends the scope
+            module = None
+            continue
+        e = API_ENTRY_RE.match(line)
+        if e and module is not None:
+            sections[module].append(e.group(1))
+    if not sections:
+        return [f"{rel(md)}: no '## `repro.…`' module sections found"]
+    for module, entries in sections.items():
+        src = REPO / "src" / pathlib.Path(*module.split("."))
+        src = src.with_suffix(".py")
+        if not src.exists():
+            errors.append(f"{rel(md)}: module {module} has no source file "
+                          f"{rel(src)}")
+            continue
+        surface = public_surface(src)
+        for entry in entries:
+            if entry not in surface:
+                errors.append(f"{rel(md)}: stale entry `{entry}` — not a "
+                              f"public def/class of {module}")
+        for name in sorted(surface - set(entries)):
+            errors.append(f"{rel(md)}: {module} public name `{name}` is "
+                          f"undocumented — add a '### `{name}(...)`' entry")
+    return errors
+
+
+# -- embedded --help drift (docs/BENCHMARKS.md vs scripts/bench_gate.py) ------
+
+HELP_MARKER = "<!-- bench-gate-help -->"
+HELP_CMD = ("scripts/bench_gate.py", "--help")
+
+
+def embedded_help_block(text: str) -> "str | None":
+    """The first fenced block after HELP_MARKER (None when absent)."""
+    _, found, after = text.partition(HELP_MARKER)
+    if not found:
+        return None
+    m = re.search(r"```[^\n]*\n(.*?)```", after, re.DOTALL)
+    return m.group(1) if m else None
+
+
+def check_embedded_help(md: pathlib.Path) -> list[str]:
+    embedded = embedded_help_block(md.read_text(encoding="utf-8"))
+    if embedded is None:
+        return [f"{rel(md)}: marker {HELP_MARKER!r} with a fenced help "
+                "block not found"]
+    proc = subprocess.run(
+        [sys.executable, str(REPO / HELP_CMD[0]), *HELP_CMD[1:]],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "COLUMNS": "80"},   # argparse wraps to COLUMNS
+    )
+    if proc.returncode != 0:
+        reason = (proc.stderr.strip().splitlines()[-1]
+                  if proc.stderr.strip() else "no stderr")
+        return [f"{rel(md)}: `{' '.join(HELP_CMD)}` exited "
+                f"{proc.returncode} — cannot compare the embedded help "
+                f"block ({reason})"]
+    actual = proc.stdout
+    if embedded.strip() != actual.strip():
+        return [f"{rel(md)}: embedded `{' '.join(HELP_CMD)}` output is stale "
+                "— re-paste the current --help into the fenced block under "
+                f"{HELP_MARKER!r}"]
+    return []
+
+
 def main(argv: list[str]) -> int:
     files = ([pathlib.Path(a).resolve() for a in argv]
              if argv else
@@ -79,12 +198,18 @@ def main(argv: list[str]) -> int:
     missing = [f for f in files if not f.exists()]
     for f in missing:
         print(f"MISSING FILE: {f}", file=sys.stderr)
-    errors = check([f for f in files if f.exists()])
+    present = [f for f in files if f.exists()]
+    errors = check(present)
+    if REPO / "docs" / "API.md" in present:
+        errors += check_api_doc(REPO / "docs" / "API.md")
+    if REPO / "docs" / "BENCHMARKS.md" in present:
+        errors += check_embedded_help(REPO / "docs" / "BENCHMARKS.md")
     for e in errors:
         print(f"BROKEN: {e}", file=sys.stderr)
     if missing or errors:
         return 1
-    print(f"checked {len(files)} files: all intra-repo links resolve")
+    print(f"checked {len(files)} files: links, API reference and embedded "
+          "--help all in sync")
     return 0
 
 

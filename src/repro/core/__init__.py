@@ -16,6 +16,7 @@ from repro.core.trigrid import (
     WorkSharingRun,
     bisection_plan,
     direct_hop_plan,
+    hop_added_edges,
     optimal_plan,
     plan_added_edges,
     plan_levels,
@@ -23,28 +24,39 @@ from repro.core.trigrid import (
     run_plan_batched,
 )
 from repro.core.window import (
+    AnchorChain,
+    CampaignPlan,
     WindowSlideRun,
     WindowStream,
     WindowStreamRun,
+    campaign_volume,
+    optimal_campaigns,
     run_window_slide,
     run_window_slide_batched,
     run_window_stream_batched,
+    select_chain,
     slide_windows,
     stream_campaigns,
     window_anchor,
 )
 
 __all__ = [
+    "AnchorChain",
+    "CampaignPlan",
     "SnapshotStore",
     "WindowSlideRun",
     "WindowStream",
     "WindowStreamRun",
+    "campaign_volume",
+    "optimal_campaigns",
     "run_window_slide",
     "run_window_slide_batched",
     "run_window_stream_batched",
+    "select_chain",
     "slide_windows",
     "stream_campaigns",
     "window_anchor",
+    "hop_added_edges",
     "StreamStats",
     "run_kickstarter_stream",
     "DirectHopRun",

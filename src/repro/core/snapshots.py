@@ -41,6 +41,13 @@ Store contract (what every executor may assume):
   recomputing from the base snapshot. Values of a cached state are a pure
   function of ``(window, query key)`` (the monotone rounded fixpoint is
   unique), so eviction again costs only recompute, never correctness.
+* **Pinning (refcounted eviction exemption).** ``pin``/``unpin`` exempt a
+  tag from LRU eviction and from ``release``. The anchor-chain scheduler
+  (core/window.py::AnchorChain) pins the chain links its registered
+  streams are still behind, so a memory-tight store cannot evict a state a
+  lagging overlapping stream is about to hop from; once every stream has
+  advanced past a link it is unpinned and ages out normally. Pinning never
+  affects results — only which path (hit/hop/rebuild) acquires a state.
 """
 
 from __future__ import annotations
@@ -59,7 +66,34 @@ from repro.graph.edgeset import (
 from repro.graph.generators import EvolvingSequence
 
 
-def _block_nbytes(blk: EdgeBlock) -> int:
+def tightest_cover(candidates, window, size_fn):
+    """Largest-|T| candidate window covering ``window`` (None if none).
+
+    THE cover rule, in one place: a state converged on ``(ci, cj)`` can
+    warm-start ``window = (a, b)`` iff ``ci <= a and b <= cj`` (its common
+    graph is a subgraph), and among covers the largest ``size_fn(ci, cj)``
+    minimizes the hop's Δ volume. Shared by the store's AS-family scan
+    (:meth:`SnapshotStore.anchor_state_cover`) and the anchor-chain link
+    selection (core/window.py ``AnchorChain.cover``) so the two can never
+    disagree about which cover is tightest.
+    """
+    a, b = window
+    best, best_size = None, -1
+    for cand in candidates:
+        ci, cj = cand
+        if ci <= a and b <= cj:
+            size = size_fn(ci, cj)
+            if size > best_size:
+                best, best_size = cand, size
+    return best
+
+
+def _block_nbytes(blk) -> int:
+    # Cached entries that know their own footprint (engine QueryStates via
+    # the ``nbytes`` hook) report it; raw EdgeBlocks are summed directly.
+    n = getattr(blk, "nbytes", None)
+    if n is not None:
+        return int(n)
     return sum(int(a.size) * a.dtype.itemsize for a in blk)
 
 
@@ -86,6 +120,7 @@ class SnapshotStore:
         }
         self._blocks: OrderedDict[tuple, EdgeBlock] = OrderedDict()
         self._cached_nbytes = 0
+        self._pins: dict[tuple, int] = {}   # tag -> refcount (see pin())
         self.evictions = 0  # lifetime count, for tests/benchmarks
 
     # -- block cache (LRU by bytes + explicit release) -------------------------
@@ -109,15 +144,45 @@ class SnapshotStore:
             self._cached_nbytes -= _block_nbytes(old)
         self._blocks[tag] = blk
         self._cached_nbytes += _block_nbytes(blk)
-        if self.cache_bytes is not None:
-            while self._cached_nbytes > self.cache_bytes and len(self._blocks) > 1:
-                old_tag, old_blk = next(iter(self._blocks.items()))
-                if old_tag == tag:
+        if self.cache_bytes is not None and self._cached_nbytes > self.cache_bytes:
+            # LRU order, skipping pinned tags and the entry just stored (the
+            # caller holds a reference to it anyway).
+            for old_tag in list(self._blocks):
+                if self._cached_nbytes <= self.cache_bytes \
+                        or len(self._blocks) <= 1:
                     break
-                del self._blocks[old_tag]
-                self._cached_nbytes -= _block_nbytes(old_blk)
+                if old_tag == tag or self._pins.get(old_tag):
+                    continue
+                self._cached_nbytes -= _block_nbytes(self._blocks.pop(old_tag))
                 self.evictions += 1
         return blk
+
+    def pin(self, tag: tuple) -> None:
+        """Exempt a cached entry from LRU eviction (refcounted).
+
+        Pins nest: each ``pin`` must be matched by one :meth:`unpin` before
+        the entry returns to normal LRU management. Pinning is by tag, so it
+        survives the entry being overwritten (re-``put`` under the same tag)
+        and is legal before the entry exists — the anchor-chain scheduler
+        (core/window.py::AnchorChain) pins "AS" states its registered
+        streams are still behind. Pinned entries still count toward
+        ``cache_bytes``; :meth:`release` also skips them.
+        """
+        self._pins[tag] = self._pins.get(tag, 0) + 1
+
+    def unpin(self, tag: tuple) -> None:
+        """Drop one pin refcount; at zero the entry rejoins the LRU."""
+        n = self._pins.get(tag, 0) - 1
+        if n < 0:
+            raise ValueError(f"unpin without matching pin for tag {tag!r}")
+        if n == 0:
+            del self._pins[tag]
+        else:
+            self._pins[tag] = n
+
+    def pinned_tags(self) -> "set[tuple]":
+        """Tags currently exempt from eviction (for tests/diagnostics)."""
+        return set(self._pins)
 
     def release(self, kinds: "tuple[str, ...] | None" = None) -> int:
         """Drop cached device blocks; returns the number of bytes released.
@@ -126,14 +191,16 @@ class SnapshotStore:
         stacked ``delta_stack`` buffers the batched executors built, leaving
         the sequential executors' per-hop "D" blocks warm, and ``("AS",)``
         drops cached anchor query states (the streaming scheduler then
-        rebuilds its next anchor cold). ``None`` drops everything. Host-side
-        key arrays are never dropped, so subsequent fetches rebuild
+        rebuilds its next anchor cold). ``None`` drops everything except
+        pinned entries (:meth:`pin`) — a chain link some registered stream
+        still needs cannot be dropped out from under it. Host-side key
+        arrays are never dropped, so subsequent fetches rebuild
         bit-identical blocks.
         """
         if isinstance(kinds, str):  # release("DS") must not match family "D"
             kinds = (kinds,)
         drop = [t for t in self._blocks
-                if kinds is None or t[0] in kinds]
+                if (kinds is None or t[0] in kinds) and not self._pins.get(t)]
         freed = 0
         for t in drop:
             freed += _block_nbytes(self._blocks.pop(t))
@@ -166,17 +233,11 @@ class SnapshotStore:
         Returns ``(cover_window, state)`` or ``None``. The exact window
         itself is excluded; use :meth:`anchor_state_get` for hits.
         """
-        a, b = window
-        best: "tuple[int, int] | None" = None
-        best_size = -1
-        for tag in self._blocks:
-            if tag[0] != "AS" or tag[1] != qkey or tag[2] == (a, b):
-                continue
-            ci, cj = tag[2]
-            if ci <= a and b <= cj:
-                size = self.window_size(ci, cj)
-                if size > best_size:
-                    best, best_size = (ci, cj), size
+        window = tuple(window)
+        best = tightest_cover(
+            [tag[2] for tag in self._blocks
+             if tag[0] == "AS" and tag[1] == qkey and tag[2] != window],
+            window, self.window_size)
         if best is None:
             return None
         return best, self._cache_get(("AS", qkey, best))  # touches LRU

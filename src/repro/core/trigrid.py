@@ -87,6 +87,19 @@ class PlanNode:
         return out
 
 
+def hop_added_edges(store: SnapshotStore, parent: Window, child: Window) -> int:
+    """Δ-edge volume of the grid hop T(parent) → T(child).
+
+    Nested windows give nested common graphs, so the hop streams exactly
+    ``|T(child)| − |T(parent)|`` addition edges — the ONE cost atom every
+    Δ-volume optimizer in the repo is built from: ``optimal_plan``'s
+    interval DP over hops, ``plan_added_edges`` accounting, and the
+    campaign planner's DP over window partitions
+    (core/window.py::optimal_campaigns).
+    """
+    return store.window_size(*child) - store.window_size(*parent)
+
+
 def optimal_plan(store: SnapshotStore, i: int = 0, j: int | None = None) -> PlanNode:
     """Interval-DP plan minimizing total added-edge volume.
 
@@ -157,7 +170,7 @@ def plan_added_edges(store: SnapshotStore, plan: PlanNode) -> int:
     def walk(node: PlanNode):
         nonlocal total
         for c in node.children:
-            total += store.window_size(*c.window) - store.window_size(*node.window)
+            total += hop_added_edges(store, node.window, c.window)
             walk(c)
     walk(plan)
     return total

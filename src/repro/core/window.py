@@ -63,18 +63,40 @@ results. The stream contract, enforced by tests/test_window_stream.py:
 * **Strictly fewer rebuilds.** A K-campaign stream performs 1 anchor
   rebuild + K−1 incremental anchor hops (plus one rebuild per mid-stream
   eviction) vs the cold path's K rebuilds.
+
+Two layers complete the subsystem (docs/STREAMING.md is the full guide):
+
+* **Campaign planning** (``optimal_campaigns`` / ``CampaignPlan``): the
+  campaign partition itself is chosen by Δ-volume — a suffix DP over cut
+  points pricing slide hops, anchor hops and the pow2 masked-lane padding
+  from the same ``hop_added_edges`` atom as the TG plan DP.
+  ``campaign_width="auto"`` routes the executor through it;
+  ``campaign_volume`` prices any partition under the identical model, so
+  auto is provably never worse than any fixed width ≤ ``lane_budget``.
+* **Anchor chains** (``AnchorChain`` / ``select_chain``): overlapping
+  streams share one chain of nested anchor states. Links are pinned in the
+  store while any registered stream is still behind them, so a lagging
+  stream's next hop source cannot be evicted; values are unaffected either
+  way (unique monotone fixpoint) — sharing only converts rebuilds into
+  hops/hits.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 
 import jax.numpy as jnp
 
 from repro.core.kickstarter import StreamStats
-from repro.core.snapshots import SnapshotStore
-from repro.core.trigrid import _anchor_base, _anchor_view, _shard_snapshot_axis
+from repro.core.snapshots import SnapshotStore, tightest_cover
+from repro.core.trigrid import (
+    _anchor_base,
+    _anchor_view,
+    _shard_snapshot_axis,
+    hop_added_edges,
+)
 from repro.graph.edgeset import lane_bucket
 from repro.graph.engine import (
     QueryState,
@@ -135,8 +157,13 @@ class WindowSlideRun:
 
 def _slide_added_edges(store: SnapshotStore, windows: list[Window],
                        anchor: Window) -> int:
-    a = store.window_size(*anchor)
-    return sum(store.window_size(*w) - a for w in windows)
+    """Total slide-Δ volume of hopping every window off ``anchor``.
+
+    Each window apex is one grid hop T(anchor) → T(window), so the volume
+    is a sum of ``hop_added_edges`` atoms — the same cost atom the TG plan
+    DP and the campaign planner (``optimal_campaigns``) optimize over.
+    """
+    return sum(hop_added_edges(store, anchor, w) for w in windows)
 
 
 def _resolve(store: SnapshotStore, width: int | None, windows, step, start,
@@ -295,6 +322,17 @@ def _validate_advancing(windows: "list[Window]", tail: Window | None = None):
         prev = wnd
 
 
+#: ``campaign_width`` sentinel: let ``optimal_campaigns`` choose the
+#: partition by Δ-volume instead of cutting fixed-width chunks.
+CAMPAIGN_AUTO = "auto"
+
+_STREAM_COUNTER = itertools.count()
+
+
+def _valid_campaign_width(width) -> bool:
+    return width == CAMPAIGN_AUTO or (isinstance(width, int) and width >= 1)
+
+
 @dataclasses.dataclass
 class WindowStream:
     """An advancing window sequence consumed campaign-by-campaign.
@@ -302,22 +340,30 @@ class WindowStream:
     The streaming producer side of ``run_window_stream_batched``: windows
     arrive in slide order (both endpoints nondecreasing — enforced), are
     buffered here, and each executor call drains the pending buffer as
-    campaigns of ``campaign_width`` windows. The stream object itself holds
-    no query state — anchors live in the SnapshotStore's "AS" cache family,
-    which is what lets a stream span many launches (and many stream
-    objects) while anchor work stays incremental.
+    campaigns of ``campaign_width`` windows (``"auto"`` = let
+    ``optimal_campaigns`` pick the partition by Δ-volume). The stream
+    object itself holds no query state — anchors live in the
+    SnapshotStore's "AS" cache family, which is what lets a stream span
+    many launches (and many stream objects) while anchor work stays
+    incremental. ``name`` identifies the stream to an :class:`AnchorChain`
+    when several overlapping streams share one (auto-generated unless
+    given).
     """
 
-    campaign_width: int
+    campaign_width: "int | str"
     windows: "list[Window]" = dataclasses.field(default_factory=list)
     consumed: int = 0
+    name: "str | None" = None
 
     def __post_init__(self):
-        if self.campaign_width < 1:
+        if not _valid_campaign_width(self.campaign_width):
             raise ValueError(
-                f"campaign_width must be >= 1, got {self.campaign_width}")
+                f'campaign_width must be an int >= 1 or "auto", '
+                f"got {self.campaign_width!r}")
         self.windows = [tuple(w) for w in self.windows]
         _validate_advancing(self.windows)
+        if self.name is None:
+            self.name = f"stream-{next(_STREAM_COUNTER)}"
 
     def extend(self, windows: "list[Window]") -> "WindowStream":
         """Append newly arrived windows (must keep the sequence advancing)."""
@@ -339,16 +385,177 @@ class WindowStream:
 
 def stream_campaigns(windows: "list[Window]",
                      campaign_width: int) -> "list[list[Window]]":
-    """Cut an advancing window sequence into consecutive campaigns.
+    """Cut an advancing window sequence into consecutive fixed-width campaigns.
 
     Campaigns are disjoint chunks of ``campaign_width`` windows (the last
     may be short); their SPANS overlap whenever consecutive windows do —
-    which is exactly what the incremental anchor chain exploits.
+    which is exactly what the incremental anchor chain exploits. The
+    ``"auto"`` sentinel is NOT resolved here (fixed-width chunking needs no
+    store): ``run_window_stream_batched(campaign_width="auto")`` partitions
+    via ``optimal_campaigns`` instead of this function.
     """
-    if campaign_width < 1:
-        raise ValueError(f"campaign_width must be >= 1, got {campaign_width}")
+    if campaign_width == CAMPAIGN_AUTO:
+        raise ValueError(
+            'campaign_width="auto" needs a SnapshotStore to plan against — '
+            "partition via optimal_campaigns(store, windows), which is what "
+            'run_window_stream_batched(campaign_width="auto") does')
+    if not _valid_campaign_width(campaign_width):
+        raise ValueError(f'campaign_width must be an int >= 1 or "auto", '
+                         f"got {campaign_width!r}")
     return [windows[k:k + campaign_width]
             for k in range(0, len(windows), campaign_width)]
+
+
+# ---------------------------------------------------------------------------
+# Campaign planner: Δ-volume DP over the campaign partition.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CampaignPlan:
+    """A campaign partition of an advancing window sequence + modeled cost.
+
+    The planner's unit of exchange: ``optimal_campaigns`` returns the
+    Δ-volume-minimal plan, ``campaign_volume`` evaluates ANY partition
+    (fixed-width chunkings included) under the same cost model, so plans
+    are directly comparable. The model counts edges the launches actually
+    process:
+
+    * ``slide_edges`` — exact window-hop Δ volume: every window streams
+      ``|T(window)| − |T(anchor)|`` addition edges off its campaign anchor.
+    * ``anchor_edges`` — anchor-chain volume: the first anchor's
+      from-scratch rebuild (``|T(anchor_0)|``) plus each later campaign's
+      incremental hop (``|T(anchor_k)| − |T(anchor_{k−1})|``). The hops
+      telescope, so this always equals ``|T(anchor_last)|`` — narrower
+      last campaigns pay more here.
+    * ``padding_edges`` — the pow2 masked-lane penalty: a campaign of L
+      windows launches ``lane_bucket(L, data_extent)`` lanes, and each of
+      the ``bucket − L`` masked lanes rides along at the campaign's widest
+      slide Δ (the stacked buffer's lane width). This is device volume,
+      not streamed edges — it is what makes width 5 more expensive than
+      width 4 even when the exact Δ sums agree.
+    """
+
+    campaigns: "list[list[Window]]"
+    anchors: "list[Window]"              # per-campaign (lo_k, stream_hi)
+    lane_budget: int
+    data_extent: int
+    slide_edges: int
+    anchor_edges: int
+    padding_edges: int
+
+    @property
+    def widths(self) -> "list[int]":
+        return [len(c) for c in self.campaigns]
+
+    @property
+    def total_edges(self) -> int:
+        """The planner's objective: slide + anchor + masked-lane volume."""
+        return self.slide_edges + self.anchor_edges + self.padding_edges
+
+
+def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
+                    *, data_extent: int = 1,
+                    lane_budget: "int | None" = None) -> CampaignPlan:
+    """Evaluate a campaign partition under the planner's Δ-volume model.
+
+    Anchors each campaign exactly as ``run_window_stream_batched`` does —
+    ``(campaign_lo, stream_hi)`` — and prices it per the
+    :class:`CampaignPlan` field docs. Works for any partition of any
+    advancing window sequence, which is what lets tests (and the planner
+    itself) compare ``optimal_campaigns`` against every fixed-width
+    chunking on equal terms.
+    """
+    if not campaigns or not all(campaigns):
+        raise ValueError("campaigns must be a non-empty list of non-empty "
+                         "window lists")
+    windows = [w for c in campaigns for w in c]
+    _validate_advancing(windows)
+    stream_hi = windows[-1][1]
+    anchors = [(c[0][0], stream_hi) for c in campaigns]
+    slide = padding = 0
+    for campaign, anchor in zip(campaigns, anchors):
+        deltas = [hop_added_edges(store, anchor, w) for w in campaign]
+        slide += sum(deltas)
+        bucket = lane_bucket(len(campaign), data_extent)
+        padding += (bucket - len(campaign)) * max(deltas)
+    anchor_edges = store.window_size(*anchors[0]) + sum(
+        hop_added_edges(store, prev, cur)
+        for prev, cur in zip(anchors, anchors[1:]))
+    return CampaignPlan(campaigns, anchors,
+                        lane_budget if lane_budget is not None
+                        else max(map(len, campaigns)),
+                        data_extent, slide, anchor_edges, padding)
+
+
+def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
+                      lane_budget: int = 8,
+                      data_extent: int = 1) -> CampaignPlan:
+    """Δ-volume-minimal campaign partition of an advancing window sequence.
+
+    The streaming analogue of ``optimal_plan``'s interval DP over grid
+    hops: where the TG planner chooses which hops to share *within* one
+    launch tree, this DP chooses where to CUT the stream into campaigns —
+    the "how much to share per launch" decision PR 4 left to a fixed
+    ``campaign_width``. Suffix DP over cut points, both cost terms built
+    from the same ``hop_added_edges`` atom:
+
+    .. code-block:: text
+
+        f(N) = 0
+        f(j) = min over i in (j, min(j+lane_budget, N)]:
+                 slideΔ(j, i)                       # Σ |T(w)| − |T(a_j)|
+               + pad(j, i)                          # masked pow2 lanes
+               + (|T(a_i)| − |T(a_j)|  if i < N)    # anchor hop into next
+               + f(i)
+        total = |T(a_0)| + f(0)          # a_j = (lo_j, stream_hi)
+
+    The trade the DP resolves: wider campaigns anchor earlier (smaller
+    ``|T(a_j)|``), so every window in them streams MORE slide Δ — but they
+    pay fewer anchor hops and amortize the pow2 lane bucket better;
+    ``lane_budget`` caps the width (device memory for one stacked launch),
+    and ``data_extent`` makes the pad term mesh-aware (a campaign always
+    launches a lane count divisible by the mesh's ``data`` axis). Runs in
+    O(N · lane_budget) after the size table is built.
+
+    Guarantee (property-tested): the returned plan's ``total_edges`` is
+    ≤ that of EVERY fixed-width chunking with width ≤ ``lane_budget``,
+    fixed widths being points in the DP's search space.
+    """
+    windows = [tuple(w) for w in windows]
+    if not windows:
+        raise ValueError("need at least one window to plan campaigns")
+    _validate_advancing(windows)
+    if not isinstance(lane_budget, int) or lane_budget < 1:
+        raise ValueError(f"lane_budget must be an int >= 1, "
+                         f"got {lane_budget!r}")
+    n = len(windows)
+    stream_hi = windows[-1][1]
+    anchor_size = [store.window_size(lo, stream_hi) for lo, _ in windows]
+    window_size = [store.window_size(*w) for w in windows]
+
+    INF = float("inf")
+    f = [INF] * n + [0.0]
+    cut: "list[int]" = [0] * n
+    for j in range(n - 1, -1, -1):
+        slide, widest = 0, 0
+        for i in range(j + 1, min(j + lane_budget, n) + 1):
+            delta = window_size[i - 1] - anchor_size[j]
+            slide += delta
+            widest = max(widest, delta)
+            lanes = i - j
+            pad = (lane_bucket(lanes, data_extent) - lanes) * widest
+            hop = anchor_size[i] - anchor_size[j] if i < n else 0
+            cost = slide + pad + hop + f[i]
+            if cost < f[j]:
+                f[j], cut[j] = cost, i
+    campaigns = []
+    j = 0
+    while j < n:
+        campaigns.append(windows[j:cut[j]])
+        j = cut[j]
+    return campaign_volume(store, campaigns, data_extent=data_extent,
+                           lane_budget=lane_budget)
 
 
 def _stream_qkey(semiring: Semiring, source: int, max_iters: int, gated: bool,
@@ -377,6 +584,8 @@ class WindowStreamRun:
     added_edges: int                     # total window-hop Δ volume
     anchor_delta_edges: int              # Δ volume of incremental anchor hops
     lane_layout: "list[tuple[int, int]]"
+    # the CampaignPlan that chose the partition (campaign_width="auto" only)
+    plan: "CampaignPlan | None" = None
 
     @property
     def anchor_rebuilds(self) -> int:
@@ -433,6 +642,171 @@ def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
     return anchor_view, state, base_stats, "rebuild", 0
 
 
+# ---------------------------------------------------------------------------
+# Anchor chains: overlapping streams sharing one anchor-state sequence.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnchorChain:
+    """A named, refcounted chain of nested anchor states shared by streams.
+
+    One advancing stream leaves behind a *chain* of converged anchor states
+    in the store's "AS" family — interval-nested, each reachable from the
+    previous by pure additions. A second stream over an overlapping window
+    region can hop off those same states instead of rebuilding its own
+    anchors from scratch: that is the paper's shared-additions idea applied
+    ACROSS streams, one level up from the per-stream reuse PR 4 built.
+
+    The chain object adds the lifecycle the bare cache cannot express:
+
+    * **Registration.** Streams :meth:`register` by name; pass
+      ``chain=`` to ``run_window_stream_batched`` and the scheduler
+      records every anchor it acquires as a chain link
+      (:meth:`observe`) and reports the stream's progress
+      (:meth:`advance`).
+    * **Pinning (the refcount).** A link is pinned in the store
+      (``SnapshotStore.pin``) while ANY registered stream is still behind
+      it — behind meaning the stream's last consumed anchor-lo has not
+      passed the link's lo, so the link may yet seed one of its hops.
+      Pinned links survive LRU pressure and ``release``; once every
+      registered stream advances past a link it is PRUNED from the chain
+      and its state returns to the LRU, so chain bookkeeping stays
+      O(live links) over an unbounded stream. :meth:`unregister` a
+      finished stream or its pins leak. (With no streams registered the
+      links stay listed — unpinned — so a later stream can still find
+      the chain via :func:`select_chain`.)
+    * **Cover selection.** :meth:`cover` returns the tightest chain link
+      covering a window (same tightest-|T| rule as
+      ``SnapshotStore.anchor_state_cover``, restricted to this chain's
+      links); :func:`select_chain` picks among several chains the one
+      whose cover is tightest — how a new stream finds the chain to
+      register against.
+
+    Pinning never changes values — only whether a lagging stream pays a
+    hit/hop (link retained) or a rebuild (link evicted). The chain binds to
+    the first query key it serves; overlapping streams share a chain only
+    when their query (semiring, source, options) agrees, else
+    :meth:`bind` raises.
+    """
+
+    store: SnapshotStore
+    name: str = "chain"
+    qkey: "tuple | None" = None
+    links: "list[Window]" = dataclasses.field(default_factory=list)
+    _positions: "dict[str, int | None]" = dataclasses.field(
+        default_factory=dict)
+    _pinned: "set[Window]" = dataclasses.field(default_factory=set)
+
+    def bind(self, qkey: tuple) -> "AnchorChain":
+        """Bind the chain to a query key (first use wins, mismatch raises)."""
+        if self.qkey is None:
+            self.qkey = qkey
+        elif self.qkey != qkey:
+            raise ValueError(
+                f"chain {self.name!r} is bound to query key {self.qkey!r}; "
+                f"a stream with query key {qkey!r} cannot share it")
+        return self
+
+    @staticmethod
+    def _member(stream: "WindowStream | str") -> str:
+        return stream if isinstance(stream, str) else stream.name
+
+    def register(self, stream: "WindowStream | str") -> "AnchorChain":
+        """Add a stream to the chain (idempotent); pins every current link
+        until the stream advances past it."""
+        name = self._member(stream)
+        if name not in self._positions:
+            self._positions[name] = None   # behind everything
+            self._repin()
+        return self
+
+    def unregister(self, stream: "WindowStream | str") -> None:
+        """Remove a stream; links only it was behind unpin (and, while
+        other streams remain registered, are pruned)."""
+        name = self._member(stream)
+        if name not in self._positions:
+            raise ValueError(f"stream {name!r} is not registered with "
+                             f"chain {self.name!r}")
+        del self._positions[name]
+        self._repin()
+
+    def registered(self) -> "list[str]":
+        return sorted(self._positions)
+
+    def cover(self, window: Window) -> "Window | None":
+        """Tightest chain link whose interval covers ``window`` (else None).
+
+        Same rule as ``SnapshotStore.anchor_state_cover`` — both route
+        through ``tightest_cover`` — restricted to this chain's links.
+        """
+        return tightest_cover(self.links, tuple(window),
+                              self.store.window_size)
+
+    def observe(self, anchor: Window) -> None:
+        """Record an acquired anchor state as a chain link (scheduler hook)."""
+        anchor = tuple(anchor)
+        if anchor not in self.links:
+            self.links.append(anchor)
+            self.links.sort(key=lambda w: (w[0], -w[1]))
+            self._repin()
+
+    def advance(self, stream: "WindowStream | str", anchor: Window) -> None:
+        """Report a stream's last consumed anchor; passed links unpin."""
+        name = self._member(stream)
+        if name not in self._positions:
+            raise ValueError(f"stream {name!r} is not registered with "
+                             f"chain {self.name!r}")
+        self._positions[name] = anchor[0]
+        self._repin()
+
+    def _repin(self) -> None:
+        """Reconcile store pins with the is-any-stream-behind rule.
+
+        While at least one stream is registered, links every stream has
+        passed are also PRUNED from the chain (they can never seed a
+        registered stream's hop again, and per-campaign ``cover``/pin
+        bookkeeping must stay O(live links), not O(stream lifetime)) —
+        their cached states simply return to the LRU. With no streams
+        registered the links are kept (unpinned) so a later stream can
+        still discover the chain via ``select_chain``.
+        """
+        want = set()
+        if self._positions:
+            positions = list(self._positions.values())
+            want = {link for link in self.links
+                    if any(pos is None or pos <= link[0]
+                           for pos in positions)}
+            self.links = [link for link in self.links if link in want]
+        for link in want - self._pinned:
+            self.store.pin(("AS", self.qkey, link))
+        for link in self._pinned - want:
+            self.store.unpin(("AS", self.qkey, link))
+        self._pinned = want
+
+
+def select_chain(chains: "list[AnchorChain]", window: Window,
+                 qkey: "tuple | None" = None) -> "AnchorChain | None":
+    """The chain whose links give the tightest cover of ``window``.
+
+    How an arriving stream picks its chain: among ``chains`` (optionally
+    filtered to a query key), the one holding the largest-|T| covering
+    link — the cover that minimizes the stream's first anchor hop. Returns
+    ``None`` when no chain covers the window (the stream then starts its
+    own chain with one rebuild).
+    """
+    best, best_size = None, -1
+    for chain in chains:
+        if qkey is not None and chain.qkey is not None and chain.qkey != qkey:
+            continue
+        link = chain.cover(window)
+        if link is not None:
+            size = chain.store.window_size(*link)
+            if size > best_size:
+                best, best_size = chain, size
+    return best
+
+
 def run_window_stream_batched(
     store: SnapshotStore,
     semiring: Semiring,
@@ -443,7 +817,9 @@ def run_window_stream_batched(
     stream: WindowStream | None = None,
     step: int = 1,
     start: int = 0,
-    campaign_width: int | None = None,
+    campaign_width: "int | str | None" = None,
+    lane_budget: int = 8,
+    chain: "AnchorChain | None" = None,
     max_iters: int = 10_000,
     gated: bool = False,
     cg_split: int = 1,
@@ -460,6 +836,22 @@ def run_window_stream_batched(
     ONE masked pow2-lane ``incremental_additions_batched`` launch (the
     ``run_window_slide_batched`` machinery, sharded over ``data`` when a
     mesh is given).
+
+    ``campaign_width="auto"`` hands the partition to ``optimal_campaigns``:
+    an interval DP over cut points minimizing total Δ-edge volume (slide
+    hops + anchor hops + the pow2 masked-lane penalty), capped at
+    ``lane_budget`` windows per launch and mesh-aware (the pad term uses
+    the mesh's ``data`` extent). The chosen :class:`CampaignPlan` is
+    returned on the run's ``plan`` field; ``lane_budget`` is only read in
+    auto mode.
+
+    ``chain=`` (requires ``stream=``) shares anchor states across
+    OVERLAPPING streams via an :class:`AnchorChain`: the stream registers
+    with the chain, every anchor it acquires becomes a chain link, and
+    links stay pinned against eviction while any registered stream is
+    still behind them — so a second stream over the same region hops off
+    the first stream's anchors (strictly fewer rebuilds than running
+    solo) with bit-identical values.
 
     Campaign k anchors at ``(lo_k, stream_hi)`` — its windows' span widened
     to the stream's last snapshot. Widening is what makes the anchor chain
@@ -485,6 +877,10 @@ def run_window_stream_batched(
         windows = stream.take()
         campaign_width = stream.campaign_width
     else:
+        if chain is not None:
+            raise ValueError("chain= requires stream=: an AnchorChain tracks "
+                             "named WindowStreams, so anonymous window lists "
+                             "cannot register against one")
         if campaign_width is None:
             campaign_width = 4
         if windows is None:
@@ -494,13 +890,25 @@ def run_window_stream_batched(
                                     start=start)
         windows = [tuple(w) for w in windows]
         _validate_advancing(windows)
+    qkey = _stream_qkey(semiring, source, max_iters, gated, cg_split,
+                        track_parents)
+    if chain is not None:
+        if chain.store is not store:
+            raise ValueError("chain= must share the run's SnapshotStore — "
+                             "anchor states live in the store's AS family")
+        chain.bind(qkey).register(stream)
     if not windows:
         return WindowStreamRun({}, [], [], [], [], [],
                                time.perf_counter() - t_all, 0, 0, [])
-    campaigns = stream_campaigns(windows, campaign_width)
+    plan = None
+    if campaign_width == CAMPAIGN_AUTO:
+        plan = optimal_campaigns(
+            store, windows, lane_budget=lane_budget,
+            data_extent=mesh.shape["data"] if mesh is not None else 1)
+        campaigns = plan.campaigns
+    else:
+        campaigns = stream_campaigns(windows, campaign_width)
     stream_hi = windows[-1][1]
-    qkey = _stream_qkey(semiring, source, max_iters, gated, cg_split,
-                        track_parents)
 
     results: dict[Window, jnp.ndarray] = {}
     anchors: "list[Window]" = []
@@ -515,6 +923,8 @@ def run_window_stream_batched(
         anchor_view, state, stats, event, delta_edges = _acquire_anchor_state(
             store, qkey, anchor, semiring, source, max_iters, gated, cg_split,
             track_parents)
+        if chain is not None:
+            chain.observe(anchor)   # pin before any later put can evict it
         anchors.append(anchor)
         anchor_events.append(event)
         anchor_stats.append(stats)
@@ -531,7 +941,9 @@ def run_window_stream_batched(
         for lane, wnd in enumerate(campaign):
             results[wnd] = res.values[lane]
         added_edges += _slide_added_edges(store, campaign, anchor)
+        if chain is not None:
+            chain.advance(stream, anchor)   # links all streams passed unpin
     return WindowStreamRun(results, campaigns, anchors, anchor_events,
                            anchor_stats, hop_stats,
                            time.perf_counter() - t_all, added_edges,
-                           anchor_delta_edges, lane_layout)
+                           anchor_delta_edges, lane_layout, plan)

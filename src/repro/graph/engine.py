@@ -58,10 +58,21 @@ class QueryState(NamedTuple):
     unique, so a state reached by warm hops equals the from-scratch one
     bit-for-bit. Parents are dependence-valid but tie-break by construction
     path (only the deletion-trimming baseline consumes them).
+
+    Cache-lifecycle hooks: :attr:`nbytes` is what the SnapshotStore LRU
+    charges a cached state against its byte budget, and pin/release of a
+    cached state is managed at the store layer (``SnapshotStore.pin`` /
+    ``unpin`` / ``release(("AS",))``) — the state itself stays an immutable
+    value, so pinning can never change what a launch computes.
     """
 
     values: jnp.ndarray      # float32 [num_nodes]
     parent: jnp.ndarray      # int32  [num_nodes]
+
+    @property
+    def nbytes(self) -> int:
+        """Device footprint the store's LRU accounts for this state."""
+        return sum(int(a.size) * a.dtype.itemsize for a in self)
 
 
 def extract_state(res: FixpointResult) -> QueryState:

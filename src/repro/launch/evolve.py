@@ -19,7 +19,9 @@ sequential slide. ``--stream`` (with ``--campaign-width C``) feeds the same
 windows through the streaming-campaign scheduler instead: campaigns of C
 windows whose anchors are maintained incrementally across launches
 (1 rebuild + hops, vs one rebuild per campaign cold), reported against the
-cold per-campaign baseline.
+cold per-campaign baseline. ``--campaign-width auto`` lets the Δ-volume DP
+(``optimal_campaigns``) choose the partition and prints the modeled
+slide/anchor/padding volumes of the plan it picked (docs/STREAMING.md).
 
 ``--shard`` places the batched executors' lane axis (snapshots for
 dhb/wsb, windows for --window-batch) over a 1-D ``data`` mesh spanning all
@@ -51,6 +53,22 @@ from repro.core import (
 from repro.graph import make_evolving_sequence, run_to_fixpoint
 from repro.graph.semiring import ALL_SEMIRINGS
 from repro.launch.mesh import make_snapshot_mesh
+
+
+def _campaign_width(arg: str):
+    """argparse type for --campaign-width: positive int or the 'auto'
+    sentinel resolved by optimal_campaigns (core/window.py)."""
+    if arg == "auto":
+        return arg
+    try:
+        width = int(arg)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected a positive integer or 'auto', got {arg!r}") from None
+    if width < 1:
+        raise argparse.ArgumentTypeError(
+            f"campaign width must be >= 1, got {width}")
+    return width
 
 
 def _shard_report(mesh, label: str,
@@ -103,9 +121,12 @@ def main(argv=None):
                         "too — the slide windows consumed as campaigns with "
                         "incremental anchor maintenance (core/window.py "
                         "run_window_stream_batched; composes with --shard)")
-    p.add_argument("--campaign-width", type=int, default=4, metavar="C",
+    p.add_argument("--campaign-width", type=_campaign_width, default=4,
+                   metavar="C",
                    help="windows per streaming campaign for --stream "
-                        "(default 4)")
+                        "(default 4), or 'auto' to let the Δ-volume DP "
+                        "(core/window.py optimal_campaigns) choose the "
+                        "partition — see docs/STREAMING.md")
     args = p.parse_args(argv)
     if args.window_batch and args.window is None:
         p.error("--window-batch requires --window W")
@@ -192,13 +213,23 @@ def main(argv=None):
                                              windows=c, anchor=a, mesh=mesh)
                     for c, a in zip(stm.campaigns, stm.anchors)]
             t_cold = time.perf_counter() - t0
+            shape = (f"widths {[len(c) for c in stm.campaigns]}"
+                     if args.campaign_width == "auto"
+                     else f"of <={args.campaign_width}")
             print(f"[evolve] Window stream:        {stm.wall_s:.2f}s  "
                   f"vs cold campaigns {t_cold:.2f}s  "
-                  f"({len(stm.campaigns)} campaigns of "
-                  f"<={args.campaign_width}: {stm.anchor_rebuilds} rebuilds "
+                  f"({len(stm.campaigns)} campaigns "
+                  f"{shape}: {stm.anchor_rebuilds} rebuilds "
                   f"+ {stm.anchor_hops} anchor hops + {stm.anchor_hits} hits "
                   f"vs {len(cold)} rebuilds; anchor-Δ "
                   f"{stm.anchor_delta_edges} edges)")
+            if stm.plan is not None:
+                print(f"[evolve]   campaign plan (auto, lane_budget "
+                      f"{stm.plan.lane_budget}): "
+                      f"slide {stm.plan.slide_edges} + anchor "
+                      f"{stm.plan.anchor_edges} + pad "
+                      f"{stm.plan.padding_edges} = {stm.plan.total_edges} "
+                      f"modeled Δ-edges")
             if mesh is not None:
                 _shard_report(mesh, "stream", stm.lane_layout)
 

@@ -1,0 +1,364 @@
+"""Campaign planner (Δ-volume DP) + anchor-chain sharing contracts.
+
+Covers the two PR-5 subsystems of core/window.py:
+
+* ``optimal_campaigns`` / ``campaign_volume`` — the auto campaign
+  partition: DP optimality vs every fixed width (property-tested), model
+  consistency (realized run volumes equal the plan's predictions), the
+  ``"auto"`` sentinel plumbing, and lane-budget/mesh-extent handling.
+* ``AnchorChain`` — overlapping streams sharing one chain of nested
+  anchor states: strictly fewer total rebuilds than solo runs with
+  bit-identical values, pin/unpin refcounting against both LRU eviction
+  and explicit ``release``, cover/selection rules, and lifecycle errors.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AnchorChain,
+    SnapshotStore,
+    WindowStream,
+    campaign_volume,
+    optimal_campaigns,
+    run_window_stream_batched,
+    select_chain,
+    slide_windows,
+    stream_campaigns,
+)
+from repro.core.window import _stream_qkey
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+
+SNAPS = 8
+
+
+def _store(n=300, e=2400, snaps=SNAPS, changes=150, seed=11, granule=128,
+           **kw):
+    return SnapshotStore(make_evolving_sequence(n, e, snaps, changes,
+                                                seed=seed),
+                         granule=granule, **kw)
+
+
+@pytest.fixture(scope="module")
+def planner_store():
+    """One shared store for the host-side planner tests (DP only, no jit)."""
+    return _store()
+
+
+def _qkey(sr):
+    return _stream_qkey(sr, 0, 10_000, False, 1, False)
+
+
+# -- campaign planner: DP + cost model ----------------------------------------
+
+def test_optimal_campaigns_is_a_partition(planner_store):
+    windows = slide_windows(SNAPS, 3)
+    plan = optimal_campaigns(planner_store, windows, lane_budget=4)
+    assert [w for c in plan.campaigns for w in c] == windows
+    assert all(1 <= len(c) <= 4 for c in plan.campaigns)
+    assert plan.widths == [len(c) for c in plan.campaigns]
+    hi = windows[-1][1]
+    assert plan.anchors == [(c[0][0], hi) for c in plan.campaigns]
+    assert plan.total_edges == (plan.slide_edges + plan.anchor_edges
+                                + plan.padding_edges)
+
+
+def test_optimal_campaigns_validation(planner_store):
+    with pytest.raises(ValueError):
+        optimal_campaigns(planner_store, [])
+    with pytest.raises(ValueError):
+        optimal_campaigns(planner_store, [(2, 4), (0, 3)])  # not advancing
+    with pytest.raises(ValueError):
+        optimal_campaigns(planner_store, [(0, 2)], lane_budget=0)
+    with pytest.raises(ValueError):
+        campaign_volume(planner_store, [])
+    with pytest.raises(ValueError):
+        campaign_volume(planner_store, [[]])
+
+
+def test_campaign_volume_anchor_edges_telescope(planner_store):
+    """Anchor volume = first rebuild + hops = |T(last anchor)| exactly."""
+    windows = slide_windows(SNAPS, 2)
+    for width in (1, 3):
+        plan = campaign_volume(planner_store,
+                               stream_campaigns(windows, width))
+        assert plan.anchor_edges == planner_store.window_size(
+            *plan.anchors[-1])
+
+
+def test_padding_volume_counts_masked_lanes(planner_store):
+    """A 3-window campaign pads to 4 lanes; the masked lane is priced at
+    the campaign's widest slide Δ — and a mesh extent widens the bucket."""
+    windows = slide_windows(SNAPS, 3)[:3]
+    plan = campaign_volume(planner_store, [windows])
+    anchor = plan.anchors[0]
+    deltas = [planner_store.window_size(*w)
+              - planner_store.window_size(*anchor) for w in windows]
+    assert plan.padding_edges == (4 - 3) * max(deltas)
+    meshed = campaign_volume(planner_store, [windows], data_extent=8)
+    assert meshed.padding_edges == (8 - 3) * max(deltas)
+
+
+@st.composite
+def advancing_windows(draw, snaps=SNAPS, max_windows=10):
+    n = draw(st.integers(1, max_windows))
+    lo = draw(st.integers(0, snaps - 1))
+    hi = draw(st.integers(lo, snaps - 1))
+    out = [(lo, hi)]
+    for _ in range(n - 1):
+        lo = draw(st.integers(lo, snaps - 1))
+        hi = draw(st.integers(max(lo, hi), snaps - 1))
+        out.append((lo, hi))
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(windows=advancing_windows(), data_extent=st.sampled_from([1, 2, 4]))
+def test_optimal_campaigns_never_worse_than_any_fixed_width(
+        planner_store, windows, data_extent):
+    """The acceptance property: the DP's modeled Δ-volume is ≤ every fixed
+    campaign width's on the same windows (fixed-width chunkings are points
+    in its search space)."""
+    plan = optimal_campaigns(planner_store, windows, lane_budget=8,
+                             data_extent=data_extent)
+    assert [w for c in plan.campaigns for w in c] == windows
+    for width in (1, 2, 4, 8):
+        fixed = campaign_volume(planner_store,
+                                stream_campaigns(windows, width),
+                                data_extent=data_extent)
+        assert plan.total_edges <= fixed.total_edges, (
+            f"auto plan {plan.widths} costs {plan.total_edges} > fixed "
+            f"width {width} at {fixed.total_edges} on {windows}")
+
+
+def test_auto_run_realizes_planned_volumes():
+    """campaign_width="auto" must stream exactly what its plan predicted:
+    slide Δ == plan.slide_edges, anchor hops == plan.anchor_edges minus the
+    first rebuild — and stay bit-identical to a fixed-width run."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    auto = run_window_stream_batched(store, sr, 0, 3, campaign_width="auto")
+    assert auto.plan is not None
+    assert [w for c in auto.campaigns for w in c] == slide_windows(SNAPS, 3)
+    assert auto.added_edges == auto.plan.slide_edges
+    rebuild_volume = store.window_size(*auto.plan.anchors[0])
+    assert auto.anchor_delta_edges == auto.plan.anchor_edges - rebuild_volume
+    fixed = run_window_stream_batched(_store(), sr, 0, 3, campaign_width=2)
+    assert set(auto.results) == set(fixed.results)
+    for wnd in fixed.results:
+        np.testing.assert_array_equal(np.asarray(auto.results[wnd]),
+                                      np.asarray(fixed.results[wnd]))
+
+
+def test_auto_respects_lane_budget():
+    sr = ALL_SEMIRINGS["sssp"]
+    run = run_window_stream_batched(_store(), sr, 0, 3,
+                                    campaign_width="auto", lane_budget=2)
+    assert run.plan.lane_budget == 2
+    assert all(w <= 2 for w in run.plan.widths)
+    with pytest.raises(ValueError):
+        run_window_stream_batched(_store(), sr, 0, 3,
+                                  campaign_width="auto", lane_budget=0)
+
+
+def test_auto_stream_object_round_trip():
+    """A WindowStream carrying the sentinel plans each drain it takes."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    ws = WindowStream(campaign_width="auto",
+                      windows=slide_windows(SNAPS, 3))
+    run = run_window_stream_batched(store, sr, 0, stream=ws)
+    assert run.plan is not None and run.results
+    fixed = run_window_stream_batched(_store(), sr, 0, 3, campaign_width=2)
+    for wnd in fixed.results:
+        np.testing.assert_array_equal(np.asarray(run.results[wnd]),
+                                      np.asarray(fixed.results[wnd]))
+
+
+# -- the "auto" sentinel plumbing ---------------------------------------------
+
+def test_stream_campaigns_rejects_auto_with_pointer():
+    windows = slide_windows(SNAPS, 3)
+    with pytest.raises(ValueError, match="optimal_campaigns"):
+        stream_campaigns(windows, "auto")
+    with pytest.raises(ValueError, match='"auto"'):
+        stream_campaigns(windows, 0)
+    with pytest.raises(ValueError, match='"auto"'):
+        stream_campaigns(windows, "wide")
+
+
+def test_window_stream_accepts_auto_rejects_junk():
+    assert WindowStream(campaign_width="auto").campaign_width == "auto"
+    with pytest.raises(ValueError, match='"auto"'):
+        WindowStream(campaign_width=0)
+    with pytest.raises(ValueError, match='"auto"'):
+        WindowStream(campaign_width="wide")
+
+
+def test_window_stream_names_are_unique_by_default():
+    a, b = WindowStream(campaign_width=1), WindowStream(campaign_width=1)
+    assert a.name != b.name
+    assert WindowStream(campaign_width=1, name="fixed").name == "fixed"
+
+
+# -- anchor chains: overlapping streams ---------------------------------------
+
+def _overlapping_sets():
+    """Two window sets over the same tail: B starts later, same stream_hi."""
+    return slide_windows(SNAPS, 3), slide_windows(SNAPS, 2)[3:]
+
+
+def test_overlapping_streams_share_chain_fewer_rebuilds():
+    """The acceptance criterion: two streams sharing an AnchorChain perform
+    strictly fewer anchor rebuilds than the sum of solo runs, with
+    bit-identical per-window values."""
+    sr = ALL_SEMIRINGS["sssp"]
+    wa, wb = _overlapping_sets()
+    store = _store()
+    chain = AnchorChain(store, name="shared")
+    a = WindowStream(campaign_width=2, windows=wa, name="A")
+    b = WindowStream(campaign_width=2, windows=wb, name="B")
+    chain.register(b)   # B not yet running: A's links must stay pinned
+    ra = run_window_stream_batched(store, sr, 0, stream=a, chain=chain)
+    rb = run_window_stream_batched(store, sr, 0, stream=b, chain=chain)
+    solo_a = run_window_stream_batched(_store(), sr, 0, windows=wa,
+                                       campaign_width=2)
+    solo_b = run_window_stream_batched(_store(), sr, 0, windows=wb,
+                                       campaign_width=2)
+    assert (ra.anchor_rebuilds + rb.anchor_rebuilds
+            < solo_a.anchor_rebuilds + solo_b.anchor_rebuilds)
+    assert rb.anchor_rebuilds == 0          # B rode the chain entirely
+    for run, solo in ((ra, solo_a), (rb, solo_b)):
+        for wnd in solo.results:
+            np.testing.assert_array_equal(np.asarray(run.results[wnd]),
+                                          np.asarray(solo.results[wnd]))
+
+
+def test_chain_pins_follow_registration_lifecycle():
+    sr = ALL_SEMIRINGS["sssp"]
+    wa, wb = _overlapping_sets()
+    store = _store()
+    chain = AnchorChain(store)
+    a = WindowStream(campaign_width=2, windows=wa, name="A")
+    b = WindowStream(campaign_width=2, windows=wb, name="B")
+    chain.register(b)
+    run_window_stream_batched(store, sr, 0, stream=a, chain=chain)
+    # B is behind everything, so every link stays pinned after A finishes
+    qkey = _qkey(sr)
+    assert set(chain._pinned) == set(chain.links)
+    assert {("AS", qkey, link) for link in chain.links} \
+        <= store.pinned_tags()
+    all_links = list(chain.links)
+    run_window_stream_batched(store, sr, 0, stream=b, chain=chain)
+    # links BOTH streams passed (A's early anchors) are pruned from the
+    # chain and unpinned; the survivors are exactly the pinned set
+    pruned = set(all_links) - set(chain.links)
+    assert pruned
+    assert set(chain._pinned) == set(chain.links)
+    assert {("AS", qkey, link) for link in pruned}.isdisjoint(
+        store.pinned_tags())
+    chain.unregister(a)
+    chain.unregister(b)
+    # last stream out: links stay listed (select_chain discovery) but unpin
+    assert chain.links and chain._pinned == set()
+    assert store.pinned_tags() == set()
+    with pytest.raises(ValueError, match="not registered"):
+        chain.unregister(b)                 # already removed
+    with pytest.raises(ValueError):
+        chain.advance("B", chain.links[0])  # advancing unregistered stream
+
+
+def test_pinned_links_survive_release_and_eviction():
+    """The protection pinning buys: explicit release(("AS",)) and LRU
+    pressure both skip pinned chain links, so a lagging stream still hops
+    instead of rebuilding."""
+    sr = ALL_SEMIRINGS["sssp"]
+    wa, wb = _overlapping_sets()
+    store = _store()
+    chain = AnchorChain(store)
+    a = WindowStream(campaign_width=2, windows=wa, name="A")
+    b = WindowStream(campaign_width=2, windows=wb, name="B")
+    chain.register(b)
+    run_window_stream_batched(store, sr, 0, stream=a, chain=chain)
+    qkey = _qkey(sr)
+    freed = store.release()                  # drops everything unpinned
+    assert freed > 0
+    assert {t for t in store._blocks} == \
+        {("AS", qkey, link) for link in chain.links}
+    rb = run_window_stream_batched(store, sr, 0, stream=b, chain=chain)
+    assert rb.anchor_rebuilds == 0           # links survived the release
+    # without the chain, the same release forces B to rebuild cold
+    bare = _store()
+    run_window_stream_batched(bare, sr, 0, windows=wa, campaign_width=2)
+    bare.release()
+    cold = run_window_stream_batched(bare, sr, 0, windows=wb,
+                                     campaign_width=2)
+    assert cold.anchor_rebuilds > 0
+    for wnd in cold.results:
+        np.testing.assert_array_equal(np.asarray(rb.results[wnd]),
+                                      np.asarray(cold.results[wnd]))
+    chain.unregister(a)
+    chain.unregister(b)
+
+
+def test_lru_eviction_skips_pinned_tags_with_exact_accounting():
+    """Byte-budget eviction walks past pinned tags (evicting unpinned LRU
+    entries instead) and cached_nbytes stays the exact sum either way."""
+    store = _store(cache_bytes=256 * 1024)
+    pinned_tag = ("T", 0, 0)
+    store.window_block(0, 0)
+    store.pin(pinned_tag)
+    for i in range(SNAPS):
+        for j in range(i, SNAPS):
+            store.window_block(i, j)
+    assert store.evictions > 0
+    assert pinned_tag in store._blocks       # survived the pressure
+    from repro.core.snapshots import _block_nbytes
+    assert store.cached_nbytes == sum(_block_nbytes(b)
+                                      for b in store._blocks.values())
+    store.unpin(pinned_tag)
+    with pytest.raises(ValueError):
+        store.unpin(pinned_tag)              # refcount underflow
+
+
+def test_chain_cover_and_select_tightest():
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    chain = AnchorChain(store, name="one")
+    run_window_stream_batched(store, sr, 0,
+                              stream=WindowStream(campaign_width=2,
+                                                  windows=slide_windows(
+                                                      SNAPS, 3),
+                                                  name="A"),
+                              chain=chain)
+    hi = SNAPS - 1
+    lo = max(l for l, _ in chain.links)
+    assert chain.cover((lo + 1, hi)) == (lo, hi)   # tightest, not widest
+    assert chain.cover((0, hi)) is None or chain.cover((0, hi)) == (0, hi)
+    assert chain.cover((lo, hi + 1)) is None       # wider tail: no cover
+    empty = AnchorChain(store, name="empty")
+    assert select_chain([empty, chain], (lo + 1, hi)) is chain
+    assert select_chain([empty], (lo + 1, hi)) is None
+    # qkey filter: a chain bound to another query is not eligible
+    other_qkey = _qkey(ALL_SEMIRINGS["sswp"])
+    assert select_chain([chain], (lo + 1, hi), qkey=other_qkey) is None
+
+
+def test_chain_misuse_raises():
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    chain = AnchorChain(store)
+    with pytest.raises(ValueError, match="requires stream="):
+        run_window_stream_batched(store, sr, 0, 3, chain=chain)
+    with pytest.raises(ValueError, match="SnapshotStore"):
+        run_window_stream_batched(
+            _store(), sr, 0, chain=chain,
+            stream=WindowStream(campaign_width=2,
+                                windows=slide_windows(SNAPS, 3)))
+    ws = WindowStream(campaign_width=2, windows=slide_windows(SNAPS, 3))
+    run_window_stream_batched(store, sr, 0, stream=ws, chain=chain)
+    with pytest.raises(ValueError, match="bound to query key"):
+        chain.bind(_qkey(ALL_SEMIRINGS["sswp"]))
+    chain.unregister(ws)
