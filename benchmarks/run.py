@@ -307,7 +307,7 @@ def ensure_out_dir(out_dir: pathlib.Path) -> pathlib.Path:
         out_dir.mkdir(parents=True, exist_ok=True)
     except (FileExistsError, NotADirectoryError) as exc:
         raise SystemExit(
-            f"--out-dir {out_dir} collides with an existing file: {exc}")
+            f"--out-dir {out_dir} collides with an existing file: {exc}") from exc
     return out_dir
 
 

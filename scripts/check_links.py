@@ -1,32 +1,28 @@
 #!/usr/bin/env python3
-"""Docs drift gate: links, API-reference names, embedded --help output.
+"""Docs drift gate: markdown links + embedded --help output.
 
-Stdlib-only (runs in CI's docs job before anything is installed). Three
-checks, all on by default:
+Stdlib-only (runs in CI's docs job before anything is installed). Two
+checks, both on by default:
 
 * **Links.** For each markdown file checked, every relative link target
   must exist on disk, and every ``#fragment`` — on another checked
   markdown file or within the same file — must match a heading's
   GitHub-style anchor. External links (http/https/mailto) are ignored.
-* **API reference** (when docs/API.md is among the files). Every
-  ``### `name(...)` `` entry under a ``## `repro.x.y` `` module heading
-  must name a public def/class (or ``Class.method``) that still exists in
-  that module's source — renaming a function without updating API.md
-  fails CI — and, conversely, every public module-level def/class and
-  every public method of a public class must have an entry, so new API
-  surface cannot ship undocumented. Parsed with ``ast``, so nested helper
-  defs don't count as surface.
 * **Embedded --help** (when docs/BENCHMARKS.md is among the files). The
   fenced block under the ``<!-- bench-gate-help -->`` marker must equal
   ``scripts/bench_gate.py --help`` verbatim (COLUMNS=80), so the
   documented CLI can't drift from the real one.
+
+The API-reference drift check (docs/API.md entries vs the public ast
+surface of the documented modules) that used to live here is now
+graphlint rule G006 — ``scripts/invariant_lint.py`` / docs/ANALYSIS.md —
+so the docs and invariant gates share one source of truth.
 
     python scripts/check_links.py [files...]   # default: README.md docs/*.md
 """
 
 from __future__ import annotations
 
-import ast
 import os
 import pathlib
 import re
@@ -82,73 +78,10 @@ def check(files: list[pathlib.Path]) -> list[str]:
                 errors.append(f"{rel(md)}: broken link "
                               f"'{target}' ({dest} does not exist)")
                 continue
-            if fragment and dest.suffix == ".md":
-                if github_anchor(fragment) not in anchors_of(dest):
-                    errors.append(f"{rel(md)}: anchor "
-                                  f"'#{fragment}' not found in {rel(dest)}")
-    return errors
-
-
-# -- API-reference drift (docs/API.md vs the source it documents) -------------
-
-API_MODULE_RE = re.compile(r"^##\s+`(repro\.[\w.]+)`", re.MULTILINE)
-API_ENTRY_RE = re.compile(r"^###\s+`([A-Za-z_][\w.]*)")
-
-
-def public_surface(src: pathlib.Path) -> set[str]:
-    """Public names an API reference must cover, via ``ast``:
-    module-level defs/classes plus public methods (and properties) of
-    public classes — nested helper defs are not surface."""
-    tree = ast.parse(src.read_text(encoding="utf-8"))
-    names: set[str] = set()
-    for node in tree.body:
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            if not node.name.startswith("_"):
-                names.add(node.name)
-        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
-            names.add(node.name)
-            for sub in node.body:
-                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
-                        and not sub.name.startswith("_"):
-                    names.add(f"{node.name}.{sub.name}")
-    return names
-
-
-def check_api_doc(md: pathlib.Path) -> list[str]:
-    """Stale/missing-entry errors for the hand-written API reference."""
-    errors: list[str] = []
-    text = md.read_text(encoding="utf-8")
-    sections: dict[str, list[str]] = {}
-    module = None
-    for line in text.splitlines():
-        m = API_MODULE_RE.match(line)
-        if m:
-            module = m.group(1)
-            sections.setdefault(module, [])
-            continue
-        if line.startswith("## "):   # non-module section ends the scope
-            module = None
-            continue
-        e = API_ENTRY_RE.match(line)
-        if e and module is not None:
-            sections[module].append(e.group(1))
-    if not sections:
-        return [f"{rel(md)}: no '## `repro.…`' module sections found"]
-    for module, entries in sections.items():
-        src = REPO / "src" / pathlib.Path(*module.split("."))
-        src = src.with_suffix(".py")
-        if not src.exists():
-            errors.append(f"{rel(md)}: module {module} has no source file "
-                          f"{rel(src)}")
-            continue
-        surface = public_surface(src)
-        for entry in entries:
-            if entry not in surface:
-                errors.append(f"{rel(md)}: stale entry `{entry}` — not a "
-                              f"public def/class of {module}")
-        for name in sorted(surface - set(entries)):
-            errors.append(f"{rel(md)}: {module} public name `{name}` is "
-                          f"undocumented — add a '### `{name}(...)`' entry")
+            if fragment and dest.suffix == ".md" \
+                    and github_anchor(fragment) not in anchors_of(dest):
+                errors.append(f"{rel(md)}: anchor "
+                              f"'#{fragment}' not found in {rel(dest)}")
     return errors
 
 
@@ -200,16 +133,14 @@ def main(argv: list[str]) -> int:
         print(f"MISSING FILE: {f}", file=sys.stderr)
     present = [f for f in files if f.exists()]
     errors = check(present)
-    if REPO / "docs" / "API.md" in present:
-        errors += check_api_doc(REPO / "docs" / "API.md")
     if REPO / "docs" / "BENCHMARKS.md" in present:
         errors += check_embedded_help(REPO / "docs" / "BENCHMARKS.md")
     for e in errors:
         print(f"BROKEN: {e}", file=sys.stderr)
     if missing or errors:
         return 1
-    print(f"checked {len(files)} files: links, API reference and embedded "
-          "--help all in sync")
+    print(f"checked {len(files)} files: links and embedded --help all "
+          "in sync")
     return 0
 
 

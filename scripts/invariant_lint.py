@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""graphlint CLI: AST-enforced launch/cache/sharding invariants.
+
+Runs the ``repro.analysis`` rules (see docs/ANALYSIS.md for the catalog)
+over source trees and exits non-zero on any finding — the CI
+``invariant-lint`` job runs ``--format json`` over ``src/``. Stdlib-only:
+rules read source with ``ast``, they never import or execute the code
+under analysis, so this needs no installed dependencies.
+
+    python scripts/invariant_lint.py                     # lint src/
+    python scripts/invariant_lint.py --format json src
+    python scripts/invariant_lint.py --select G002,G004 src/repro/core
+    python scripts/invariant_lint.py --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import textwrap
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import (  # noqa: E402  (path bootstrap above)
+    Linter,
+    all_rules,
+    get_rule,
+    render_human,
+    render_json,
+)
+
+
+def list_rules() -> str:
+    blocks = []
+    for rule in all_rules():
+        contract = textwrap.fill(rule.contract, width=76,
+                                 initial_indent="    ",
+                                 subsequent_indent="    ")
+        blocks.append(f"{rule.id}  {rule.title}\n{contract}")
+    return "\n\n".join(blocks)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="invariant_lint.py",
+        description="graphlint: static AST checks for the repo's "
+                    "launch/cache/sharding contracts")
+    p.add_argument("paths", nargs="*", type=pathlib.Path,
+                   default=[REPO / "src"],
+                   help="files or directories to lint (default: src/)")
+    p.add_argument("--format", choices=("human", "json"), default="human",
+                   help="output format (json is what CI consumes)")
+    p.add_argument("--select", metavar="IDS",
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalog and exit")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        print(list_rules())
+        return 0
+
+    rules = None
+    if args.select:
+        try:
+            rules = [get_rule(rid.strip())
+                     for rid in args.select.split(",") if rid.strip()]
+        except KeyError as e:
+            p.error(str(e.args[0]))
+    linter = Linter(rules=rules)
+    findings = linter.lint(args.paths)
+    render = render_json if args.format == "json" else render_human
+    print(render(findings, linter.files_checked))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

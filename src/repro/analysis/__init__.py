@@ -1,0 +1,53 @@
+"""graphlint: AST-enforced launch/cache/sharding invariants (docs/ANALYSIS.md).
+
+The repo's cross-cutting contracts — lane bucketing before batched
+launches, canonical SnapshotStore cache tags, host-sync-free jitted hot
+paths, the semiring registry surface, API-doc coverage — are exactly the
+invariants no single unit test can guard: they constrain *every* call
+site, including ones future PRs add. ``repro.analysis`` encodes them as
+static AST rules so a violation fails CI at review time, before a masked
+lane or cache-tag bug can silently corrupt served results.
+
+Deliberately stdlib-only (``ast`` + ``pathlib``): the linter runs in CI
+before any dependency is installed, and importing it never pulls in jax.
+
+    PYTHONPATH=src python scripts/invariant_lint.py src        # CLI
+    from repro.analysis import Linter; Linter().lint([path])   # library
+
+Layout:
+
+* :mod:`repro.analysis.linter` — the rule-engine core: parsed-module
+  model, ``# graphlint: disable=RULE`` suppressions, rule registry,
+  finding type, human/JSON rendering.
+* :mod:`repro.analysis.rules` — rules G001–G005 (launch/cache/sync/
+  semiring invariants).
+* :mod:`repro.analysis.apidoc` — rule G006 (docs/API.md coverage +
+  docstring presence; the ast half of the old ``scripts/check_links.py``
+  promoted to a first-class rule).
+"""
+
+from repro.analysis.linter import (
+    Finding,
+    Linter,
+    Module,
+    Rule,
+    all_rules,
+    get_rule,
+    register,
+    render_human,
+    render_json,
+)
+from repro.analysis import rules as _rules      # noqa: F401  (registers G001-G005)
+from repro.analysis import apidoc as _apidoc    # noqa: F401  (registers G006)
+
+__all__ = [
+    "Finding",
+    "Linter",
+    "Module",
+    "Rule",
+    "all_rules",
+    "get_rule",
+    "register",
+    "render_human",
+    "render_json",
+]

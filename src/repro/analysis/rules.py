@@ -1,0 +1,418 @@
+"""Rules G001–G005: the launch/cache/sync/semiring invariants.
+
+Each rule encodes one contract the executors' module docstrings state in
+prose (core/trigrid.py, core/snapshots.py, core/window.py,
+graph/semiring.py) — see docs/ANALYSIS.md for the catalog with real
+before/after examples. Rules are static and name-based: they resolve
+callees by their rightmost name within one module (no cross-module import
+resolution), which is exactly the granularity the contracts are written
+at. Escape hatch for a deliberate exception:
+``# graphlint: disable=GNNN`` on the offending line.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.linter import (
+    Finding,
+    Module,
+    Rule,
+    call_name,
+    calls_named,
+    defined_function_names,
+    get_keyword,
+    register,
+)
+
+
+@register
+class PallasKernelLocation(Rule):
+    """G001: ``pl.pallas_call`` only inside ``repro/kernels/`` modules."""
+
+    id = "G001"
+    title = "pallas_call outside a kernels/ module"
+    contract = (
+        "Every pl.pallas_call lives under src/repro/kernels/*: kernels ship "
+        "as <name>.py (pallas_call + BlockSpec), ops.py (jit wrapper) and "
+        "ref.py (jnp oracle) with interpret-mode tests, so an ad-hoc "
+        "pallas_call in an executor bypasses the compat shims "
+        "(kernels/pallas_compat.py) and the oracle test pattern."
+    )
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if "kernels" in module.path.parts:
+            return
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call) and call_name(node) == "pallas_call":
+                yield self.finding(
+                    module, node,
+                    "pl.pallas_call outside src/repro/kernels/ — add a "
+                    "kernel module (with ops.py wrapper + ref.py oracle) "
+                    "instead of an inline kernel")
+            elif isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name == "pallas_call":
+                        yield self.finding(
+                            module, node,
+                            "importing pallas_call outside src/repro/"
+                            "kernels/ — kernels own the pallas surface")
+
+
+@register
+class LaneBucketDiscipline(Rule):
+    """G002: batched launches must use ``lane_bucket``-derived lane counts."""
+
+    id = "G002"
+    title = "batched launch without lane_bucket-derived lane count"
+    contract = (
+        "The shape-bucketing invariant (core/trigrid.py PR 3): every "
+        "stacked lane buffer pads its lane axis to lane_bucket(lanes, "
+        "data_extent) — pow2 and mesh-divisible, trailing lanes masked — "
+        "so jit trace keys stay (pow2 lanes, pow2 width) and every launch "
+        "shards. Raw-integer or un-bucketed num_lanes= arguments, and "
+        "batched-engine launches from functions that never compute a "
+        "bucket, break that invariant silently."
+    )
+
+    #: Stacking entry points whose ``num_lanes=`` must be bucket-derived.
+    STACKERS = ("stack_delta_blocks", "delta_stack", "slide_stack")
+    #: Batched-engine launches: the enclosing scope must compute a bucket.
+    LAUNCHES = ("incremental_additions_batched", "batched_incremental")
+    BUCKET_FN = "lane_bucket"
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        local_defs = defined_function_names(module.tree)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in self.STACKERS:
+                yield from self._check_stacker(module, node, name)
+            elif name in self.LAUNCHES and name not in local_defs \
+                    and not self._scope_calls_bucket(module, node):
+                # Launch calls inside the defining module are engine
+                # plumbing (incremental_additions_batched ->
+                # batched_incremental), hence the local_defs exemption.
+                yield self.finding(
+                    module, node,
+                    f"{name} launched from a scope that never calls "
+                    f"{self.BUCKET_FN}() — pad the lane axis to "
+                    "lane_bucket(lanes, data_extent) (masked trailing "
+                    "lanes) before launching")
+
+    def _check_stacker(self, module: Module, node: ast.Call,
+                       name: str) -> Iterator[Finding]:
+        value = get_keyword(node, "num_lanes")
+        if value is None:
+            yield self.finding(
+                module, node,
+                f"{name} without num_lanes= stacks the exact lane count — "
+                "pass num_lanes=lane_bucket(lanes, data_extent) so the "
+                "lane axis is pow2 and mesh-divisible")
+            return
+        if isinstance(value, ast.Constant):
+            what = ("num_lanes=None disables"
+                    if value.value is None else
+                    f"raw literal num_lanes={value.value!r} bypasses")
+            yield self.finding(
+                module, node,
+                f"{name}: {what} lane bucketing — derive the count via "
+                "lane_bucket(lanes, data_extent)")
+            return
+        if not self._bucket_derived(module, node, value):
+            yield self.finding(
+                module, node,
+                f"{name}: num_lanes is not derived from "
+                f"{self.BUCKET_FN}() in the enclosing scope — un-bucketed "
+                "lane counts fork jit traces and break mesh divisibility")
+
+    def _bucket_derived(self, module: Module, call: ast.Call,
+                        value: ast.expr) -> bool:
+        if isinstance(value, ast.Call) and call_name(value) == self.BUCKET_FN:
+            return True
+        if not isinstance(value, ast.Name):
+            return False
+        scope = self._outermost_scope(module, call)
+        for fn in module.function_ancestors(call):
+            # Pass-through wrappers: forwarding a parameter literally named
+            # num_lanes (SnapshotStore.delta_stack/slide_stack) is the
+            # caller's obligation, not the wrapper's.
+            args = fn.args
+            params = [a.arg for a in (*args.posonlyargs, *args.args,
+                                      *args.kwonlyargs)]
+            if value.id == "num_lanes" and value.id in params:
+                return True
+        return any(
+            isinstance(assign, ast.Assign)
+            and isinstance(assign.value, ast.Call)
+            and call_name(assign.value) == self.BUCKET_FN
+            and any(isinstance(t, ast.Name) and t.id == value.id
+                    for t in assign.targets)
+            for assign in ast.walk(scope))
+
+    def _scope_calls_bucket(self, module: Module, node: ast.Call) -> bool:
+        return any(calls_named(self._outermost_scope(module, node),
+                               self.BUCKET_FN))
+
+    @staticmethod
+    def _outermost_scope(module: Module, node: ast.AST) -> ast.AST:
+        ancestors = module.function_ancestors(node)
+        return ancestors[-1] if ancestors else module.tree
+
+
+@register
+class CanonicalCacheTags(Rule):
+    """G003: SnapshotStore cache tags only via the canonical tag helpers."""
+
+    id = "G003"
+    title = "literal SnapshotStore cache tag outside the canonical helpers"
+    contract = (
+        "Cache tags are part of the store's pure-cache contract: every "
+        "block is a pure function of (seq, tag), delta_stack tags embed "
+        "the pow2 lane bucket so trace keys follow bucketed shapes, and "
+        "pinning is by tag. All tag tuples are therefore built in ONE "
+        "module — core/snapshots.py ('T'/'Ts'/'D'/'DS'/'A'/'AS' families, "
+        "plus anchor_tag for pin/unpin callers). A literal or f-string tag "
+        "anywhere else can silently alias or miss the canonical entry."
+    )
+
+    #: Callable name -> index of its tag argument.
+    TAG_ARGS = {"pin": 0, "unpin": 0, "_cache_get": 0, "_cache_put": 0,
+                "block_for_keys": 1}
+    PRIVATE = ("_cache_get", "_cache_put")
+
+    @staticmethod
+    def _is_canonical(module: Module) -> bool:
+        return any(isinstance(node, ast.ClassDef)
+                   and node.name == "SnapshotStore"
+                   for node in module.tree.body)
+
+    @staticmethod
+    def _literal_tag(value: ast.expr) -> bool:
+        if isinstance(value, ast.JoinedStr):
+            return True
+        if isinstance(value, ast.Constant) and isinstance(value.value, str):
+            return True
+        if isinstance(value, ast.Tuple) and value.elts:
+            head = value.elts[0]
+            return (isinstance(head, ast.JoinedStr)
+                    or (isinstance(head, ast.Constant)
+                        and isinstance(head.value, str)))
+        return False
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if self._is_canonical(module):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name not in self.TAG_ARGS:
+                continue
+            if name in self.PRIVATE:
+                yield self.finding(
+                    module, node,
+                    f"SnapshotStore.{name} is private cache plumbing — go "
+                    "through a canonical accessor (window_block/delta_block/"
+                    "delta_stack/anchor_state_*) so tags stay bucketed")
+                continue
+            idx = self.TAG_ARGS[name]
+            value = (node.args[idx] if len(node.args) > idx
+                     else get_keyword(node, "tag"))
+            if value is not None and self._literal_tag(value):
+                yield self.finding(
+                    module, node,
+                    f"literal cache tag passed to {name}() — build tags "
+                    "with the canonical helpers in core/snapshots.py "
+                    "(e.g. anchor_tag) so family strings and lane-bucket "
+                    "components cannot drift")
+
+
+@register
+class HostSyncDiscipline(Rule):
+    """G004: no host syncs in jitted/hot code; timing syncs via host_sync."""
+
+    id = "G004"
+    title = "host synchronization on the device hot path"
+    contract = (
+        "block_until_ready()/.item()/np.asarray inside a jitted function "
+        "(or anything the relax-sweep hot path calls) either fails at "
+        "trace time or — worse — silently forces a host round-trip per "
+        "sweep. Outside jit, wall-clock timing syncs are legal but must "
+        "route through repro.graph.engine.host_sync() so the ONE "
+        "sanctioned sync point is greppable; benchmark modules "
+        "(benchmarks/) are allowlisted wholesale."
+    )
+
+    SYNC_METHODS = ("block_until_ready", "item")
+    NUMPY_NAMES = ("np", "numpy")
+    HOST_CONVERTERS = ("asarray", "array")
+    SANCTIONED = "host_sync"
+    HOT_SEEDS = ("relax_sweep",)
+    TIMING_DIRS = ("benchmarks",)
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        hot = self._hot_functions(module)
+        timing_module = bool(set(self.TIMING_DIRS) & set(module.path.parts))
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            enclosing = module.enclosing_function(node)
+            in_hot = enclosing in hot
+            if isinstance(func, ast.Attribute) and node.args == [] \
+                    and func.attr in self.SYNC_METHODS:
+                if in_hot:
+                    yield self.finding(
+                        module, node,
+                        f".{func.attr}() inside a jitted/hot-path function "
+                        "— host syncs cannot live under trace; hoist to "
+                        "the driver")
+                elif func.attr == "block_until_ready" and not timing_module \
+                        and not self._inside_sanctioned(module, node):
+                    yield self.finding(
+                        module, node,
+                        "bare .block_until_ready() — route timing syncs "
+                        "through repro.graph.engine.host_sync() (the "
+                        "sanctioned sync point; benchmarks/ is allowlisted)")
+            elif in_hot and isinstance(func, ast.Attribute) \
+                    and func.attr in self.HOST_CONVERTERS \
+                    and isinstance(func.value, ast.Name) \
+                    and func.value.id in self.NUMPY_NAMES:
+                yield self.finding(
+                    module, node,
+                    f"np.{func.attr} inside a jitted/hot-path function "
+                    "materializes a traced value on host — keep the hot "
+                    "path device-only")
+
+    def _inside_sanctioned(self, module: Module, node: ast.AST) -> bool:
+        return any(isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                   and fn.name == self.SANCTIONED
+                   for fn in module.function_ancestors(node))
+
+    def _hot_functions(self, module: Module) -> set[ast.AST]:
+        """Jit-decorated/jit-wrapped defs + everything they (transitively)
+        call or nest, resolved by name within this module."""
+        defs: list[ast.AST] = [n for n in ast.walk(module.tree)
+                               if isinstance(n, (*self._def_types(),))]
+        by_name: dict[str, list[ast.AST]] = {}
+        for n in defs:
+            if not isinstance(n, ast.Lambda):
+                by_name.setdefault(n.name, []).append(n)
+
+        hot: set[ast.AST] = set()
+        for n in defs:
+            if isinstance(n, ast.Lambda):
+                continue
+            if n.name in self.HOT_SEEDS or any(
+                    self._mentions_jit(d) for d in n.decorator_list):
+                hot.add(n)
+        # jax.jit(fn) / jax.jit(lambda ...) used as an expression.
+        for call in calls_named(module.tree, "jit"):
+            for arg in call.args:
+                if isinstance(arg, ast.Lambda):
+                    hot.add(arg)
+                elif isinstance(arg, ast.Name):
+                    hot.update(by_name.get(arg.id, ()))
+
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(hot):
+                for node in ast.walk(fn):
+                    if isinstance(node, (*self._def_types(),)) \
+                            and node not in hot:
+                        hot.add(node)
+                        changed = True
+                    elif isinstance(node, ast.Call):
+                        for callee in by_name.get(call_name(node) or "", ()):
+                            if callee not in hot:
+                                hot.add(callee)
+                                changed = True
+        return hot
+
+    @staticmethod
+    def _def_types():
+        return (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+    @staticmethod
+    def _mentions_jit(decorator: ast.expr) -> bool:
+        return any((isinstance(n, ast.Name) and n.id == "jit")
+                   or (isinstance(n, ast.Attribute) and n.attr == "jit")
+                   for n in ast.walk(decorator))
+
+
+@register
+class SemiringSurface(Rule):
+    """G005: semiring definitions complete + registered in ALL_SEMIRINGS."""
+
+    id = "G005"
+    title = "incomplete or unregistered Semiring definition"
+    contract = (
+        "Every monotone path semiring must supply the full contract "
+        "surface (name/reduce/identity/source_value/combine, by keyword; "
+        "reduce a literal 'min'/'max' — the engine branches on it "
+        "statically) and, in a module that defines the ALL_SEMIRINGS "
+        "registry, appear in that registry: executors, benchmarks and the "
+        "evolve CLI enumerate ALL_SEMIRINGS, so an unregistered semiring "
+        "is silently untested and unservable."
+    )
+
+    REQUIRED = ("name", "reduce", "identity", "source_value", "combine")
+    REGISTRY = "ALL_SEMIRINGS"
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        instances: dict[str, ast.Assign] = {}
+        registry_value: "ast.expr | None" = None
+        for stmt in module.tree.body:
+            if not isinstance(stmt, ast.Assign):
+                continue
+            targets = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+            if self.REGISTRY in targets:
+                registry_value = stmt.value
+            elif isinstance(stmt.value, ast.Call) \
+                    and call_name(stmt.value) == "Semiring" and targets:
+                instances[targets[0]] = stmt
+                yield from self._check_call(module, stmt.value)
+        # AnnAssign (ALL_SEMIRINGS: dict[...] = {...}) registry form.
+        for stmt in module.tree.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name) \
+                    and stmt.target.id == self.REGISTRY:
+                registry_value = stmt.value
+        if registry_value is not None:
+            registered = {n.id for n in ast.walk(registry_value)
+                          if isinstance(n, ast.Name)}
+            for name, stmt in instances.items():
+                if name not in registered:
+                    yield self.finding(
+                        module, stmt,
+                        f"Semiring {name} is not referenced by "
+                        f"{self.REGISTRY} — unregistered semirings are "
+                        "invisible to executors, benchmarks and the CLI")
+
+    def _check_call(self, module: Module,
+                    call: ast.Call) -> Iterator[Finding]:
+        if call.args:
+            yield self.finding(
+                module, call,
+                "Semiring(...) with positional arguments — use keywords so "
+                "the contract surface is checkable and reorder-proof")
+        given = {kw.arg for kw in call.keywords if kw.arg}
+        missing = [k for k in self.REQUIRED if k not in given]
+        if missing:
+            yield self.finding(
+                module, call,
+                f"Semiring(...) missing required field(s) "
+                f"{', '.join(missing)} — the monotone-op contract surface "
+                "is name/reduce/identity/source_value/combine")
+        reduce_kw = get_keyword(call, "reduce")
+        if reduce_kw is not None and not (
+                isinstance(reduce_kw, ast.Constant)
+                and reduce_kw.value in ("min", "max")):
+            yield self.finding(
+                module, call,
+                'Semiring reduce= must be the literal "min" or "max" — '
+                "the engine selects its segment reduction statically")

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore
 from repro.core.trigrid import direct_hop_plan, run_plan_batched
-from repro.graph.engine import incremental_additions, run_to_fixpoint
+from repro.graph.engine import host_sync, incremental_additions, run_to_fixpoint
 from repro.graph.semiring import Semiring
 
 
@@ -56,7 +56,7 @@ def run_direct_hop(
                else store.common_graph_view(*window))
     base = run_to_fixpoint(cg_view, semiring, source, max_iters, gated=gated,
                            track_parents=track_parents)
-    base.values.block_until_ready()
+    host_sync(base.values)
     base_stats = StreamStats(time.perf_counter() - t0, float(base.edge_work),
                              int(base.iterations))
 
@@ -68,7 +68,7 @@ def run_direct_hop(
         res = incremental_additions(view, delta, semiring,
                                     base.values, base.parent, max_iters,
                                     gated=gated, track_parents=track_parents)
-        res.values.block_until_ready()
+        host_sync(res.values)
         results.append(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(res.edge_work), int(res.iterations)))

@@ -37,6 +37,7 @@ from repro.graph.engine import (
     NO_PARENT,
     FixpointResult,
     _fixpoint_jit,
+    host_sync,
     relax_sweep,
     run_to_fixpoint,
 )
@@ -115,7 +116,7 @@ def run_kickstarter_stream(
     t0 = time.perf_counter()
     view0 = store.snapshot_view(0)
     res = run_to_fixpoint(view0, semiring, source, max_iters)
-    res.values.block_until_ready()
+    host_sync(res.values)
     stats.append(StreamStats(time.perf_counter() - t0, float(res.edge_work),
                              int(res.iterations)))
     results.append(res.values)
@@ -145,7 +146,7 @@ def run_kickstarter_stream(
         res, tainted = _trim_and_reconverge(
             semiring, n, max_iters, values, parent,
             jnp.asarray(ds), jnp.asarray(dd), add_block, (next_block,))
-        res.values.block_until_ready()
+        host_sync(res.values)
         wall = time.perf_counter() - t0
         values, parent = res.values, res.parent
         results.append(values)

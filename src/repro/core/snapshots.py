@@ -88,6 +88,20 @@ def tightest_cover(candidates, window, size_fn):
     return best
 
 
+def anchor_tag(qkey: tuple, window: "tuple[int, int]") -> tuple:
+    """The canonical "AS"-family cache tag for an anchor state.
+
+    ``("AS", qkey, (i, j))`` — THE tag constructor for anchor states, used
+    by the store's own ``anchor_state_*`` accessors and by external
+    pin/unpin callers (core/window.py ``AnchorChain``). Tags are cache
+    identity: a hand-built tuple that drifts from this shape (family
+    string, qkey structure, list-vs-tuple window) silently misses the
+    cached entry or pins nothing, which is why graphlint rule G003 bans
+    literal tag construction outside this module.
+    """
+    return ("AS", qkey, tuple(window))
+
+
 def _block_nbytes(blk) -> int:
     # Cached entries that know their own footprint (engine QueryStates via
     # the ``nbytes`` hook) report it; raw EdgeBlocks are summed directly.
@@ -218,11 +232,11 @@ class SnapshotStore:
 
     def anchor_state_get(self, qkey: tuple, window: "tuple[int, int]"):
         """Cached converged QueryState for exactly this (qkey, window)."""
-        return self._cache_get(("AS", qkey, tuple(window)))
+        return self._cache_get(anchor_tag(qkey, window))
 
     def anchor_state_put(self, qkey: tuple, window: "tuple[int, int]", state):
         """Cache a converged anchor state (LRU-participating, "AS" family)."""
-        return self._cache_put(("AS", qkey, tuple(window)), state)
+        return self._cache_put(anchor_tag(qkey, window), state)
 
     def anchor_state_cover(self, qkey: tuple, window: "tuple[int, int]"):
         """Tightest cached anchor state whose window COVERS ``window``.
@@ -240,7 +254,7 @@ class SnapshotStore:
             window, self.window_size)
         if best is None:
             return None
-        return best, self._cache_get(("AS", qkey, best))  # touches LRU
+        return best, self._cache_get(anchor_tag(qkey, best))  # touches LRU
 
     # -- window intersections -------------------------------------------------
 
@@ -267,6 +281,7 @@ class SnapshotStore:
         return cur
 
     def window_size(self, i: int, j: int) -> int:
+        """|T(i, j)| — the edge count every Δ-volume cost model uses."""
         return int(self.window_keys(i, j).shape[0])
 
     def delta_keys(self, parent: tuple[int, int], child: tuple[int, int]) -> np.ndarray:
@@ -292,6 +307,7 @@ class SnapshotStore:
         return self._cache_put(tag, blk)
 
     def window_block(self, i: int, j: int) -> EdgeBlock:
+        """T(i, j) as a single cached device block (tag family "T")."""
         return self.block_for_keys(self.window_keys(i, j), ("T", i, j))
 
     def window_view_split(self, i: int, j: int, n_blocks: int) -> EdgeView:
@@ -309,6 +325,7 @@ class SnapshotStore:
         return EdgeView(blocks, self.num_nodes)
 
     def delta_block(self, parent: tuple[int, int], child: tuple[int, int]) -> EdgeBlock:
+        """The addition batch of one nested-window hop (tag family "D")."""
         return self.block_for_keys(self.delta_keys(parent, child),
                                    ("D", parent, child))
 
@@ -348,6 +365,7 @@ class SnapshotStore:
         return EdgeView((self.window_block(i, i),), self.num_nodes)
 
     def common_graph_view(self, i: int = 0, j: int | None = None) -> EdgeView:
+        """Single-block view of T(i, j); defaults to the global common graph."""
         if j is None:
             j = self.seq.num_snapshots - 1
         return EdgeView((self.window_block(i, j),), self.num_nodes)
@@ -359,6 +377,7 @@ class SnapshotStore:
         return self.block_for_keys(self.seq.additions[t], ("A", t))
 
     def deletion_keys(self, t: int) -> np.ndarray:
+        """Keys deleted at transition t → t+1 (KickStarter baseline input)."""
         return self.seq.deletions[t]
 
     # -- sliding windows (full-paper feature) -----------------------------------

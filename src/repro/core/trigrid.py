@@ -64,6 +64,7 @@ from repro.core.snapshots import SnapshotStore
 from repro.graph.edgeset import EdgeBlock, EdgeView, lane_bucket
 from repro.graph.engine import (
     gather_lane_states,
+    host_sync,
     incremental_additions,
     incremental_additions_batched,
     run_to_fixpoint,
@@ -75,10 +76,17 @@ Window = tuple[int, int]
 
 @dataclasses.dataclass
 class PlanNode:
+    """A Triangular-Grid plan-tree node: a window plus its child hops.
+
+    Every edge of the tree is an addition-only hop T(parent) → T(child)
+    (nesting guarantees Δ ≥ 0); the root is the plan's apex window.
+    """
+
     window: Window
     children: list["PlanNode"]
 
     def leaves(self) -> list[Window]:
+        """The plan's leaf windows in DFS order (the answered snapshots)."""
         if not self.children:
             return [self.window]
         out = []
@@ -159,6 +167,7 @@ def bisection_plan(i: int = 0, j: int | None = None, *, n: int | None = None) ->
 
 
 def direct_hop_plan(i: int = 0, j: int | None = None, *, n: int | None = None) -> PlanNode:
+    """The paper's star schedule: every snapshot one hop from the apex."""
     j = _resolve_last(j, n)
     return PlanNode((i, j), [PlanNode((k, k), []) for k in range(i, j + 1)]) \
         if i != j else PlanNode((i, i), [])
@@ -178,6 +187,10 @@ def plan_added_edges(store: SnapshotStore, plan: PlanNode) -> int:
 
 @dataclasses.dataclass
 class WorkSharingRun:
+    """Result record of a TG plan execution: per-snapshot values plus the
+    apex fixpoint stats, per-hop stats and timing/Δ-volume/lane accounting
+    the work-sharing benchmarks compare executors by."""
+
     results: dict[int, jnp.ndarray]   # snapshot index -> values
     base_stats: StreamStats
     hop_stats: list[StreamStats]
@@ -211,7 +224,7 @@ def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
     apex_view = _anchor_view(store, window, cg_split)
     base = run_to_fixpoint(apex_view, semiring, source, max_iters, gated=gated,
                            track_parents=track_parents)
-    base.values.block_until_ready()
+    host_sync(base.values)
     base_stats = StreamStats(time.perf_counter() - t0, float(base.edge_work),
                              int(base.iterations))
     return apex_view, base, base_stats
@@ -247,7 +260,7 @@ def run_plan(
             res = incremental_additions(child_view, delta, semiring,
                                         values, parent, max_iters, gated=gated,
                                         track_parents=track_parents)
-            res.values.block_until_ready()
+            host_sync(res.values)
             hop_stats.append(StreamStats(time.perf_counter() - t0,
                                          float(res.edge_work),
                                          int(res.iterations)))
@@ -385,7 +398,7 @@ def run_plan_batched(
             shared_blocks=tuple(apex_view.blocks), delta_blocks=delta_blocks,
             max_iters=max_iters, track_parents=track_parents, gated=gated,
             seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
-        res.values.block_until_ready()
+        host_sync(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(jnp.sum(res.edge_work)),
                                      int(jnp.max(res.iterations))))

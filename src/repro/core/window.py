@@ -90,7 +90,7 @@ import time
 import jax.numpy as jnp
 
 from repro.core.kickstarter import StreamStats
-from repro.core.snapshots import SnapshotStore, tightest_cover
+from repro.core.snapshots import SnapshotStore, anchor_tag, tightest_cover
 from repro.core.trigrid import (
     _anchor_base,
     _anchor_view,
@@ -102,6 +102,7 @@ from repro.graph.engine import (
     QueryState,
     extract_state,
     gather_lane_states,
+    host_sync,
     incremental_additions,
     incremental_additions_batched,
 )
@@ -144,6 +145,10 @@ def window_anchor(windows: list[Window]) -> Window:
 
 @dataclasses.dataclass
 class WindowSlideRun:
+    """Result record of one window slide: per-window values plus the
+    shared-anchor fixpoint stats, per-hop stats and Δ-volume/lane
+    accounting the benchmarks compare executors by."""
+
     results: dict[Window, jnp.ndarray]  # window -> values
     anchor: Window
     base_stats: StreamStats             # the shared anchor fixpoint
@@ -215,7 +220,7 @@ def run_window_slide(
         res = incremental_additions(view, delta, semiring, base.values,
                                     base.parent, max_iters, gated=gated,
                                     track_parents=track_parents)
-        res.values.block_until_ready()
+        host_sync(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(res.edge_work),
                                      int(res.iterations)))
@@ -300,7 +305,7 @@ def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
         shared_blocks=tuple(anchor_view.blocks), delta_blocks=delta_blocks,
         max_iters=max_iters, track_parents=track_parents, gated=gated,
         seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
-    res.values.block_until_ready()
+    host_sync(res.values)
     return res, bucket
 
 
@@ -374,6 +379,7 @@ class WindowStream:
         return self
 
     def pending(self) -> "list[Window]":
+        """Windows buffered but not yet consumed by the executor."""
         return self.windows[self.consumed:]
 
     def take(self) -> "list[Window]":
@@ -446,6 +452,7 @@ class CampaignPlan:
 
     @property
     def widths(self) -> "list[int]":
+        """Per-campaign window counts (the partition's shape)."""
         return [len(c) for c in self.campaigns]
 
     @property
@@ -571,6 +578,10 @@ def _stream_qkey(semiring: Semiring, source: int, max_iters: int, gated: bool,
 
 @dataclasses.dataclass
 class WindowStreamRun:
+    """Result record of a streamed run: per-window values, the campaign
+    partition, per-campaign anchor events (rebuild/hop/hit) and stats,
+    and — in campaign_width="auto" mode — the chosen CampaignPlan."""
+
     results: dict[Window, jnp.ndarray]   # window -> values
     campaigns: "list[list[Window]]"
     anchors: "list[Window]"              # per-campaign anchor window
@@ -589,14 +600,17 @@ class WindowStreamRun:
 
     @property
     def anchor_rebuilds(self) -> int:
+        """Count of from-scratch anchor fixpoints in this run."""
         return self.anchor_events.count("rebuild")
 
     @property
     def anchor_hops(self) -> int:
+        """Count of incremental anchor hops in this run."""
         return self.anchor_events.count("hop")
 
     @property
     def anchor_hits(self) -> int:
+        """Count of exact anchor cache hits (zero anchor work)."""
         return self.anchor_events.count("hit")
 
 
@@ -627,7 +641,7 @@ def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
         res = incremental_additions(view, delta, semiring, cover_state.values,
                                     cover_state.parent, max_iters,
                                     gated=gated, track_parents=track_parents)
-        res.values.block_until_ready()
+        host_sync(res.values)
         state = store.anchor_state_put(qkey, anchor, extract_state(res))
         delta_edges = (store.window_size(*anchor)
                        - store.window_size(*cover_window))
@@ -732,6 +746,7 @@ class AnchorChain:
         self._repin()
 
     def registered(self) -> "list[str]":
+        """Names of currently registered streams, sorted."""
         return sorted(self._positions)
 
     def cover(self, window: Window) -> "Window | None":
@@ -779,9 +794,9 @@ class AnchorChain:
                            for pos in positions)}
             self.links = [link for link in self.links if link in want]
         for link in want - self._pinned:
-            self.store.pin(("AS", self.qkey, link))
+            self.store.pin(anchor_tag(self.qkey, link))
         for link in self._pinned - want:
-            self.store.unpin(("AS", self.qkey, link))
+            self.store.unpin(anchor_tag(self.qkey, link))
         self._pinned = want
 
 

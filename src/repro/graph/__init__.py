@@ -26,6 +26,7 @@ from repro.graph.engine import (
     FixpointResult,
     QueryState,
     extract_state,
+    host_sync,
     init_values,
     relax_sweep,
     run_to_fixpoint,
@@ -51,6 +52,7 @@ __all__ = [
     "FixpointResult",
     "QueryState",
     "extract_state",
+    "host_sync",
     "init_values",
     "relax_sweep",
     "run_to_fixpoint",

@@ -80,6 +80,23 @@ def extract_state(res: FixpointResult) -> QueryState:
     return QueryState(res.values, res.parent)
 
 
+def host_sync(x):
+    """Block until ``x`` (any array/pytree leaf holder) is computed on
+    device, returning it — THE sanctioned host-sync point.
+
+    Wall-clock numbers in run records are only honest if the device work
+    they bracket has finished, but a stray ``block_until_ready`` inside a
+    jitted function fails at trace time (and near the hot path it forces a
+    host round-trip per sweep). graphlint rule G004 therefore bans bare
+    syncs outside ``benchmarks/``; drivers and executors time through this
+    helper instead, keeping every legal sync greppable from one name.
+    """
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return x
+
+
 def init_values(num_nodes: int, semiring: Semiring, source: int) -> jnp.ndarray:
     values = jnp.full((num_nodes,), semiring.identity, dtype=jnp.float32)
     return values.at[source].set(semiring.source_value)

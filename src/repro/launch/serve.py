@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced_config
+from repro.graph.engine import host_sync
 from repro.models.transformer import (
     init_kv_cache,
     init_lm_params,
@@ -58,7 +59,7 @@ def main(argv=None):
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         out_tokens.append(next_tok)
     out = jnp.concatenate(out_tokens, axis=1)
-    out.block_until_ready()
+    host_sync(out)
     dt = time.perf_counter() - t0
     print(f"[serve] {args.arch}: prefill {args.batch}x{args.prompt_len} + "
           f"{args.decode_steps} decode steps in {dt:.2f}s")

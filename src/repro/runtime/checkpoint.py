@@ -11,6 +11,7 @@ restarts know what they are resharding from (runtime/fault.reshard_state).
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import pickle
@@ -63,10 +64,8 @@ class CheckpointManager:
         # retention
         while len(man["steps"]) > self.keep:
             old = man["steps"].pop(0)
-            try:
+            with contextlib.suppress(FileNotFoundError):
                 os.unlink(os.path.join(self.dir, f"step_{old:010d}.ckpt"))
-            except FileNotFoundError:
-                pass
         with open(self._manifest_path(), "w") as f:
             json.dump(man, f)
 

@@ -1,0 +1,437 @@
+"""graphlint fixture corpus + self-check (src/repro/analysis).
+
+Each rule gets a paired bad/good fixture: the bad snippet must trigger
+exactly its rule (no cross-rule noise), the good snippet must be clean
+under ALL rules. Fixtures are written into a tmp mini-repo (pyproject
+marker + src/repro layout + docs/API.md) so root detection, dotted-name
+derivation and the G006 doc lookup run exactly as they do on the real
+tree — which the self-check at the bottom then asserts is clean.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import Linter, all_rules, get_rule
+from repro.analysis.linter import Module, render_json
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+API_DOC = """# API reference
+
+## `repro.core.documented`
+
+### `covered(x)`
+Documented and docstringed.
+"""
+
+
+def make_repo(tmp_path: pathlib.Path) -> pathlib.Path:
+    """A minimal rooted repo skeleton fixtures are dropped into."""
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='fix'\n")
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "API.md").write_text(API_DOC)
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    return tmp_path
+
+
+def lint_snippet(tmp_path, code, relpath="src/repro/mod.py", rules=None):
+    root = make_repo(tmp_path)
+    target = root / relpath
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(code)
+    linter = Linter(rules=rules, root=root)
+    return linter.lint([target])
+
+
+def assert_only_rule(findings, rule_id, count=None):
+    """The bad fixture discipline: found, and nothing but this rule."""
+    assert findings, f"expected {rule_id} findings, got none"
+    assert {f.rule for f in findings} == {rule_id}, findings
+    if count is not None:
+        assert len(findings) == count, findings
+
+
+# -- G001: pallas_call location ----------------------------------------------
+
+BAD_G001 = """\
+import jax.experimental.pallas as pl
+
+def sneaky(x):
+    return pl.pallas_call(lambda ref: ref, out_shape=x)(x)
+"""
+
+GOOD_G001 = BAD_G001  # same code is legal inside kernels/
+
+
+def test_g001_bad(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G001,
+                            relpath="src/repro/core/sneaky.py")
+    assert_only_rule(findings, "G001", count=1)
+
+
+def test_g001_good_inside_kernels(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G001,
+                        relpath="src/repro/kernels/fine.py") == []
+
+
+def test_g001_flags_import_too(tmp_path):
+    code = "from jax.experimental.pallas import pallas_call\n"
+    findings = lint_snippet(tmp_path, code,
+                            relpath="src/repro/launch/bad_import.py")
+    assert_only_rule(findings, "G001", count=1)
+
+
+# -- G002: lane_bucket discipline --------------------------------------------
+
+BAD_G002 = """\
+from repro.graph.edgeset import stack_delta_blocks
+
+def stack_raw(lanes, n):
+    return stack_delta_blocks(lanes, n, num_lanes=7)
+
+def stack_unbucketed(lanes, n):
+    k = len(lanes)
+    return stack_delta_blocks(lanes, n, num_lanes=k)
+
+def launch_unbucketed(view, state, stacked):
+    from repro.graph.engine import incremental_additions_batched
+    return incremental_additions_batched(view, state, stacked)
+"""
+
+GOOD_G002 = """\
+from repro.graph.edgeset import lane_bucket, stack_delta_blocks
+from repro.graph.engine import incremental_additions_batched
+
+def stack_bucketed(lanes, n, extent):
+    bucket = lane_bucket(len(lanes), extent)
+    return stack_delta_blocks(lanes, n, num_lanes=bucket)
+
+def stack_inline(lanes, n, extent):
+    return stack_delta_blocks(lanes, n,
+                              num_lanes=lane_bucket(len(lanes), extent))
+
+def forwarding_wrapper(lanes, n, num_lanes=None):
+    # pass-through: the caller owns the bucketing obligation
+    return stack_delta_blocks(lanes, n, num_lanes=num_lanes)
+
+def launch_bucketed(view, state, lanes, extent):
+    bucket = lane_bucket(len(lanes), extent)
+    def inner(stacked):
+        return incremental_additions_batched(view, state, stacked)
+    return inner, bucket
+"""
+
+
+def test_g002_bad(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G002)
+    assert_only_rule(findings, "G002", count=3)
+
+
+def test_g002_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G002) == []
+
+
+def test_g002_missing_num_lanes(tmp_path):
+    code = ("from repro.graph.edgeset import stack_delta_blocks\n"
+            "def f(lanes, n):\n"
+            "    return stack_delta_blocks(lanes, n)\n")
+    findings = lint_snippet(tmp_path, code)
+    assert_only_rule(findings, "G002", count=1)
+    assert "without num_lanes" in findings[0].message
+
+
+# -- G003: canonical cache tags ----------------------------------------------
+
+BAD_G003 = """\
+def hold(store, qkey, link):
+    store.pin(("AS", qkey, link))
+
+def peek(store, key):
+    return store._cache_get(("T", 0, 3))
+"""
+
+GOOD_G003 = """\
+from repro.core.snapshots import anchor_tag
+
+def hold(store, qkey, link):
+    store.pin(anchor_tag(qkey, link))
+
+def stacked(store, hops, num_lanes):
+    return store.delta_stack(hops, num_lanes=num_lanes)
+"""
+
+
+def test_g003_bad(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G003)
+    assert_only_rule(findings, "G003", count=2)
+
+
+def test_g003_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G003) == []
+
+
+def test_g003_exempts_canonical_module(tmp_path):
+    code = ("class SnapshotStore:\n"
+            "    '''The canonical tag module.'''\n"
+            "    def anchor_state_get(self, qkey, window):\n"
+            "        '''doc'''\n"
+            "        return self._cache_get(('AS', qkey, tuple(window)))\n")
+    assert lint_snippet(tmp_path, code,
+                        rules=[get_rule("G003")]) == []
+
+
+# -- G004: host-sync discipline ----------------------------------------------
+
+BAD_G004_JIT = """\
+import functools
+import jax
+import numpy as np
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def hot(n, values):
+    host = np.asarray(values)
+    values.block_until_ready()
+    return values
+"""
+
+BAD_G004_BARE = """\
+def time_things(values):
+    values.block_until_ready()
+    return values
+"""
+
+GOOD_G004 = """\
+import jax
+import numpy as np
+from repro.graph.engine import host_sync
+
+def relax_sweep(view, values):
+    return values + 1
+
+def timed_driver(values):
+    host_sync(values)
+    return values
+
+def host_side_report(result):
+    # not reachable from any jitted function: np.asarray is fine
+    return np.asarray(result)
+"""
+
+
+def test_g004_inside_jit(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G004_JIT)
+    assert_only_rule(findings, "G004", count=2)
+    assert any("jitted" in f.message for f in findings)
+
+
+def test_g004_bare_sync(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G004_BARE)
+    assert_only_rule(findings, "G004", count=1)
+    assert "host_sync" in findings[0].message
+
+
+def test_g004_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G004) == []
+
+
+def test_g004_benchmarks_allowlisted(tmp_path):
+    assert lint_snippet(tmp_path, BAD_G004_BARE,
+                        relpath="benchmarks/bench_thing.py") == []
+
+
+def test_g004_hot_path_closure(tmp_path):
+    # relax_sweep -> helper chain: a sync two calls away is still hot.
+    code = ("def helper(values):\n"
+            "    return values.item()\n"
+            "def middle(values):\n"
+            "    return helper(values)\n"
+            "def relax_sweep(view, values):\n"
+            "    return middle(values)\n")
+    findings = lint_snippet(tmp_path, code)
+    assert_only_rule(findings, "G004", count=1)
+
+
+def test_g004_jit_wrapped_lambda(tmp_path):
+    code = ("import jax\n"
+            "import numpy as np\n"
+            "def make(cfg):\n"
+            "    return jax.jit(lambda v: np.asarray(v))\n")
+    findings = lint_snippet(tmp_path, code)
+    assert_only_rule(findings, "G004", count=1)
+
+
+# -- G005: semiring contract surface -----------------------------------------
+
+BAD_G005 = """\
+from repro.graph.semiring import Semiring
+
+GOOD = Semiring(name="bfs", reduce="min", identity=1.0,
+                source_value=0.0, combine="add")
+PARTIAL = Semiring(name="oops", reduce="min")
+SOFTMIN = Semiring(name="soft", reduce="softmin", identity=0.0,
+                   source_value=0.0, combine="add")
+
+ALL_SEMIRINGS = {s.name: s for s in (GOOD, PARTIAL)}
+"""
+
+GOOD_G005 = """\
+from repro.graph.semiring import Semiring
+
+BFS = Semiring(name="bfs", reduce="min", identity=1.0,
+               source_value=0.0, combine="add")
+SSWP = Semiring(name="sswp", reduce="max", identity=0.0,
+                source_value=1.0, combine="min")
+
+ALL_SEMIRINGS = {s.name: s for s in (BFS, SSWP)}
+"""
+
+
+def test_g005_bad(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G005)
+    # PARTIAL misses fields, SOFTMIN has a non-literal-min/max reduce AND
+    # is unregistered — three findings, all G005.
+    assert_only_rule(findings, "G005", count=3)
+    messages = " | ".join(f.message for f in findings)
+    assert "missing required field" in messages
+    assert '"min" or "max"' in messages
+    assert "ALL_SEMIRINGS" in messages
+
+
+def test_g005_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G005) == []
+
+
+# -- G006: API.md coverage + docstrings --------------------------------------
+
+BAD_G006 = """\
+def covered(x):
+    return x
+
+def newcomer(x):
+    '''Docstringed but absent from API.md.'''
+    return x
+"""
+
+GOOD_G006 = """\
+def covered(x):
+    '''Documented and docstringed.'''
+    return x
+
+def _helper(x):
+    return x
+"""
+
+
+def test_g006_bad(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G006,
+                            relpath="src/repro/core/documented.py")
+    # covered() lacks a docstring; newcomer() lacks an API.md entry.
+    assert_only_rule(findings, "G006", count=2)
+    messages = " | ".join(f.message for f in findings)
+    assert "no docstring" in messages
+    assert "undocumented" in messages
+
+
+def test_g006_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G006,
+                        relpath="src/repro/core/documented.py") == []
+
+
+def test_g006_stale_entry_flagged_in_api_md(tmp_path):
+    # Module exists but no longer defines covered(): the stale entry is
+    # reported against docs/API.md, not the source file.
+    findings = lint_snippet(tmp_path, "def other(x):\n    '''doc'''\n",
+                            relpath="src/repro/core/documented.py")
+    g006 = [f for f in findings if f.rule == "G006"]
+    stale = [f for f in g006 if "stale" in f.message]
+    assert stale and stale[0].path == "docs/API.md"
+
+
+def test_g006_out_of_scope_module_skipped(tmp_path):
+    # No API.md section for repro.mod: the docstring gate does not apply.
+    assert lint_snippet(tmp_path, "def undocumented(x):\n    return x\n",
+                        rules=[get_rule("G006")]) == []
+
+
+# -- suppressions, engine plumbing, CLI --------------------------------------
+
+def test_line_suppression(tmp_path):
+    code = BAD_G004_BARE.replace(
+        "values.block_until_ready()",
+        "values.block_until_ready()  # graphlint: disable=G004")
+    assert lint_snippet(tmp_path, code) == []
+
+
+def test_file_suppression(tmp_path):
+    code = "# graphlint: disable-file=G004\n" + BAD_G004_BARE
+    assert lint_snippet(tmp_path, code) == []
+
+
+def test_suppression_is_per_rule(tmp_path):
+    code = BAD_G004_BARE.replace(
+        "values.block_until_ready()",
+        "values.block_until_ready()  # graphlint: disable=G001")
+    findings = lint_snippet(tmp_path, code)
+    assert_only_rule(findings, "G004", count=1)
+
+
+def test_rule_registry_complete():
+    assert [r.id for r in all_rules()] == \
+        ["G001", "G002", "G003", "G004", "G005", "G006"]
+    for rule in all_rules():
+        assert rule.title and rule.contract
+    with pytest.raises(KeyError):
+        get_rule("G999")
+
+
+def test_module_dotted_name(tmp_path):
+    root = make_repo(tmp_path)
+    path = root / "src" / "repro" / "core" / "thing.py"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    m = Module(path, "x = 1\n", root)
+    assert m.dotted_name() == "repro.core.thing"
+    assert m.rel == "src/repro/core/thing.py"
+
+
+def test_render_json_shape(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G004_BARE)
+    payload = json.loads(render_json(findings, files_checked=1))
+    assert payload["version"] == 1
+    assert payload["count"] == 1
+    assert payload["findings"][0]["rule"] == "G004"
+    assert set(payload["findings"][0]) == \
+        {"rule", "path", "line", "col", "message"}
+
+
+def test_cli_json_exit_codes(tmp_path):
+    root = make_repo(tmp_path)
+    bad = root / "src" / "repro" / "bad.py"
+    bad.write_text(BAD_G004_BARE)
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "invariant_lint.py"),
+         "--format", "json", str(bad)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stderr
+    payload = json.loads(proc.stdout)
+    assert payload["count"] == 1 and payload["findings"][0]["rule"] == "G004"
+
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "invariant_lint.py"),
+         "--select", "G001", str(bad)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# -- the gate itself: the real tree is clean ---------------------------------
+
+def test_graphlint_clean_on_real_src():
+    linter = Linter(root=REPO)
+    findings = linter.lint([REPO / "src"])
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert linter.files_checked > 50

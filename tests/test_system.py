@@ -1,5 +1,7 @@
 """End-to-end behaviour tests for the paper's system (drivers + integration)."""
 
+import pathlib
+
 import numpy as np
 
 from repro.core import (
@@ -67,7 +69,7 @@ def test_evolve_driver_cli():
 
 def test_dryrun_module_has_flag_first():
     """The XLA device-count override must precede every import (spec)."""
-    src = open("src/repro/launch/dryrun.py").read()
+    src = pathlib.Path("src/repro/launch/dryrun.py").read_text()
     first_code = [ln for ln in src.splitlines() if ln and not ln.startswith("#")]
     assert first_code[0] == "import os"
     assert "xla_force_host_platform_device_count=512" in first_code[1]
