@@ -283,6 +283,44 @@ def bench_evolve(scale: str):
     return out
 
 
+def bench_serve(scale: str):
+    from benchmarks.serve import run_serve_bench
+    params = {
+        "smoke": dict(n=400, e=3_000, snaps=6, batch_changes=200,
+                      num_clients=4, seed=7),
+        "default": dict(),
+        "full": dict(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
+                     num_clients=8, seed=7),
+    }[scale]
+    r = run_serve_bench(**params)
+    # bit-identity vs solo streams, strictly-fewer-rebuilds and
+    # occupancy > 1 are asserted inside run_serve_bench
+    return [("serve/load", r["wall_s"] * 1e6,
+             f"clients={r['clients']} {r['completed']}/{r['admitted']} "
+             f"queries occupancy={r['occupancy_milli'] / 1000:.2f} "
+             f"rebuilds={r['rebuilds_service']}+{r['hops_service']}hops "
+             f"vs solo {r['rebuilds_solo']} "
+             f"qps={r['queries_per_sec']:.1f} "
+             f"p99={r['p99_us'] / 1e3:.1f}ms",
+             {"clients": int(r["clients"]),
+              "admitted": int(r["admitted"]),
+              "completed": int(r["completed"]),
+              "turns": int(r["turns"]),
+              "launches": int(r["launches"]),
+              "lanes": int(r["lanes"]),
+              "padded_lanes": int(r["padded_lanes"]),
+              "occupancy_milli": int(r["occupancy_milli"]),
+              "rebuilds_service": int(r["rebuilds_service"]),
+              "hops_service": int(r["hops_service"]),
+              "hits_service": int(r["hits_service"]),
+              "rebuilds_solo": int(r["rebuilds_solo"]),
+              "hops_solo": int(r["hops_solo"]),
+              "bit_identical": bool(r["bit_identical"])},
+             {"queries_per_sec": round(float(r["queries_per_sec"]), 2),
+              "p50_us": round(float(r["p50_us"]), 1),
+              "p99_us": round(float(r["p99_us"]), 1)})]
+
+
 BENCHES = {
     "table1": bench_table1,
     "del_vs_add": bench_del_vs_add,
@@ -290,6 +328,7 @@ BENCHES = {
     "window_slide": bench_window_slide,
     "window_stream": bench_window_stream,
     "window_overlap": bench_window_overlap,
+    "serve": bench_serve,
     "kernels": bench_kernels,
     "evolve": bench_evolve,
 }
@@ -315,11 +354,14 @@ def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
                      rows, error: str | None) -> pathlib.Path:
     """Emit BENCH_<bench>.json (schema v2: docs/BENCHMARKS.md).
 
-    Rows are ``(name, us_per_call, derived)`` or ``(name, us_per_call,
-    derived, exact)`` — ``exact`` holds the machine-independent fields
-    (edge/work counts, verification booleans) the regression gate
-    (scripts/bench_gate.py) compares strictly; wall times only ever get a
-    tolerance.
+    Rows are ``(name, us_per_call, derived)``, ``(name, us_per_call,
+    derived, exact)`` or ``(name, us_per_call, derived, exact, ratio)`` —
+    ``exact`` holds the machine-independent fields (edge/work counts,
+    verification booleans) the regression gate (scripts/bench_gate.py)
+    compares strictly; ``ratio`` holds machine-dependent rate/latency
+    fields (queries/sec, p50/p99 µs) the gate compares within the same
+    tolerance factor as wall times, in BOTH directions; rows without
+    ratio fields omit the key entirely.
     """
     ensure_out_dir(out_dir)
     path = out_dir / f"BENCH_{bench}.json"
@@ -329,8 +371,9 @@ def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
         "generated_unix": time.time(),
         "status": status,
         "error": error,
-        "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2],
-                  "exact": r[3] if len(r) > 3 else {}}
+        "rows": [dict({"name": r[0], "us_per_call": r[1], "derived": r[2],
+                       "exact": r[3] if len(r) > 3 else {}},
+                      **({"ratio": r[4]} if len(r) > 4 and r[4] else {}))
                  for r in rows],
     }, indent=2) + "\n")
     return path

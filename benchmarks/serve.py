@@ -1,0 +1,140 @@
+"""Query-service load bench: sustained throughput, latency, anchor sharing.
+
+Drives ``core/service.py`` under the deterministic seeded open-loop load
+plan from ``repro.launch.serve.generate_load`` — many clients, mixed
+semirings/sources/window extents, bursty arrivals — and accounts one row:
+
+* **Exact (gate-strict) fields**: queries admitted/completed, turn/launch/
+  lane counts, batch occupancy (milli-lanes per launch — an integer so the
+  gate compares it strictly), anchor rebuild/hop/hit counts for the
+  service AND for the solo stream-at-a-time baseline, and the bit-identity
+  boolean. All are pure functions of the seed: scheduling and packing are
+  count-based, never wall-clock-based.
+* **Ratio fields** (``scripts/bench_gate.py`` compares them within
+  ``--time-tol`` both ways): sustained queries/sec, p50/p99
+  admission→completion latency.
+
+The row doubles as the acceptance check (assertions, not just numbers):
+every client's every window must be bit-identical to running that
+client's stream solo (``run_window_stream_batched``, fresh anchor cache),
+the service must perform STRICTLY FEWER total anchor rebuilds than the
+solo runs combined (clients sharing a query key share anchor states), and
+at least one launch must pack lanes from more than one client
+(batch occupancy > 1).
+
+    PYTHONPATH=src python -m benchmarks.serve [--smoke]
+
+CI runs this via the bench job's ``benchmarks.run --smoke`` harness pass
+and diffs the emitted BENCH_serve.json against the committed smoke
+baseline (docs/BENCHMARKS.md).
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import SnapshotStore, run_window_stream_batched
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+from repro.launch.serve import generate_load, run_service_load
+
+
+def run_serve_bench(n=2_000, e=20_000, snaps=8, batch_changes=600,
+                    num_clients=6, seed=7, lane_budget=8, turn_budget=None):
+    """One row of service-vs-solo accounting + throughput/latency."""
+    seq = make_evolving_sequence(n, e, snaps, batch_changes, seed=seed)
+    store = SnapshotStore(seq)
+    specs, schedule = generate_load(snaps, num_clients=num_clients, seed=seed)
+
+    # Warm-up: compiles every packed trace and builds every block the load
+    # touches; the timed run then starts with warm blocks and cold anchors
+    # (anchor state is the query-side cache under test).
+    warm, warm_clients = run_service_load(store, specs, schedule,
+                                          lane_budget=lane_budget,
+                                          turn_budget=turn_budget)
+    for client in list(warm.clients):
+        warm.unregister(client)
+    store.release(("AS",))
+
+    t0 = time.perf_counter()
+    service, clients = run_service_load(store, specs, schedule,
+                                        lane_budget=lane_budget,
+                                        turn_budget=turn_budget)
+    wall_s = time.perf_counter() - t0
+    m = service.metrics()
+    for client in list(service.clients):
+        service.unregister(client)
+
+    # Solo baseline: each client's stream runs alone with a fresh anchor
+    # cache (stream-at-a-time — what the repo did before the service).
+    solo_rebuilds = solo_hops = 0
+    bit_identical = True
+    for spec, client in zip(specs, clients):
+        store.release(("AS",))
+        solo = run_window_stream_batched(
+            store, ALL_SEMIRINGS[spec["alg"]], spec["source"],
+            windows=spec["windows"],
+            campaign_width=spec["campaign_width"])
+        solo_rebuilds += solo.anchor_rebuilds
+        solo_hops += solo.anchor_hops
+        for wnd, vals in solo.results.items():
+            if not np.array_equal(np.asarray(vals),
+                                  np.asarray(client.results[wnd])):
+                bit_identical = False
+
+    assert bit_identical, "service results diverged from solo streams"
+    assert m.anchor_rebuilds < solo_rebuilds, (
+        f"service must rebuild strictly fewer anchors than solo "
+        f"({m.anchor_rebuilds} vs {solo_rebuilds})")
+    assert m.batch_occupancy > 1, (
+        f"admission layer never coalesced: occupancy {m.batch_occupancy}")
+    assert any(len(set(rec.clients)) > 1 for rec in service.launch_log), (
+        "no launch packed lanes from more than one client")
+
+    return {
+        "clients": num_clients,
+        "admitted": m.admitted,
+        "completed": m.completed,
+        "turns": m.turns,
+        "launches": m.launches,
+        "lanes": m.lanes,
+        "padded_lanes": m.padded_lanes,
+        "occupancy_milli": int(round(1000 * m.lanes / m.launches)),
+        "rebuilds_service": m.anchor_rebuilds,
+        "hops_service": m.anchor_hops,
+        "hits_service": m.anchor_hits,
+        "rebuilds_solo": solo_rebuilds,
+        "hops_solo": solo_hops,
+        "bit_identical": bit_identical,
+        "wall_s": wall_s,
+        "queries_per_sec": m.queries_per_sec,
+        "p50_us": m.latency_us(50),
+        "p99_us": m.latency_us(99),
+    }
+
+
+SMOKE = dict(n=400, e=3_000, snaps=6, batch_changes=200, num_clients=4,
+             seed=7)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny graph (CI smoke run)")
+    args = p.parse_args(argv)
+    r = run_serve_bench(**(SMOKE if args.smoke else {}))
+    print(f"clients={r['clients']}  {r['completed']}/{r['admitted']} queries  "
+          f"turns={r['turns']}  launches={r['launches']}  "
+          f"occupancy={r['occupancy_milli'] / 1000:.2f} "
+          f"({r['padded_lanes']} padded lanes)  "
+          f"anchors {r['rebuilds_service']} (+{r['hops_service']} hops "
+          f"+{r['hits_service']} hits) vs solo {r['rebuilds_solo']} "
+          f"(+{r['hops_solo']} hops)  {r['queries_per_sec']:.1f} q/s  "
+          f"p50 {r['p50_us'] / 1e3:.1f}ms  p99 {r['p99_us'] / 1e3:.1f}ms  "
+          f"bit-identical ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,7 +16,13 @@ smoke baselines in ``benchmarks/baselines/smoke/`` and fails (exit 1) on:
   shared CI runners is noisy and baselines may come from a different
   hardware class, so the tolerance is deliberately coarse (default 10x)
   and catches only order-of-magnitude slowdowns; the exact fields are the
-  precise teeth.
+  precise teeth;
+* any ``ratio`` field (machine-dependent rates/latencies: queries/sec,
+  p50/p99 µs) outside ``--time-tol`` in EITHER direction — the class
+  covers higher-is-better and lower-is-better fields uniformly, and a
+  >tol× improvement demands a baseline refresh just like a regression
+  (the baseline should describe current reality); ratio key-set drift
+  between baseline and run fails like row drift.
 
 Stdlib-only (like scripts/check_links.py) so the CI step needs no extras:
 
@@ -64,6 +70,21 @@ def diff_bench(baseline: dict, run: dict, time_tol: float) -> "list[str]":
                     f"{name}: row {row_name} exact field {key!r}: "
                     f"run {r_exact.get(key)!r} != baseline "
                     f"{b_exact.get(key)!r}")
+        b_ratio, r_ratio = b.get("ratio", {}), r.get("ratio", {})
+        for key in sorted(b_ratio.keys() | r_ratio.keys()):
+            if key not in b_ratio or key not in r_ratio:
+                side = "run" if key not in r_ratio else "baseline"
+                problems.append(
+                    f"{name}: row {row_name} ratio field {key!r} missing "
+                    f"from {side} — {REFRESH_HINT}")
+                continue
+            bval, rval = float(b_ratio[key]), float(r_ratio[key])
+            lo, hi = sorted((bval, rval))
+            if hi > lo * time_tol:
+                problems.append(
+                    f"{name}: row {row_name} ratio field {key!r}: run "
+                    f"{rval:g} vs baseline {bval:g} is outside the "
+                    f"{time_tol}x two-sided tolerance")
         limit = b["us_per_call"] * time_tol
         if r["us_per_call"] > limit:
             problems.append(
@@ -106,9 +127,10 @@ def main(argv=None) -> int:
                    default=DEFAULT_BASELINE_DIR,
                    help=f"committed baselines (default {DEFAULT_BASELINE_DIR})")
     p.add_argument("--time-tol", type=float, default=DEFAULT_TIME_TOL,
-                   help="allowed us_per_call slowdown factor vs baseline "
-                        f"(default {DEFAULT_TIME_TOL}x; exact fields always "
-                        "compare strictly)")
+                   help="allowed us_per_call slowdown factor vs baseline, "
+                        "and the two-sided factor for ratio fields "
+                        f"(qps, p50/p99) (default {DEFAULT_TIME_TOL}x; "
+                        "exact fields always compare strictly)")
     args = p.parse_args(argv)
     problems = gate(args.run_dir, args.baseline_dir, args.time_tol)
     if problems:

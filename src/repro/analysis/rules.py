@@ -416,3 +416,55 @@ class SemiringSurface(Rule):
                 module, call,
                 'Semiring reduce= must be the literal "min" or "max" — '
                 "the engine selects its segment reduction statically")
+
+
+@register
+class ServiceSyncBoundary(Rule):
+    """G007: service modules sync only at packed-launch boundaries."""
+
+    id = "G007"
+    title = "per-query host sync in a service scheduling loop"
+    contract = (
+        "The query service's hot loop (admission -> pack -> launch, "
+        "core/service.py) must stay sync-free: the ONE host sync per "
+        "packed launch lives at the campaign boundary, inside a function "
+        "whose name ends with _launch (core/window.py::_slide_launch or a "
+        "service-side *_launch executor). A host_sync() / "
+        ".block_until_ready() / .item() anywhere else in a service module "
+        "— per admitted query, per lane, per client in a scheduling loop "
+        "— serializes the open-loop pipeline and destroys batching (it "
+        "also makes scheduling wall-clock-dependent, breaking the "
+        "machine-independent exact fields BENCH_serve gates on). Applies "
+        "to modules named service; other modules keep G004's discipline."
+    )
+
+    SYNC_METHODS = ("block_until_ready", "item")
+    SANCTIONED_SUFFIX = "_launch"
+    MODULE_NAME = "service"
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        if module.dotted_name().split(".")[-1] != self.MODULE_NAME:
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            is_sync = (
+                (isinstance(func, ast.Name) and func.id == "host_sync")
+                or (isinstance(func, ast.Attribute)
+                    and func.attr == "host_sync")
+                or (isinstance(func, ast.Attribute) and node.args == []
+                    and func.attr in self.SYNC_METHODS))
+            if is_sync and not self._at_launch_boundary(module, node):
+                label = (func.id if isinstance(func, ast.Name)
+                         else f".{func.attr}")
+                yield self.finding(
+                    module, node,
+                    f"{label} outside a *{self.SANCTIONED_SUFFIX} function "
+                    "— the service hot loop syncs once per packed launch "
+                    "at the campaign boundary, never per query")
+
+    def _at_launch_boundary(self, module: Module, node: ast.AST) -> bool:
+        return any(isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                   and fn.name.endswith(self.SANCTIONED_SUFFIX)
+                   for fn in module.function_ancestors(node))

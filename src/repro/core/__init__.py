@@ -6,6 +6,7 @@ Layers:
   directhop    CommonGraph Direct-Hop schedule (deletion-free, star plan)
   trigrid      Triangular Grid + work-sharing plans (DP-optimal / bisection)
   window       sliding-window executors (sequential + one-launch batched)
+  service      always-on multi-client query service (admission + scheduling)
 """
 
 from repro.core.snapshots import SnapshotStore
@@ -22,6 +23,12 @@ from repro.core.trigrid import (
     plan_levels,
     run_plan,
     run_plan_batched,
+)
+from repro.core.service import (
+    LaunchRecord,
+    QueryService,
+    ServiceClient,
+    ServiceMetrics,
 )
 from repro.core.window import (
     AnchorChain,
@@ -43,6 +50,10 @@ from repro.core.window import (
 __all__ = [
     "AnchorChain",
     "CampaignPlan",
+    "LaunchRecord",
+    "QueryService",
+    "ServiceClient",
+    "ServiceMetrics",
     "SnapshotStore",
     "WindowSlideRun",
     "WindowStream",

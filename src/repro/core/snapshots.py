@@ -198,6 +198,16 @@ class SnapshotStore:
         """Tags currently exempt from eviction (for tests/diagnostics)."""
         return set(self._pins)
 
+    def pin_count(self, tag: tuple) -> int:
+        """Current pin refcount of ``tag`` (0 when unpinned).
+
+        Diagnostic mirror of the refcount :meth:`pin`/:meth:`unpin`
+        maintain — the query-service soak tests audit that every pin taken
+        while streams were live has drained back to zero after
+        ``unregister``.
+        """
+        return self._pins.get(tag, 0)
+
     def release(self, kinds: "tuple[str, ...] | None" = None) -> int:
         """Drop cached device blocks; returns the number of bytes released.
 

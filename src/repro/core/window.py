@@ -279,23 +279,40 @@ def run_window_slide_batched(
 
 
 def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
-                  state: QueryState, windows: "list[Window]", anchor: Window,
-                  *, max_iters: int, gated: bool, track_parents: bool, mesh):
-    """ONE stacked launch re-converging every window from an anchor state.
+                  state: "QueryState | list[QueryState]",
+                  windows: "list[Window]", anchor: Window,
+                  *, max_iters: int, gated: bool, track_parents: bool, mesh,
+                  lane_map: "list[int] | None" = None):
+    """ONE stacked launch re-converging every window from anchor state(s).
 
-    The shared campaign body of ``run_window_slide_batched`` and the
-    streaming scheduler: the anchor state broadcasts to all window lanes
-    (masked padding lanes included — their Δ is all-sentinel, so they stay
-    inert copies and ``lane_valid`` zeroes them out of the work
-    accounting), the per-window slide Δs stack shape-bucketed, and one
+    The shared campaign body of ``run_window_slide_batched``, the streaming
+    scheduler and the query service's admission packer. ``state`` is either
+    a single :class:`QueryState` broadcast to every window lane (the
+    default, ``lane_map=None``), or — when ``lane_map`` is given — a list
+    of states with ``lane_map[k]`` naming the state that seeds window lane
+    ``k``: how ``core/service.py`` packs same-options queries for DIFFERENT
+    (semiring-compatible) sources into one launch, each lane warm-starting
+    from its own query's anchor state. Masked padding lanes ride along as
+    inert copies of the first mapped state — their Δ is all-sentinel and
+    ``lane_valid`` zeroes them out of the work accounting. The per-window
+    slide Δs stack shape-bucketed, and one
     ``incremental_additions_batched`` call runs the lanes (sharded over
     ``data`` when a mesh is given). Returns ``(FixpointResult, bucket)``.
     """
     data_extent = mesh.shape["data"] if mesh is not None else 1
     bucket = lane_bucket(len(windows), data_extent)
     stacked = store.slide_stack(windows, anchor, num_lanes=bucket)
-    values, parent = gather_lane_states(state.values[None],
-                                        state.parent[None], [0] * bucket)
+    if lane_map is None:
+        states, lane_map = [state], [0] * len(windows)
+    else:
+        states = list(state)
+        if len(lane_map) != len(windows):
+            raise ValueError(f"lane_map names {len(lane_map)} lanes for "
+                             f"{len(windows)} windows")
+    lane_map = list(lane_map) + [lane_map[0]] * (bucket - len(windows))
+    values, parent = gather_lane_states(
+        jnp.stack([s.values for s in states]),
+        jnp.stack([s.parent for s in states]), lane_map)
     lane_valid = jnp.arange(bucket) < len(windows)
     delta_blocks = (stacked,)
     values, parent, delta_blocks, lane_valid = _shard_snapshot_axis(
@@ -386,6 +403,18 @@ class WindowStream:
         """Drain and return the pending windows (executor entry point)."""
         out = self.pending()
         self.consumed = len(self.windows)
+        return out
+
+    def take_next(self, count: int) -> "list[Window]":
+        """Consume and return up to ``count`` pending windows.
+
+        The query service's bounded per-turn draw: one scheduler turn takes
+        at most a campaign's worth of windows from each stream so no client
+        monopolizes a turn (``take()`` drains everything — the
+        stream-at-a-time executor's entry point).
+        """
+        out = self.windows[self.consumed:self.consumed + count]
+        self.consumed += len(out)
         return out
 
 

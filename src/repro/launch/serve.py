@@ -1,19 +1,40 @@
-"""Serving driver: batched prefill + decode on the local mesh.
+"""Serving drivers: the evolving-graph query service + LM prefill/decode.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+Graph query service (``core/service.py``) — a deterministic seeded load
+generator simulates many concurrent clients issuing heterogeneous window
+queries (mixed semirings, sources, window extents, campaign widths) as an
+open-loop arrival schedule, and drives a :class:`QueryService` one
+scheduler turn per tick:
+
+    PYTHONPATH=src python -m repro.launch.serve --service \\
+        --nodes 400 --edges 3000 --snaps 6 --changes 200 \\
+        --clients 4 --seed 7
+
+LM serving-loop idiom (the original driver — batched prefill + decode):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \\
         --reduced --batch 4 --prompt-len 16 --decode-steps 8
+
+``benchmarks/serve.py`` reuses ``generate_load``/``run_service_load`` to
+gate the service's exact counters and throughput/latency ratios in CI.
 """
 
 from __future__ import annotations
 
 import argparse
+import random
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch, reduced_config
+from repro.core.service import QueryService
+from repro.core.snapshots import SnapshotStore
+from repro.core.window import slide_windows
 from repro.graph.engine import host_sync
+from repro.graph.generators import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
 from repro.models.transformer import (
     init_kv_cache,
     init_lm_params,
@@ -22,17 +43,106 @@ from repro.models.transformer import (
 )
 
 
-def main(argv=None):
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True)
-    p.add_argument("--reduced", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt-len", type=int, default=16)
-    p.add_argument("--decode-steps", type=int, default=8)
-    p.add_argument("--seed", type=int, default=0)
-    args = p.parse_args(argv)
+def generate_load(num_snapshots, *, num_clients=6, seed=0,
+                  algs=("sssp", "bfs"), num_sources=2, width_range=(2, 3),
+                  campaign_widths=(1, 2, 3), bursts=3):
+    """Deterministic seeded open-loop load plan for the query service.
 
-    cfg, family = reduced_config(args.arch) if args.reduced else get_arch(args.arch)
+    Draws per-client query specs from small pools (``algs`` semirings ×
+    ``num_sources`` sources — small so concurrent clients collide on query
+    keys and exercise anchor sharing), a sliding-window plan of a seeded
+    width starting at a seeded offset, and a campaign width; then cuts
+    each client's window sequence into ``bursts`` arrival chunks. Clients
+    with later window starts arrive in later bursts (arrivals track query
+    time), so service anchors stay nested under open-loop admission.
+
+    Returns ``(specs, schedule)``: ``specs`` is one dict per client
+    (``name``/``alg``/``source``/``campaign_width``/``windows``) and
+    ``schedule`` is a list of ticks, each a list of
+    ``(client_index, windows)`` arrival bursts. Everything is derived from
+    ``random.Random(seed)`` — same seed, same plan, on any machine.
+    """
+    rng = random.Random(seed)
+    specs = []
+    for idx in range(num_clients):
+        alg = algs[rng.randrange(len(algs))]
+        source = rng.randrange(num_sources)
+        width = rng.randint(*width_range)
+        start = rng.randint(0, max(0, num_snapshots - width - 2))
+        windows = slide_windows(num_snapshots, width, start=start)
+        specs.append({
+            "name": f"load-{seed}-{idx}",
+            "alg": alg,
+            "source": source,
+            "campaign_width": campaign_widths[
+                rng.randrange(len(campaign_widths))],
+            "windows": windows,
+        })
+    order = sorted(range(num_clients),
+                   key=lambda i: (specs[i]["windows"][0][0], i))
+    schedule = [[] for _ in range(bursts)]
+    for rank, idx in enumerate(order):
+        windows = specs[idx]["windows"]
+        first = min(rank * bursts // max(1, num_clients), bursts - 1)
+        cut = max(1, -(-len(windows) // (bursts - first)))
+        for chunk_no, lo in enumerate(range(0, len(windows), cut)):
+            tick = min(first + chunk_no, bursts - 1)
+            schedule[tick].append((idx, windows[lo:lo + cut]))
+    return specs, schedule
+
+
+def run_service_load(store, specs, schedule, *, lane_budget=8,
+                     turn_budget=None, mesh=None):
+    """Drive a :class:`QueryService` with an open-loop load plan.
+
+    Registers one client per spec, then per tick admits that tick's
+    arrival bursts and runs ONE scheduler turn (open loop: arrivals do
+    not wait for completions), then drains the backlog. Returns
+    ``(service, clients)`` — results/latencies live on the clients, the
+    launch log and aggregate metrics on the service.
+    """
+    service = QueryService(store, lane_budget=lane_budget,
+                           turn_budget=turn_budget, mesh=mesh)
+    clients = [service.register(ALL_SEMIRINGS[s["alg"]], s["source"],
+                                campaign_width=s["campaign_width"],
+                                name=s["name"])
+               for s in specs]
+    for tick in schedule:
+        for idx, windows in tick:
+            service.submit(clients[idx], windows)
+        service.turn()
+    service.drain()
+    return service, clients
+
+
+def _serve_graph(args):
+    """CLI path for ``--service``: seeded load over a generated sequence."""
+    store = SnapshotStore(make_evolving_sequence(
+        args.nodes, args.edges, args.snaps, args.changes, seed=args.seed))
+    specs, schedule = generate_load(args.snaps, num_clients=args.clients,
+                                    seed=args.seed)
+    t0 = time.perf_counter()
+    service, _clients = run_service_load(store, specs, schedule,
+                                         lane_budget=args.lane_budget,
+                                         turn_budget=args.turn_budget)
+    wall = time.perf_counter() - t0
+    m = service.metrics()
+    print(f"[serve] {args.clients} clients over {args.snaps} snapshots: "
+          f"{m.completed}/{m.admitted} queries in {m.turns} turns / "
+          f"{m.launches} launches ({wall:.2f}s)")
+    print(f"[serve] occupancy {m.batch_occupancy:.2f} lanes/launch "
+          f"({m.padded_lanes} padded), anchors {m.anchor_rebuilds} rebuilds "
+          f"+ {m.anchor_hops} hops + {m.anchor_hits} hits")
+    print(f"[serve] {m.queries_per_sec:.1f} queries/s, "
+          f"p50 {m.latency_us(50) / 1e3:.1f}ms, "
+          f"p99 {m.latency_us(99) / 1e3:.1f}ms")
+    return service
+
+
+def _serve_lm(args):
+    """CLI path for ``--arch``: batched LM prefill + decode loop."""
+    cfg, family = (reduced_config(args.arch) if args.reduced
+                   else get_arch(args.arch))
     if family != "lm":
         raise SystemExit(f"--arch {args.arch} is not an LM; serve.py serves LMs")
 
@@ -66,6 +176,32 @@ def main(argv=None):
     print("[serve] sampled token ids:", out[0].tolist())
     assert not bool(jnp.any(jnp.isnan(logits))), "NaN logits"
     return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--service", action="store_true",
+                   help="serve seeded graph query load (core/service.py)")
+    p.add_argument("--arch", help="LM architecture to serve (prefill+decode)")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--decode-steps", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--nodes", type=int, default=400)
+    p.add_argument("--edges", type=int, default=3000)
+    p.add_argument("--snaps", type=int, default=6)
+    p.add_argument("--changes", type=int, default=200)
+    p.add_argument("--clients", type=int, default=4)
+    p.add_argument("--lane-budget", type=int, default=8)
+    p.add_argument("--turn-budget", type=int, default=None)
+    args = p.parse_args(argv)
+
+    if args.service:
+        return _serve_graph(args)
+    if args.arch:
+        return _serve_lm(args)
+    raise SystemExit("pass --service (graph query load) or --arch <lm>")
 
 
 if __name__ == "__main__":

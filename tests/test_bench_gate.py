@@ -1,8 +1,10 @@
 """CI perf-regression gate (scripts/bench_gate.py) behaviour.
 
 Pure-JSON tests: a clean run passes, an injected synthetic regression
-(exact-field drift or a wall-time blowout) fails the gate, and structural
-drift (missing/extra benches or rows) demands a baseline refresh.
+(exact-field drift, a wall-time blowout, or a ratio field — qps/latency —
+drifting outside the two-sided tolerance) fails the gate, and structural
+drift (missing/extra benches, rows or ratio keys) demands a baseline
+refresh.
 """
 
 import copy
@@ -82,6 +84,71 @@ def test_gate_fails_exact_field_drift(tmp_path):
     assert len(problems) == 1
     assert "rebuilds_stream" in problems[0]
     assert "run 3" in problems[0] and "baseline 1" in problems[0]
+
+
+RATIO_BASE = {
+    "bench": "serve",
+    "schema_version": 2,
+    "generated_unix": 0.0,
+    "status": "ok",
+    "error": None,
+    "rows": [
+        {"name": "serve/load", "us_per_call": 100_000.0,
+         "derived": "4 clients 14 queries",
+         "exact": {"completed": 14, "rebuilds_service": 3,
+                   "bit_identical": True},
+         "ratio": {"queries_per_sec": 100.0, "p50_us": 5_000.0,
+                   "p99_us": 20_000.0}},
+    ],
+}
+
+
+def _gate_ratio(tmp_path, run_doc, time_tol=4.0):
+    base_dir, run_dir = tmp_path / "baselines", tmp_path / "run"
+    _write(base_dir, RATIO_BASE)
+    _write(run_dir, run_doc)
+    return bench_gate.gate(run_dir, base_dir, time_tol)
+
+
+def test_gate_ratio_fields_tolerate_noise_both_ways(tmp_path):
+    run = copy.deepcopy(RATIO_BASE)
+    run["rows"][0]["ratio"]["queries_per_sec"] = 350.0   # 3.5x faster
+    run["rows"][0]["ratio"]["p50_us"] = 17_000.0         # 3.4x slower
+    assert _gate_ratio(tmp_path, run) == []
+    # identical ratios self-gate even at a razor-thin tolerance
+    assert _gate_ratio(tmp_path, copy.deepcopy(RATIO_BASE),
+                       time_tol=1.0001) == []
+
+
+def test_gate_ratio_fields_fail_outside_tolerance_both_directions(tmp_path):
+    run = copy.deepcopy(RATIO_BASE)
+    run["rows"][0]["ratio"]["p99_us"] = 100_000.0        # 5x latency blowup
+    problems = _gate_ratio(tmp_path, run)
+    assert len(problems) == 1
+    assert "p99_us" in problems[0] and "two-sided" in problems[0]
+    # a 5x "improvement" fails the SAME way: baselines must track reality
+    run = copy.deepcopy(RATIO_BASE)
+    run["rows"][0]["ratio"]["queries_per_sec"] = 500.0
+    problems = _gate_ratio(tmp_path, run)
+    assert len(problems) == 1
+    assert "queries_per_sec" in problems[0] and "two-sided" in problems[0]
+
+
+def test_gate_ratio_key_set_drift_fails(tmp_path):
+    run = copy.deepcopy(RATIO_BASE)
+    del run["rows"][0]["ratio"]["p50_us"]                # run lost a field
+    run["rows"][0]["ratio"]["p90_us"] = 9_000.0          # and grew another
+    problems = _gate_ratio(tmp_path, run)
+    assert any("'p50_us' missing from run" in p for p in problems)
+    assert any("'p90_us' missing from baseline" in p for p in problems)
+
+
+def test_gate_rows_without_ratio_still_gate(tmp_path):
+    """BASE's rows carry no ratio key at all (pre-serving benches): the
+    ratio class is opt-in per row and absent keys compare clean."""
+    run = copy.deepcopy(BASE)
+    run["rows"][0]["us_per_call"] *= 2.0
+    assert _gate(tmp_path, run) == []
 
 
 def test_gate_fails_failed_bench(tmp_path):

@@ -359,6 +359,64 @@ def test_g006_out_of_scope_module_skipped(tmp_path):
                         rules=[get_rule("G006")]) == []
 
 
+# -- G007: service sync boundary ---------------------------------------------
+
+BAD_G007 = """\
+from repro.graph.engine import host_sync
+
+def schedule_turn(service, pending):
+    for query in pending:
+        res = service.launch_one(query)
+        host_sync(res.values)
+        service.latencies.append(res.wall)
+    return service
+
+def account(results):
+    return [r.edge_work.item() for r in results]
+"""
+
+GOOD_G007 = """\
+from repro.graph.engine import host_sync
+
+def _packed_launch(store, windows, states):
+    '''One batched launch; the campaign-boundary sync lives here.'''
+    res = store.run(windows, states)
+    host_sync(res.values)
+    return res
+
+def schedule_turn(service, launches):
+    return [_packed_launch(service.store, w, s) for (w, s) in launches]
+"""
+
+
+def test_g007_bad(tmp_path):
+    # a per-query host_sync in the scheduling loop + a per-result .item()
+    findings = lint_snippet(tmp_path, BAD_G007,
+                            relpath="src/repro/core/service.py")
+    assert_only_rule(findings, "G007", count=2)
+    assert all("_launch" in f.message for f in findings)
+
+
+def test_g007_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G007,
+                        relpath="src/repro/core/service.py") == []
+
+
+def test_g007_scoped_to_service_modules(tmp_path):
+    # same code elsewhere answers to G004's discipline, not G007's
+    assert lint_snippet(tmp_path, BAD_G007,
+                        relpath="src/repro/core/scheduler.py",
+                        rules=[get_rule("G007")]) == []
+
+
+def test_g007_method_call_form_flagged(tmp_path):
+    code = ("def poll(engine, res):\n"
+            "    engine.host_sync(res.values)\n")
+    findings = lint_snippet(tmp_path, code,
+                            relpath="src/repro/launch/service.py")
+    assert_only_rule(findings, "G007", count=1)
+
+
 # -- suppressions, engine plumbing, CLI --------------------------------------
 
 def test_line_suppression(tmp_path):
@@ -383,7 +441,7 @@ def test_suppression_is_per_rule(tmp_path):
 
 def test_rule_registry_complete():
     assert [r.id for r in all_rules()] == \
-        ["G001", "G002", "G003", "G004", "G005", "G006"]
+        ["G001", "G002", "G003", "G004", "G005", "G006", "G007"]
     for rule in all_rules():
         assert rule.title and rule.contract
     with pytest.raises(KeyError):

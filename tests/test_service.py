@@ -1,0 +1,336 @@
+"""Query-service contract: scheduling fairness, packing, pin hygiene.
+
+The three service satellites of the serving tier (core/service.py):
+
+* **Scheduling properties** — round-robin turns are starvation-free
+  (every client with pending work at the start of a scheduling round is
+  served within ``len(clients)`` turns), per-turn work is bounded, and
+  drained results are bit-identical to running each client's stream solo
+  — for every semiring, under property-sampled client mixes.
+* **Concurrent-eviction soak** — under a byte budget small enough to
+  force LRU evictions mid-service, every anchor-chain-pinned "AS" tag
+  survives (tag pinned AND state still cached) after every turn, and all
+  pins drain to refcount zero once the clients unregister.
+* **Batch packing** — compatible queries coalesce into one launch
+  (occupancy > 1, edge work identical to per-client solo slides at the
+  same anchor), incompatible ``(semiring, width-bucket)`` pairs never
+  share, and a lone campaign pads to a valid pow2 lane bucket.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    QueryService,
+    SnapshotStore,
+    run_window_slide_batched,
+    run_window_stream_batched,
+    slide_windows,
+)
+from repro.core.snapshots import anchor_tag
+from repro.graph import make_evolving_sequence
+from repro.graph.edgeset import lane_bucket
+from repro.graph.semiring import ALL_SEMIRINGS
+
+SNAPS = 7
+
+
+def _store(n=250, e=1800, snaps=SNAPS, changes=120, seed=13, granule=128,
+           **kw):
+    return SnapshotStore(make_evolving_sequence(n, e, snaps, changes,
+                                                seed=seed),
+                         granule=granule, **kw)
+
+
+_SHARED = None
+
+
+def _shared_store():
+    """One module-level store for the property tests (NOT a pytest fixture:
+    @given re-runs the test body per example and function-scoped fixtures
+    would trip hypothesis' health checks). Anchor-state reuse across
+    examples is harmless — values are anchor-independent by the unique-
+    fixpoint invariant, and cache hits only reduce rebuild counts."""
+    global _SHARED
+    if _SHARED is None:
+        _SHARED = _store()
+    return _SHARED
+
+
+def _solo(store, client, windows, campaign_width):
+    """The pre-service baseline: this client's stream alone, cold anchors."""
+    store.release(("AS",))
+    return run_window_stream_batched(
+        store, client.semiring, client.source, windows=windows,
+        campaign_width=campaign_width)
+
+
+# -- scheduling: fairness + bit-identity --------------------------------------
+
+def test_service_bit_identical_to_solo_every_semiring():
+    """One client per semiring, drained together through packed launches:
+    every window's values must equal the solo stream's bit-for-bit."""
+    store = _store()
+    svc = QueryService(store, lane_budget=8, turn_budget=4)
+    windows = slide_windows(SNAPS, 3)
+    clients = {name: svc.register(sr, 0, campaign_width=2, name=f"sr-{name}")
+               for name, sr in ALL_SEMIRINGS.items()}
+    for client in clients.values():
+        svc.submit(client, windows)
+    m = svc.drain()
+    assert m.completed == m.admitted == len(ALL_SEMIRINGS) * len(windows)
+    for client in clients.values():
+        svc.unregister(client)
+    for name, client in clients.items():
+        solo = _solo(store, client, windows, campaign_width=2)
+        for wnd in windows:
+            np.testing.assert_array_equal(
+                np.asarray(client.results[wnd]),
+                np.asarray(solo.results[wnd]),
+                err_msg=f"{name} diverged from solo at window {wnd}")
+    assert store.pinned_tags() == set()
+
+
+def test_shared_qkey_strictly_fewer_rebuilds_than_solo():
+    """Clients sharing a query key share anchor states: the service does
+    strictly fewer total rebuilds than each stream run solo with a cold
+    anchor cache — same values."""
+    store = _store()
+    sr = ALL_SEMIRINGS["sssp"]
+    svc = QueryService(store, lane_budget=8)
+    windows = slide_windows(SNAPS, 2)
+    clients = [svc.register(sr, 0, campaign_width=2, name=f"twin-{i}")
+               for i in range(3)]
+    for client in clients:
+        svc.submit(client, windows)
+    m = svc.drain()
+    for client in clients:
+        svc.unregister(client)
+    solo_rebuilds = 0
+    for client in clients:
+        solo = _solo(store, client, windows, campaign_width=2)
+        solo_rebuilds += solo.anchor_rebuilds
+        for wnd in windows:
+            np.testing.assert_array_equal(np.asarray(client.results[wnd]),
+                                          np.asarray(solo.results[wnd]))
+    assert m.anchor_rebuilds < solo_rebuilds
+    assert m.anchor_rebuilds + m.anchor_hops + m.anchor_hits > 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(num_clients=st.integers(2, 4),
+       turn_budget=st.sampled_from([2, 3, None]),
+       width=st.integers(1, 3),
+       start=st.integers(0, 2))
+def test_round_robin_is_starvation_free(num_clients, turn_budget, width,
+                                        start):
+    """Bounded-turn advancement: every client with pending work when a
+    scheduling round begins has completed at least one more campaign
+    within ``len(clients)`` turns — no mix of semirings, widths or turn
+    budgets starves a stream. Per-turn lane draw stays bounded, and the
+    drained results match solo bit-for-bit."""
+    store = _shared_store()
+    svc = QueryService(store, lane_budget=8, turn_budget=turn_budget)
+    names = list(ALL_SEMIRINGS)
+    windows = slide_windows(SNAPS, width, start=start)
+    clients = [svc.register(ALL_SEMIRINGS[names[i % len(names)]], i % 2,
+                            campaign_width=1 + i % 3, name=f"prop-{i}")
+               for i in range(num_clients)]
+    for client in clients:
+        svc.submit(client, windows)
+    # unbounded turns draw ≤ one campaign from EVERY ready client; bounded
+    # turns stop at the budget (the first ready client is always served,
+    # so a lone over-budget campaign_width is the other cap).
+    widths = [c.stream.campaign_width for c in clients]
+    lane_cap = (sum(widths) if turn_budget is None
+                else max(turn_budget, max(widths)))
+    while svc.pending():
+        ready = [c for c in clients if c.pending()]
+        before = {c.name: c.campaigns_done for c in ready}
+        for _ in range(len(svc.clients)):
+            if not svc.pending():
+                break
+            records = svc.turn()
+            assert sum(r.lanes for r in records) <= lane_cap
+        for client in ready:
+            assert client.campaigns_done > before[client.name], \
+                f"{client.name} starved for {len(svc.clients)} turns"
+    for client in clients:
+        assert not client.pending()
+        svc.unregister(client)
+    for client in clients:
+        solo = _solo(store, client, windows,
+                     campaign_width=client.stream.campaign_width)
+        for wnd in windows:
+            np.testing.assert_array_equal(np.asarray(client.results[wnd]),
+                                          np.asarray(solo.results[wnd]))
+
+
+# -- concurrent-eviction soak -------------------------------------------------
+
+def test_eviction_soak_pins_hold_and_drain():
+    """Bursty load under a byte budget small enough to evict mid-service:
+    chain-pinned anchor tags are never evicted (tag still pinned AND its
+    state still cached after every turn), eviction pressure really
+    happened, and every pin drains to refcount zero after unregister."""
+    store = _store(cache_bytes=48 * 1024)
+    sr = ALL_SEMIRINGS["sssp"]
+    svc = QueryService(store, lane_budget=8, turn_budget=4)
+    clients = [svc.register(sr, 0, campaign_width=2, name="soak-a"),
+               svc.register(sr, 0, campaign_width=2, name="soak-b"),
+               svc.register(ALL_SEMIRINGS["bfs"], 3, campaign_width=2,
+                            name="soak-c")]
+    windows = slide_windows(SNAPS, 2)
+    seen_tags = set()
+    for burst in range(3):
+        lo = 2 * burst
+        for client in clients:
+            svc.submit(client,
+                       [w for w in windows if lo <= w[0] < lo + 2])
+        while svc.pending():
+            svc.turn()
+            for qkey, chain in svc._chains.items():
+                for link in chain._pinned:
+                    tag = anchor_tag(qkey, link)
+                    seen_tags.add(tag)
+                    assert tag in store.pinned_tags()
+                    assert store.anchor_state_get(qkey, link) is not None
+    assert store.evictions > 0, "soak never pressured the LRU"
+    assert seen_tags, "soak never pinned an anchor link"
+    assert svc.metrics().completed == svc.metrics().admitted
+    for client in clients:
+        svc.unregister(client)
+    assert store.pinned_tags() == set()
+    assert all(store.pin_count(tag) == 0 for tag in seen_tags)
+
+
+# -- admission / batch packing ------------------------------------------------
+
+def test_packing_compatible_clients_share_one_launch():
+    """Two clients with identical launch options and width bucket (but
+    different sources, hence different anchor states) pack into ONE
+    batched launch whose edge work equals the per-client solo slides at
+    the same anchor — packing changes scheduling, never work."""
+    store = _store()
+    sr = ALL_SEMIRINGS["sssp"]
+    svc = QueryService(store, lane_budget=8)
+    a = svc.register(sr, 0, campaign_width=2, name="pack-a")
+    b = svc.register(sr, 1, campaign_width=2, name="pack-b")
+    windows = [(0, 2), (1, 3)]
+    svc.submit(a, windows)
+    svc.submit(b, windows)
+    records = svc.turn()
+    assert len(records) == 1
+    rec = records[0]
+    assert rec.lanes == 4 and rec.bucket == 4
+    assert sorted(set(rec.clients)) == ["pack-a", "pack-b"]
+    assert len(rec.anchor_events) == 2          # one per distinct qkey
+    assert svc.metrics().batch_occupancy > 1
+    solo_work = sum(
+        stat.edge_work
+        for source in (0, 1)
+        for stat in run_window_slide_batched(
+            store, sr, source, windows=windows,
+            anchor=rec.anchor).hop_stats)
+    np.testing.assert_allclose(rec.edge_work, solo_work, rtol=1e-6)
+
+
+def test_packing_never_mixes_semirings():
+    store = _store()
+    svc = QueryService(store, lane_budget=8)
+    a = svc.register(ALL_SEMIRINGS["sssp"], 0, campaign_width=2,
+                     name="mix-sssp")
+    b = svc.register(ALL_SEMIRINGS["bfs"], 0, campaign_width=2,
+                     name="mix-bfs")
+    windows = [(0, 2), (1, 3)]
+    svc.submit(a, windows)
+    svc.submit(b, windows)
+    records = svc.turn()
+    assert len(records) == 2
+    for rec in records:
+        assert len(set(rec.clients)) == 1       # no cross-semiring lanes
+    assert {rec.group[0] for rec in records} == {"sssp", "bfs"}
+
+
+def test_packing_never_mixes_width_buckets():
+    """Same query key, wildly different slide-Δ: the horizon-wide window
+    (Δ = 0 from the shared anchor) and the single-snapshot window (Δ near
+    the full graph) land in different pow2 buckets, hence different
+    launches — bucket mixing would blow up the padded trace shape."""
+    store = _store()
+    sr = ALL_SEMIRINGS["sssp"]
+    svc = QueryService(store, lane_budget=8)
+    wide = svc.register(sr, 0, campaign_width=1, name="bucket-wide")
+    narrow = svc.register(sr, 0, campaign_width=1, name="bucket-narrow")
+    svc.submit(wide, [(0, SNAPS - 1)])
+    svc.submit(narrow, [(3, 3)])
+    records = svc.turn()
+    assert len(records) == 2
+    buckets = {rec.group[1] for rec in records}
+    assert len(buckets) == 2                    # distinct width buckets
+    for rec in records:
+        assert len(set(rec.clients)) == 1
+
+
+def test_lone_campaign_pads_to_pow2_bucket():
+    store = _store()
+    svc = QueryService(store, lane_budget=8)
+    only = svc.register(ALL_SEMIRINGS["sssp"], 0, campaign_width=3,
+                        name="lone")
+    svc.submit(only, [(0, 2), (1, 3), (2, 4)])
+    rec, = svc.turn()
+    assert rec.lanes == 3
+    assert rec.bucket == lane_bucket(3) == 4
+    assert svc.metrics().padded_lanes == 1
+
+
+# -- service API contract -----------------------------------------------------
+
+def test_service_register_and_submit_validation():
+    store = _store()
+    sr = ALL_SEMIRINGS["sssp"]
+    svc = QueryService(store, lane_budget=4)
+    with pytest.raises(ValueError):             # planner mode is solo-only
+        svc.register(sr, 0, campaign_width="auto")
+    with pytest.raises(ValueError):             # campaign must fit a launch
+        svc.register(sr, 0, campaign_width=5)
+    with pytest.raises(ValueError):
+        svc.register(sr, 0, campaign_width=0)
+    client = svc.register(sr, 0, name="dup", horizon=4)
+    with pytest.raises(ValueError):             # names are unique
+        svc.register(ALL_SEMIRINGS["bfs"], 1, name="dup")
+    with pytest.raises(ValueError):             # window ends past horizon
+        svc.submit(client, [(2, 5)])
+    assert svc.submit(client, [(2, 4)]) == 1
+    with pytest.raises(ValueError):             # pending work is never lost
+        svc.unregister(client)
+    svc.drain()
+    svc.unregister(client)
+    assert svc.clients == []
+    with pytest.raises(ValueError):
+        QueryService(store, lane_budget=0)
+    with pytest.raises(ValueError):
+        QueryService(store, turn_budget=0)
+
+
+def test_idle_turn_is_uncounted_noop():
+    store = _store()
+    svc = QueryService(store)
+    assert svc.turn() == []
+    assert svc.metrics().turns == 0
+    client = svc.register(ALL_SEMIRINGS["bfs"], 0, campaign_width=1)
+    svc.submit(client, [(0, 1)])
+    assert len(svc.turn()) == 1
+    assert svc.metrics().turns == 1
+    assert svc.turn() == []                     # drained again
+    assert svc.metrics().turns == 1
+
+
+def test_drain_raises_on_backlog_overrun():
+    store = _store()
+    svc = QueryService(store, turn_budget=1)
+    client = svc.register(ALL_SEMIRINGS["bfs"], 0, campaign_width=1)
+    svc.submit(client, slide_windows(SNAPS, 2))  # 6 one-lane turns needed
+    with pytest.raises(RuntimeError):
+        svc.drain(max_turns=2)

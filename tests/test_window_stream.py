@@ -77,6 +77,20 @@ def test_window_stream_rejects_conflicting_inputs():
         run_window_stream_batched(store, sr, 0, windows=[(2, 4), (0, 3)])
 
 
+def test_window_stream_take_next_bounded_draw():
+    """take_next consumes at most ``count`` windows in order — the query
+    service's bounded per-turn draw — and composes with take()."""
+    ws = WindowStream(campaign_width=2,
+                      windows=[(0, 2), (1, 3), (2, 4), (3, 5)])
+    assert ws.take_next(0) == []
+    assert ws.take_next(2) == [(0, 2), (1, 3)]
+    assert ws.pending() == [(2, 4), (3, 5)]
+    assert ws.take_next(5) == [(2, 4), (3, 5)]   # clamps at the buffer end
+    assert ws.take_next(1) == []
+    ws.extend([(4, 6)])
+    assert ws.take() == [(4, 6)]                 # drain-all still works
+
+
 def test_window_stream_empty_pending_is_noop():
     store = _store(snaps=4)
     sr = ALL_SEMIRINGS["sssp"]
