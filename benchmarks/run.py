@@ -29,15 +29,75 @@ import time
 
 BENCH_SCHEMA_VERSION = 2
 
+# Per-bench scale tiers. Single source of truth: the bench functions below
+# read their parameters from here, and ``--list`` prints the same dicts —
+# the listing can never drift from what actually runs.
+SCALES = {
+    "table1": {
+        "smoke": dict(graphs={"RM-2k": (2_000, 20_000)}, snaps=4,
+                      changes=600),
+        "default": dict(graphs={"RM-20k": (20_000, 200_000)}, snaps=6,
+                        changes=6_000),
+        "full": dict(graphs={"RM-100k": (100_000, 1_000_000),
+                             "RM-20k": (20_000, 200_000)}, snaps=12,
+                     changes=20_000),
+    },
+    "del_vs_add": {
+        "smoke": dict(n=2_000, e=20_000, k=600, repeats=1),
+        "default": dict(n=10_000, e=100_000, k=3_000, repeats=2),
+        "full": dict(n=10_000, e=100_000, k=3_000, repeats=5),
+    },
+    "tg_sharing": {
+        "smoke": dict(n=2_000, e=20_000, batch_changes=800, windows=(4,)),
+        "default": dict(n=10_000, e=100_000, batch_changes=4_000,
+                        windows=(4, 8, 16)),
+        "full": dict(n=10_000, e=100_000, batch_changes=4_000,
+                     windows=(4, 8, 16, 32)),
+    },
+    "window_slide": {
+        "smoke": dict(widths=(2,), snaps=6),
+        "default": dict(widths=(2, 4, 8), snaps=12),
+        "full": dict(widths=(2, 4, 8, 16), snaps=24),
+    },
+    "window_stream": {
+        "smoke": dict(widths=(2, 3), snaps=6, campaign_width=2),
+        "default": dict(widths=(3, 4), snaps=12, campaign_width=3),
+        "full": dict(widths=(4, 8), snaps=24, campaign_width=4),
+    },
+    "window_overlap": {
+        "smoke": dict(n=400, e=3_000, snaps=6, batch_changes=200,
+                      num_streams=2, width=3),
+        "default": dict(snaps=12, num_streams=3, width=4),
+        "full": dict(n=20_000, e=200_000, snaps=16, batch_changes=8_000,
+                     num_streams=4, width=6),
+    },
+    "serve": {
+        "smoke": dict(n=400, e=3_000, snaps=6, batch_changes=200,
+                      num_clients=4, seed=7),
+        "default": dict(),
+        "full": dict(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
+                     num_clients=8, seed=7),
+    },
+    "kernels": {
+        "smoke": dict(n=1_000, e=12_000),
+        "default": dict(n=5_000, e=60_000),
+        "full": dict(n=5_000, e=60_000),
+    },
+    "evolve": {
+        "smoke": dict(n=2_000, e=20_000, snaps=5, changes=600, width=3),
+        "default": dict(n=10_000, e=100_000, snaps=8, changes=3_000,
+                        width=4),
+        "full": dict(n=20_000, e=200_000, snaps=10, changes=10_000,
+                     width=4),
+    },
+}
+
 
 def bench_table1(scale: str):
+    """Paper Table 1: DH/WS/DHB executor speedups vs the KS baseline."""
     from benchmarks.table1 import run_table1
-    graphs, snaps, changes = {
-        "smoke": ({"RM-2k": (2_000, 20_000)}, 4, 600),
-        "default": ({"RM-20k": (20_000, 200_000)}, 6, 6_000),
-        "full": ({"RM-100k": (100_000, 1_000_000),
-                  "RM-20k": (20_000, 200_000)}, 12, 20_000),
-    }[scale]
+    p = SCALES["table1"][scale]
+    graphs, snaps, changes = p["graphs"], p["snaps"], p["changes"]
     t0 = time.perf_counter()
     rows = run_table1(graphs, num_snapshots=snaps, batch_changes=changes)
     dt = time.perf_counter() - t0
@@ -56,13 +116,12 @@ def bench_table1(scale: str):
 
 
 def bench_del_vs_add(scale: str):
+    """Deletion-vs-addition cost asymmetry across all five semirings."""
     from benchmarks.del_vs_add import run_del_vs_add
-    n, e, k, repeats = {"smoke": (2_000, 20_000, 600, 1),
-                        "default": (10_000, 100_000, 3_000, 2),
-                        "full": (10_000, 100_000, 3_000, 5)}[scale]
+    p = SCALES["del_vs_add"][scale]
     out = []
     for alg in ("bfs", "sssp", "sswp", "ssnp", "viterbi"):
-        r = run_del_vs_add(alg=alg, n=n, e=e, k=k, repeats=repeats)
+        r = run_del_vs_add(alg=alg, **p)
         assert r["verified"], f"del_vs_add {alg} verification failed"
         out.append((f"del_vs_add/{alg}", r["t_del_s"] * 1e6,
                     f"del/add-time={r['ratio_time']:.2f}x work={r['ratio_work']:.2f}x",
@@ -72,13 +131,9 @@ def bench_del_vs_add(scale: str):
 
 
 def bench_tg_sharing(scale: str):
+    """Trigrid plan sharing: DH vs bisect vs optimal Δ-volume plans."""
     from benchmarks.tg_sharing import run_tg_sharing
-    n, e, changes, windows = {
-        "smoke": (2_000, 20_000, 800, (4,)),
-        "default": (10_000, 100_000, 4_000, (4, 8, 16)),
-        "full": (10_000, 100_000, 4_000, (4, 8, 16, 32)),
-    }[scale]
-    rows = run_tg_sharing(n=n, e=e, batch_changes=changes, windows=windows)
+    rows = run_tg_sharing(**SCALES["tg_sharing"][scale])
     out = []
     for r in rows:
         out.append((f"tg_sharing/window{r['window']}",
@@ -100,7 +155,8 @@ def bench_kernels(scale: str):
     from repro.kernels import edge_relax
     from repro.kernels.edge_relax.ref import edge_relax_ref
 
-    n, e = (1_000, 12_000) if scale == "smoke" else (5_000, 60_000)
+    p = SCALES["kernels"][scale]
+    n, e = p["n"], p["e"]
     key = jax.random.PRNGKey(0)
     vals = jax.random.uniform(key, (n,)) * 10
     src = jax.random.randint(jax.random.PRNGKey(1), (e,), 0, n)
@@ -121,11 +177,9 @@ def bench_kernels(scale: str):
 
 
 def bench_window_slide(scale: str):
+    """Sliding-window batched launches vs sequential slides."""
     from benchmarks.window_slide import run_window_slide_bench
-    widths, snaps = {"smoke": ((2,), 6),
-                     "default": ((2, 4, 8), 12),
-                     "full": ((2, 4, 8, 16), 24)}[scale]
-    rows = run_window_slide_bench(widths=widths, snaps=snaps)
+    rows = run_window_slide_bench(**SCALES["window_slide"][scale])
     # equivalence is asserted inside run_window_slide_bench (bit-compare per
     # window); a mismatch raises there and the harness reports FAILED
     out = []
@@ -140,12 +194,9 @@ def bench_window_slide(scale: str):
 
 
 def bench_window_stream(scale: str):
+    """Streaming slide campaigns vs cold per-campaign rebuilds."""
     from benchmarks.window_stream import run_window_stream_bench
-    widths, snaps, cw = {"smoke": ((2, 3), 6, 2),
-                         "default": ((3, 4), 12, 3),
-                         "full": ((4, 8), 24, 4)}[scale]
-    rows = run_window_stream_bench(widths=widths, snaps=snaps,
-                                   campaign_width=cw)
+    rows = run_window_stream_bench(**SCALES["window_stream"][scale])
     # bit-identity vs cold campaigns AND strictly-fewer-rebuilds are
     # asserted inside run_window_stream_bench; a failure raises there
     out = []
@@ -161,20 +212,18 @@ def bench_window_stream(scale: str):
                      "rebuilds_cold": int(r["rebuilds_cold"]),
                      "added_edges": int(r["added_edges"]),
                      "anchor_delta_edges": int(r["anchor_delta_edges"]),
-                     "edge_work": int(round(r["stream_work"]))}))
+                     "edge_work": int(round(r["stream_work"])),
+                     "edge_work_delta_seed":
+                         int(round(r["edge_work_delta_seed"])),
+                     "stable_fraction_milli":
+                         int(r["stable_fraction_milli"])}))
     return out
 
 
 def bench_window_overlap(scale: str):
+    """Overlapping streams sharing one AnchorChain vs running solo."""
     from benchmarks.window_stream import run_window_overlap_bench
-    params = {
-        "smoke": dict(n=400, e=3_000, snaps=6, batch_changes=200,
-                      num_streams=2, width=3),
-        "default": dict(snaps=12, num_streams=3, width=4),
-        "full": dict(n=20_000, e=200_000, snaps=16, batch_changes=8_000,
-                     num_streams=4, width=6),
-    }[scale]
-    rows = run_window_overlap_bench(**params)
+    rows = run_window_overlap_bench(**SCALES["window_overlap"][scale])
     # bit-identity shared-vs-solo AND strictly-fewer-total-rebuilds are
     # asserted inside run_window_overlap_bench; a failure raises there
     out = []
@@ -202,9 +251,11 @@ def bench_window_overlap(scale: str):
 
 
 def bench_evolve(scale: str):
-    """End-to-end wall time of every executor mode the evolve driver runs,
-    verified against from-scratch fixpoints — the committed seed baseline
-    (benchmarks/baselines/BENCH_evolve.json) that future PRs diff against.
+    """End-to-end wall time of every evolve-driver executor mode.
+
+    Each mode is verified against from-scratch fixpoints — the committed
+    seed baseline (benchmarks/baselines/BENCH_evolve.json) that future
+    PRs diff against.
     """
     import numpy as np
 
@@ -223,11 +274,9 @@ def bench_evolve(scale: str):
     from repro.graph import make_evolving_sequence, run_to_fixpoint
     from repro.graph.semiring import ALL_SEMIRINGS
 
-    n, e, snaps, changes, width = {
-        "smoke": (2_000, 20_000, 5, 600, 3),
-        "default": (10_000, 100_000, 8, 3_000, 4),
-        "full": (20_000, 200_000, 10, 10_000, 4),
-    }[scale]
+    p = SCALES["evolve"][scale]
+    n, e, snaps, changes, width = (p["n"], p["e"], p["snaps"], p["changes"],
+                                   p["width"])
     sr = ALL_SEMIRINGS["sssp"]
     store = SnapshotStore(make_evolving_sequence(n, e, snaps, changes, seed=0))
     plan = optimal_plan(store)
@@ -284,15 +333,9 @@ def bench_evolve(scale: str):
 
 
 def bench_serve(scale: str):
+    """Query-service load: throughput, latency, anchor sharing vs solo."""
     from benchmarks.serve import run_serve_bench
-    params = {
-        "smoke": dict(n=400, e=3_000, snaps=6, batch_changes=200,
-                      num_clients=4, seed=7),
-        "default": dict(),
-        "full": dict(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
-                     num_clients=8, seed=7),
-    }[scale]
-    r = run_serve_bench(**params)
+    r = run_serve_bench(**SCALES["serve"][scale])
     # bit-identity vs solo streams, strictly-fewer-rebuilds and
     # occupancy > 1 are asserted inside run_serve_bench
     return [("serve/load", r["wall_s"] * 1e6,
@@ -315,6 +358,7 @@ def bench_serve(scale: str):
               "hits_service": int(r["hits_service"]),
               "rebuilds_solo": int(r["rebuilds_solo"]),
               "hops_solo": int(r["hops_solo"]),
+              "stable_fraction_milli": int(r["stable_fraction_milli"]),
               "bit_identical": bool(r["bit_identical"])},
              {"queries_per_sec": round(float(r["queries_per_sec"]), 2),
               "p50_us": round(float(r["p50_us"]), 1),
@@ -379,6 +423,23 @@ def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
     return path
 
 
+def list_benches(out=print) -> None:
+    """Print every bench with its one-line purpose and scale tiers.
+
+    Reads ``SCALES`` — the same registry the bench functions run from —
+    so the listing is exact by construction (docs/BENCHMARKS.md embeds
+    the workflow, not this output).
+    """
+    for name, fn in BENCHES.items():
+        doc = (fn.__doc__ or "").strip().splitlines()[0]
+        out(f"{name}: {doc}")
+        for tier in ("smoke", "default", "full"):
+            params = SCALES[name][tier]
+            rendered = ", ".join(f"{k}={v}" for k, v in params.items()) \
+                or "(module defaults)"
+            out(f"  {tier:8s} {rendered}")
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     scale_group = p.add_mutually_exclusive_group()
@@ -390,7 +451,13 @@ def main(argv=None) -> int:
     p.add_argument("--only", default=None, choices=list(BENCHES))
     p.add_argument("--out-dir", default=".", type=pathlib.Path,
                    help="directory for the BENCH_<bench>.json files")
+    p.add_argument("--list", action="store_true",
+                   help="list bench names with their smoke/default/full "
+                        "tier parameters and exit (runs nothing)")
     args = p.parse_args(argv)
+    if args.list:
+        list_benches()
+        return 0
     scale = "full" if args.full else "smoke" if args.smoke else "default"
     ensure_out_dir(args.out_dir)
 

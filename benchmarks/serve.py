@@ -91,6 +91,9 @@ def run_serve_bench(n=2_000, e=20_000, snaps=8, batch_changes=600,
         f"admission layer never coalesced: occupancy {m.batch_occupancy}")
     assert any(len(set(rec.clients)) > 1 for rec in service.launch_log), (
         "no launch packed lanes from more than one client")
+    assert m.stable_fraction_milli > 0, (
+        f"service must observe a positive stable fraction "
+        f"(got {m.stable_fraction_milli}‰)")
 
     return {
         "clients": num_clients,
@@ -106,6 +109,9 @@ def run_serve_bench(n=2_000, e=20_000, snaps=8, batch_changes=600,
         "hits_service": m.anchor_hits,
         "rebuilds_solo": solo_rebuilds,
         "hops_solo": solo_hops,
+        # stable-vertex analysis: fraction of seeded vertex-lanes already at
+        # their fixpoint (exact ‰ integer — count-based, seed-deterministic)
+        "stable_fraction_milli": m.stable_fraction_milli,
         "bit_identical": bit_identical,
         "wall_s": wall_s,
         "queries_per_sec": m.queries_per_sec,
@@ -130,7 +136,8 @@ def main(argv=None) -> int:
           f"({r['padded_lanes']} padded lanes)  "
           f"anchors {r['rebuilds_service']} (+{r['hops_service']} hops "
           f"+{r['hits_service']} hits) vs solo {r['rebuilds_solo']} "
-          f"(+{r['hops_solo']} hops)  {r['queries_per_sec']:.1f} q/s  "
+          f"(+{r['hops_solo']} hops)  stable {r['stable_fraction_milli']}‰  "
+          f"{r['queries_per_sec']:.1f} q/s  "
           f"p50 {r['p50_us'] / 1e3:.1f}ms  p99 {r['p99_us'] / 1e3:.1f}ms  "
           f"bit-identical ✓")
     return 0

@@ -65,6 +65,15 @@ def run_window_stream_bench(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
         store.release(("AS",))
         stream = run_window_stream_batched(store, sr, source, windows=windows,
                                            campaign_width=campaign_width)
+        # Full-Δ-seeded rerun (seed="delta"): same windows, cold anchors —
+        # the strictly-more-work baseline the stability analysis is gated
+        # against (bit-identity is covered by the stream-vs-cold compare
+        # below plus tests/test_stability.py).
+        store.release(("AS",))
+        delta_seeded = run_window_stream_batched(store, sr, source,
+                                                 windows=windows,
+                                                 campaign_width=campaign_width,
+                                                 seed="delta")
         # Timed cold baseline: one slide launch per campaign with the SAME
         # anchors; run_window_slide_batched never consults the anchor cache,
         # so every campaign pays a from-scratch anchor fixpoint.
@@ -83,6 +92,15 @@ def run_window_stream_bench(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
             f"anchors ({stream.anchor_rebuilds} vs {rebuilds_cold})")
         stream_work = (sum(s.edge_work for s in stream.anchor_stats)
                        + sum(s.edge_work for s in stream.hop_stats))
+        delta_work = (sum(s.edge_work for s in delta_seeded.anchor_stats)
+                      + sum(s.edge_work for s in delta_seeded.hop_stats))
+        assert stream_work < delta_work, (
+            f"width {width}: instability seeding must do strictly less "
+            f"frontier-masked work than full-Δ seeding "
+            f"({stream_work} vs {delta_work})")
+        assert stream.stable_milli > 0, (
+            f"width {width}: measured stable fraction must be positive "
+            f"(got {stream.stable_milli}‰)")
         cold_work = sum(r.base_stats.edge_work
                         + sum(s.edge_work for s in r.hop_stats)
                         for r in cold)
@@ -102,6 +120,10 @@ def run_window_stream_bench(n=10_000, e=100_000, snaps=12, batch_changes=4_000,
             "anchor_delta_edges": stream.anchor_delta_edges,
             "stream_work": stream_work,
             "cold_work": cold_work,
+            # stable-vertex analysis: measured stable fraction (exact ‰
+            # integer) and the full-Δ-seeded work the pruning beat
+            "stable_fraction_milli": stream.stable_milli,
+            "edge_work_delta_seed": delta_work,
         })
     return rows
 
@@ -230,7 +252,9 @@ def main(argv=None) -> int:
               f"vs cold {r['rebuilds_cold']}  "
               f"stream {r['stream_s']:.3f}s  cold {r['cold_s']:.3f}s  "
               f"({r['stream_speedup']:.2f}x, work {r['stream_work']:,.0f} vs "
-              f"{r['cold_work']:,.0f})  bit-identical ✓")
+              f"{r['cold_work']:,.0f} cold / {r['edge_work_delta_seed']:,.0f} "
+              f"full-Δ, stable {r['stable_fraction_milli']}‰)  "
+              f"bit-identical ✓")
     return 0
 
 

@@ -22,7 +22,12 @@ smoke baselines in ``benchmarks/baselines/smoke/`` and fails (exit 1) on:
   covers higher-is-better and lower-is-better fields uniformly, and a
   >tol× improvement demands a baseline refresh just like a regression
   (the baseline should describe current reality); ratio key-set drift
-  between baseline and run fails like row drift.
+  between baseline and run fails like row drift;
+* a missing run/baseline directory, or a ``BENCH_*.json`` on either side
+  that cannot be read or parsed — each such file fails with its own
+  named problem (file, parse position, which side) instead of an
+  unhandled traceback, so a truncated artifact upload or a
+  half-committed baseline is diagnosable from the gate output alone.
 
 Stdlib-only (like scripts/check_links.py) so the CI step needs no extras:
 
@@ -40,6 +45,33 @@ DEFAULT_TIME_TOL = 10.0
 
 REFRESH_HINT = ("refresh the committed baselines: PYTHONPATH=src python -m "
                 "benchmarks.run --smoke --out-dir benchmarks/baselines/smoke")
+RERUN_HINT = ("re-emit the run artifacts: PYTHONPATH=src python -m "
+              "benchmarks.run --smoke --out-dir <run-dir>")
+
+
+def load_bench_json(path: pathlib.Path, side: str,
+                    hint: str) -> "tuple[dict | None, str | None]":
+    """Parse one BENCH_*.json: ``(doc, None)``, or ``(None, problem)``.
+
+    Every failure mode — unreadable file, malformed JSON, non-object
+    top level — comes back as ONE named problem string (file, side,
+    parse position, remedy) so ``gate`` reports it alongside the diff
+    problems instead of dying with a traceback on the first bad file.
+    """
+    try:
+        text = path.read_text()
+    except OSError as exc:
+        return None, (f"{path.name}: unreadable {side} file "
+                      f"({exc}) — {hint}")
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as exc:
+        return None, (f"{path.name}: {side} is not valid JSON (line "
+                      f"{exc.lineno} col {exc.colno}: {exc.msg}) — {hint}")
+    if not isinstance(doc, dict):
+        return None, (f"{path.name}: {side} top level must be a JSON "
+                      f"object, got {type(doc).__name__} — {hint}")
+    return doc, None
 
 
 def diff_bench(baseline: dict, run: dict, time_tol: float) -> "list[str]":
@@ -98,19 +130,31 @@ def gate(run_dir: pathlib.Path, baseline_dir: pathlib.Path,
          time_tol: float) -> "list[str]":
     """Regressions across all benches; empty list = gate passes."""
     problems: "list[str]" = []
+    if not baseline_dir.is_dir():
+        return [f"baseline directory {baseline_dir} does not exist — "
+                f"{REFRESH_HINT}"]
     baselines = sorted(baseline_dir.glob("BENCH_*.json"))
     if not baselines:
         return [f"no BENCH_*.json baselines under {baseline_dir} — "
                 f"{REFRESH_HINT}"]
+    if not run_dir.is_dir():
+        return [f"run directory {run_dir} does not exist — {RERUN_HINT}"]
     for base_path in baselines:
         run_path = run_dir / base_path.name
         if not run_path.exists():
             problems.append(f"{base_path.name}: baseline exists but the run "
                             f"emitted no {run_path}")
             continue
-        problems.extend(diff_bench(json.loads(base_path.read_text()),
-                                   json.loads(run_path.read_text()),
-                                   time_tol))
+        baseline, problem = load_bench_json(base_path, "baseline",
+                                            REFRESH_HINT)
+        if problem:
+            problems.append(problem)
+            continue
+        run, problem = load_bench_json(run_path, "run", RERUN_HINT)
+        if problem:
+            problems.append(problem)
+            continue
+        problems.extend(diff_bench(baseline, run, time_tol))
     known = {p.name for p in baselines}
     for run_path in sorted(run_dir.glob("BENCH_*.json")):
         if run_path.name not in known:

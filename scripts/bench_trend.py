@@ -1,0 +1,164 @@
+"""Nightly perf trend: diff the two most recent bench artifact sets.
+
+Compares the BENCH_*.json files of tonight's nightly harness run against
+the previous nightly's downloaded artifacts and prints a per-row drift
+report — wall-time movement, ratio-field movement (queries/sec, p50/p99)
+and any exact-field change. Unlike scripts/bench_gate.py this is a TREND
+tool, not a gate: the two runs come from different commits, so exact
+drift usually means "a PR changed behaviour between the nightlies" and
+is reported with the field-by-field diff rather than a refresh hint.
+
+Directories are searched recursively (``rglob``) because
+``gh run download`` unpacks each artifact into its own subdirectory.
+Exit code is 1 when any exact field drifted (the CI step runs with
+``continue-on-error: true``, so this only colors the step, never the
+job), 0 otherwise — including when either side is missing files, which
+happens legitimately on the first nightly or after artifact expiry.
+
+    python scripts/bench_trend.py --prev bench-prev --curr bench-nightly
+    python scripts/bench_trend.py --prev a --curr b --move-tol 1.25
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_MOVE_TOL = 1.5  # report wall/ratio moves beyond this factor
+
+
+def find_bench_files(root: pathlib.Path) -> "dict[str, pathlib.Path]":
+    """Map ``BENCH_<name>.json`` filename -> path, searching recursively.
+
+    ``gh run download`` nests artifacts one directory per artifact name,
+    so a flat glob would find nothing. Duplicate filenames (two artifacts
+    carrying the same bench) keep the lexically first path, noted on
+    stdout so a surprising diff is traceable to the file actually read.
+    """
+    found: "dict[str, pathlib.Path]" = {}
+    for path in sorted(root.rglob("BENCH_*.json")):
+        if path.name in found:
+            print(f"note: duplicate {path.name} under {root} — "
+                  f"using {found[path.name]}, ignoring {path}")
+            continue
+        found[path.name] = path
+    return found
+
+
+def load(path: pathlib.Path) -> "dict | None":
+    """Parse one artifact; unreadable/invalid files are noted and skipped
+    (a truncated upload must not kill the whole trend report)."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"note: skipping unreadable {path}: {exc}")
+        return None
+    return doc if isinstance(doc, dict) else None
+
+
+def _fmt_move(prev: float, curr: float) -> str:
+    if prev == curr:
+        return "unchanged"
+    if prev == 0:
+        return f"{prev:g} -> {curr:g}"
+    return f"{prev:g} -> {curr:g} ({curr / prev:.2f}x)"
+
+
+def trend_rows(name: str, prev: dict, curr: dict,
+               move_tol: float) -> "tuple[list[str], int]":
+    """(report lines, exact-drift count) for one bench's two documents."""
+    lines: "list[str]" = []
+    exact_drifts = 0
+    for side, doc in (("prev", prev), ("curr", curr)):
+        if doc.get("status") != "ok":
+            lines.append(f"{name}: {side} status={doc.get('status')!r} "
+                         f"error={doc.get('error')!r} — rows not comparable")
+            return lines, 0
+    prev_rows = {r["name"]: r for r in prev.get("rows", [])}
+    curr_rows = {r["name"]: r for r in curr.get("rows", [])}
+    for gone in sorted(prev_rows.keys() - curr_rows.keys()):
+        lines.append(f"{name}: row {gone} disappeared since last nightly")
+    for new in sorted(curr_rows.keys() - prev_rows.keys()):
+        lines.append(f"{name}: row {new} is new since last nightly")
+    for row_name in sorted(prev_rows.keys() & curr_rows.keys()):
+        p, c = prev_rows[row_name], curr_rows[row_name]
+        p_exact, c_exact = p.get("exact", {}), c.get("exact", {})
+        for key in sorted(p_exact.keys() | c_exact.keys()):
+            if p_exact.get(key) != c_exact.get(key):
+                exact_drifts += 1
+                lines.append(
+                    f"{name}: row {row_name} exact {key!r}: "
+                    f"{p_exact.get(key)!r} -> {c_exact.get(key)!r}")
+        moved: "list[str]" = []
+        pw, cw = float(p["us_per_call"]), float(c["us_per_call"])
+        if pw > 0 and max(pw, cw) > min(pw, cw) * move_tol:
+            moved.append(f"wall {_fmt_move(pw, cw)}")
+        p_ratio, c_ratio = p.get("ratio", {}), c.get("ratio", {})
+        for key in sorted(p_ratio.keys() & c_ratio.keys()):
+            pv, cv = float(p_ratio[key]), float(c_ratio[key])
+            if pv > 0 and max(pv, cv) > min(pv, cv) * move_tol:
+                moved.append(f"{key} {_fmt_move(pv, cv)}")
+        if moved:
+            lines.append(f"{name}: row {row_name} moved >"
+                         f"{move_tol:g}x: " + "; ".join(moved))
+    return lines, exact_drifts
+
+
+def trend(prev_dir: pathlib.Path, curr_dir: pathlib.Path,
+          move_tol: float) -> int:
+    """Print the trend report; return the number of exact-field drifts."""
+    prev_files = find_bench_files(prev_dir)
+    curr_files = find_bench_files(curr_dir)
+    print(f"bench trend: {len(prev_files)} prev file(s) under {prev_dir}, "
+          f"{len(curr_files)} curr file(s) under {curr_dir}")
+    if not prev_files or not curr_files:
+        print("bench trend: nothing to compare (first nightly, or "
+              "artifacts expired) — skipping")
+        return 0
+    for gone in sorted(prev_files.keys() - curr_files.keys()):
+        print(f"  {gone}: present last nightly, absent tonight")
+    for new in sorted(curr_files.keys() - prev_files.keys()):
+        print(f"  {new}: new tonight (no previous artifact)")
+    exact_drifts = 0
+    reported = 0
+    for fname in sorted(prev_files.keys() & curr_files.keys()):
+        prev, curr = load(prev_files[fname]), load(curr_files[fname])
+        if prev is None or curr is None:
+            continue
+        lines, drifts = trend_rows(prev.get("bench", fname), prev, curr,
+                                   move_tol)
+        exact_drifts += drifts
+        reported += len(lines)
+        for line in lines:
+            print(f"  {line}")
+    if not reported:
+        print(f"bench trend: steady — no exact drift, no wall/ratio move "
+              f"beyond {move_tol:g}x")
+    elif exact_drifts:
+        print(f"bench trend: {exact_drifts} exact field(s) drifted since "
+              "the last nightly (behaviour changed between the runs)")
+    return exact_drifts
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--prev", type=pathlib.Path, required=True,
+                   help="previous nightly's artifact directory "
+                        "(searched recursively)")
+    p.add_argument("--curr", type=pathlib.Path, required=True,
+                   help="tonight's artifact directory "
+                        "(searched recursively)")
+    p.add_argument("--move-tol", type=float, default=DEFAULT_MOVE_TOL,
+                   help="report wall-time/ratio moves beyond this factor "
+                        f"in either direction (default {DEFAULT_MOVE_TOL}x)")
+    args = p.parse_args(argv)
+    for side, d in (("--prev", args.prev), ("--curr", args.curr)):
+        if not d.is_dir():
+            print(f"bench trend: {side} directory {d} does not exist — "
+                  "skipping (nothing to compare)")
+            return 0
+    return 1 if trend(args.prev, args.curr, args.move_tol) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,9 @@
-"""Rules G001–G005: the launch/cache/sync/semiring invariants.
+"""Rules G001–G005, G007–G008: the launch/cache/sync/seeding invariants.
 
 Each rule encodes one contract the executors' module docstrings state in
-prose (core/trigrid.py, core/snapshots.py, core/window.py,
-graph/semiring.py) — see docs/ANALYSIS.md for the catalog with real
-before/after examples. Rules are static and name-based: they resolve
+prose (core/trigrid.py, core/snapshots.py, core/window.py, core/service.py,
+graph/semiring.py, graph/stability.py) — see docs/ANALYSIS.md for the
+catalog with real before/after examples. Rules are static and name-based: they resolve
 callees by their rightmost name within one module (no cross-module import
 resolution), which is exactly the granularity the contracts are written
 at. Escape hatch for a deliberate exception:
@@ -468,3 +468,44 @@ class ServiceSyncBoundary(Rule):
         return any(isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
                    and fn.name.endswith(self.SANCTIONED_SUFFIX)
                    for fn in module.function_ancestors(node))
+
+
+@register
+class StabilitySeedDiscipline(Rule):
+    """G008: seed frontiers come from graph/stability.py, not raw Δ sweeps."""
+
+    id = "G008"
+    title = "raw relax_sweep seeding outside the stability layer"
+    contract = (
+        "Frontier seeding is the stable-vertex analysis' monopoly "
+        "(graph/stability.py::seed_state): it applies the semiring's "
+        "monotone-improvement test so stable vertices never enter the seed "
+        "frontier, and it is the one place the instability/delta mode "
+        "switch and stable_fraction accounting live. A direct relax_sweep "
+        "call anywhere else re-derives a seed frontier from the raw Δ edge "
+        "endpoint set — bypassing the pruning, the mode switch and the "
+        "accounting at once. Only the stability module itself and the "
+        "engine's fixpoint iteration body (_fixpoint, where relax_sweep is "
+        "the per-sweep step, not a seeding) may call it."
+    )
+
+    SWEEP = "relax_sweep"
+    STABILITY_MODULE = "repro.graph.stability"
+    ENGINE_MODULE = "repro.graph.engine"
+    ENGINE_SANCTIONED = "_fixpoint"
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        dotted = module.dotted_name()
+        if dotted == self.STABILITY_MODULE:
+            return
+        for node in calls_named(module.tree, self.SWEEP):
+            if dotted == self.ENGINE_MODULE and any(
+                    isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and fn.name == self.ENGINE_SANCTIONED
+                    for fn in module.function_ancestors(node)):
+                continue
+            yield self.finding(
+                module, node,
+                f"{self.SWEEP} called outside graph/stability.py — seed "
+                "frontiers must come from repro.graph.stability.seed_state "
+                "(the stable-vertex analysis), not a raw Δ edge sweep")

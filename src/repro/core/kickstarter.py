@@ -38,10 +38,10 @@ from repro.graph.engine import (
     FixpointResult,
     _fixpoint_jit,
     host_sync,
-    relax_sweep,
     run_to_fixpoint,
 )
 from repro.graph.semiring import Semiring
+from repro.graph.stability import seed_state
 
 
 def _ceil_log2(n: int) -> int:
@@ -75,14 +75,16 @@ def _trim_and_reconverge(semiring: Semiring, num_nodes: int, max_iters: int,
     parent = jnp.where(tainted, NO_PARENT, parent)
 
     # 4. seed additions, then re-converge over the next snapshot's edges.
-    all_on = jnp.ones((num_nodes,), bool)
-    values, parent, improved, seed_work = relax_sweep(
-        semiring, num_nodes, values, parent, all_on, (add_block,))
-    frontier = improved | ~tainted
-    res = _fixpoint_jit(semiring, num_nodes, max_iters, values, parent,
-                        frontier, next_blocks)
+    # mode="delta" (full-Δ seeding): this is the published baseline the
+    # paper compares against, so it must NOT inherit the stable-vertex
+    # pruning — its measured cost stays that of real KickStarter.
+    seeded = seed_state(semiring, num_nodes, values, parent, (add_block,),
+                        mode="delta")
+    frontier = seeded.frontier | ~tainted
+    res = _fixpoint_jit(semiring, num_nodes, max_iters, seeded.values,
+                        seeded.parent, frontier, next_blocks)
     return FixpointResult(res.values, res.parent, res.iterations + 1,
-                          res.edge_work + seed_work), jnp.sum(tainted)
+                          res.edge_work + seeded.seed_work), jnp.sum(tainted)
 
 
 @dataclasses.dataclass

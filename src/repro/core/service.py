@@ -161,6 +161,11 @@ class ServiceMetrics:
     anchor_hops: int = 0
     anchor_hits: int = 0
     edge_work: float = 0.0
+    # stability accounting over every packed launch's valid lanes:
+    # seeded_vertex_lanes = Σ lanes·num_nodes, unstable_vertex_lanes =
+    # Σ per-lane |instability seed set| (graph/stability.py)
+    seeded_vertex_lanes: int = 0
+    unstable_vertex_lanes: int = 0
     wall_s: float = 0.0
     latencies_s: "list[float]" = dataclasses.field(default_factory=list)
 
@@ -168,6 +173,21 @@ class ServiceMetrics:
     def batch_occupancy(self) -> float:
         """Mean valid lanes per packed launch (> 1 ⇔ packing coalesced)."""
         return self.lanes / self.launches if self.launches else 0.0
+
+    @property
+    def stable_fraction_milli(self) -> int:
+        """Measured stable fraction (‰) over all served window lanes.
+
+        The share of vertex-lanes the stability analysis kept out of the
+        seed frontier, aggregated service-wide — deterministic for a fixed
+        load, so BENCH_serve gates it as an exact field. 0 before any
+        launch.
+        """
+        if not self.seeded_vertex_lanes:
+            return 0
+        return round(1000 * (self.seeded_vertex_lanes
+                             - self.unstable_vertex_lanes)
+                     / self.seeded_vertex_lanes)
 
     @property
     def queries_per_sec(self) -> float:
@@ -210,11 +230,15 @@ class QueryService:
     larger than it split, campaigns never split). ``turn_budget`` caps
     lanes drawn per scheduler turn (None = unbounded): smaller values
     trade batch occupancy for per-turn latency; at least one ready client
-    is always served per turn regardless.
+    is always served per turn regardless. ``seed`` picks the
+    frontier-seeding mode every packed launch and anchor hop inherits
+    (``"instability"`` — the stable-vertex analysis, default — or
+    ``"delta"``, the full-Δ baseline; values bit-identical either way).
     """
 
     def __init__(self, store: SnapshotStore, *, lane_budget: int = 8,
-                 turn_budget: "int | None" = None, mesh=None):
+                 turn_budget: "int | None" = None, mesh=None,
+                 seed: str = "instability"):
         if lane_budget < 1:
             raise ValueError(f"lane_budget must be >= 1, got {lane_budget}")
         if turn_budget is not None and turn_budget < 1:
@@ -223,6 +247,7 @@ class QueryService:
         self.lane_budget = lane_budget
         self.turn_budget = turn_budget
         self.mesh = mesh
+        self.seed = seed
         self.clients: "list[ServiceClient]" = []
         self.launch_log: "list[LaunchRecord]" = []
         self._metrics = ServiceMetrics()
@@ -449,7 +474,7 @@ class QueryService:
             view, state, stats, event, _delta = _acquire_anchor_state(
                 self.store, qkey, anchor, client.semiring, client.source,
                 client.max_iters, client.gated, client.cg_split,
-                client.track_parents)
+                client.track_parents, seed=self.seed)
             self._chains[qkey].observe(anchor)  # pin before later puts evict
             state_idx[qkey] = len(states)
             states.append(state)
@@ -476,7 +501,7 @@ class QueryService:
             self.store, lead.semiring, anchor_view, states, windows, anchor,
             max_iters=lead.max_iters, gated=lead.gated,
             track_parents=lead.track_parents, mesh=self.mesh,
-            lane_map=lane_map)
+            lane_map=lane_map, seed=self.seed)
         done = time.perf_counter()
         for lane, (wnd, client) in enumerate(zip(windows, owners)):
             client.results[wnd] = res.values[lane]
@@ -492,6 +517,9 @@ class QueryService:
         self._metrics.padded_lanes += bucket - len(windows)
         self._metrics.completed += len(windows)
         self._metrics.edge_work += work
+        self._metrics.seeded_vertex_lanes += len(windows) * self.store.num_nodes
+        self._metrics.unstable_vertex_lanes += int(
+            jnp.sum(res.unstable[:len(windows)]))
         record = LaunchRecord(
             group=group, anchor=anchor, windows=windows,
             clients=[c.name for c in owners], lanes=len(windows),

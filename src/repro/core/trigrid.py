@@ -70,6 +70,7 @@ from repro.graph.engine import (
     run_to_fixpoint,
 )
 from repro.graph.semiring import Semiring
+from repro.graph.stability import stable_fraction_milli
 
 Window = tuple[int, int]
 
@@ -200,6 +201,10 @@ class WorkSharingRun:
     # for lanes-per-device / padding reporting. Empty on sequential runs.
     lane_layout: "list[tuple[int, int]]" = dataclasses.field(
         default_factory=list)
+    # measured stable fraction (‰) over all plan hops: the share of
+    # vertex-lanes the stability analysis kept out of the seed frontier
+    # (graph/stability.py; padding lanes excluded)
+    stable_milli: int = 0
 
 
 def _anchor_view(store, window, cg_split):
@@ -239,6 +244,7 @@ def run_plan(
     gated: bool = False,
     cg_split: int = 1,
     track_parents: bool = False,
+    seed: str = "instability",
 ) -> WorkSharingRun:
     """Execute a TG plan (DFS; each hop = addition-only incremental update)."""
     t_all = time.perf_counter()
@@ -248,6 +254,7 @@ def run_plan(
 
     results: dict[int, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
+    unstable_counts: list[int] = []
 
     def dfs(node: PlanNode, view: EdgeView, values, parent):
         if not node.children:
@@ -259,17 +266,20 @@ def run_plan(
             child_view = view.extended(delta)          # shared immutable blocks
             res = incremental_additions(child_view, delta, semiring,
                                         values, parent, max_iters, gated=gated,
-                                        track_parents=track_parents)
+                                        track_parents=track_parents, seed=seed)
             host_sync(res.values)
             hop_stats.append(StreamStats(time.perf_counter() - t0,
                                          float(res.edge_work),
                                          int(res.iterations)))
+            unstable_counts.append(int(res.unstable))
             dfs(child, child_view, res.values, res.parent)
 
     dfs(plan, apex_view, base.values, base.parent)
     return WorkSharingRun(results, base_stats, hop_stats,
                           time.perf_counter() - t_all,
-                          plan_added_edges(store, plan))
+                          plan_added_edges(store, plan),
+                          stable_milli=stable_fraction_milli(
+                              unstable_counts, store.num_nodes))
 
 
 def plan_levels(plan: PlanNode) -> list[list[tuple[int, PlanNode]]]:
@@ -323,6 +333,7 @@ def run_plan_batched(
     cg_split: int = 1,
     track_parents: bool = False,
     mesh=None,
+    seed: str = "instability",
 ) -> WorkSharingRun:
     """Execute a TG plan level-synchronously: one batched launch per depth.
 
@@ -360,6 +371,7 @@ def run_plan_batched(
     results: dict[int, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
     lane_layout: list[tuple[int, int]] = []
+    unstable_counts: list = []
     if not plan.children:
         results[plan.window[0]] = base.values
 
@@ -397,11 +409,12 @@ def run_plan_batched(
             n, semiring, values, parent,
             shared_blocks=tuple(apex_view.blocks), delta_blocks=delta_blocks,
             max_iters=max_iters, track_parents=track_parents, gated=gated,
-            seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
+            seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid, seed=seed)
         host_sync(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(jnp.sum(res.edge_work)),
                                      int(jnp.max(res.iterations))))
+        unstable_counts.extend(int(u) for u in res.unstable[:lanes])
         for lane, (_, c) in enumerate(level):
             if not c.children:
                 results[c.window[0]] = res.values[lane]
@@ -410,4 +423,6 @@ def run_plan_batched(
 
     return WorkSharingRun(results, base_stats, hop_stats,
                           time.perf_counter() - t_all,
-                          plan_added_edges(store, plan), lane_layout)
+                          plan_added_edges(store, plan), lane_layout,
+                          stable_milli=stable_fraction_milli(
+                              unstable_counts, store.num_nodes))

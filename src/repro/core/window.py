@@ -88,6 +88,7 @@ import itertools
 import time
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.kickstarter import StreamStats
 from repro.core.snapshots import SnapshotStore, anchor_tag, tightest_cover
@@ -107,6 +108,7 @@ from repro.graph.engine import (
     incremental_additions_batched,
 )
 from repro.graph.semiring import Semiring
+from repro.graph.stability import stable_fraction_milli
 
 Window = tuple[int, int]
 
@@ -158,6 +160,10 @@ class WindowSlideRun:
     # (valid lanes, lane_bucket) of the batched launch; empty when sequential
     lane_layout: "list[tuple[int, int]]" = dataclasses.field(
         default_factory=list)
+    # measured stable fraction (‰) over all window hops: the share of
+    # vertex-lanes the stability analysis kept out of the seed frontier
+    # (graph/stability.py; padding lanes excluded)
+    stable_milli: int = 0
 
 
 def _slide_added_edges(store: SnapshotStore, windows: list[Window],
@@ -198,12 +204,14 @@ def run_window_slide(
     gated: bool = False,
     cg_split: int = 1,
     track_parents: bool = False,
+    seed: str = "instability",
 ) -> WindowSlideRun:
     """Sequential window slide: one anchor fixpoint, then per-window hops.
 
     The baseline the batched executor is measured (and bit-compared)
     against: each window re-executes ``incremental_additions`` from the
-    anchor state with that window's slide Δ.
+    anchor state with that window's slide Δ, seeded per the stable-vertex
+    analysis (``seed="delta"`` restores full-Δ seeding; values identical).
     """
     t_all = time.perf_counter()
     windows, anchor = _resolve(store, width, windows, step, start, anchor)
@@ -213,21 +221,25 @@ def run_window_slide(
 
     results: dict[Window, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
+    unstable_counts: list[int] = []
     for wnd in windows:
         t0 = time.perf_counter()
         delta = store.slide_block(wnd, anchor)
         view = anchor_view.extended(delta)       # shared immutable blocks
         res = incremental_additions(view, delta, semiring, base.values,
                                     base.parent, max_iters, gated=gated,
-                                    track_parents=track_parents)
+                                    track_parents=track_parents, seed=seed)
         host_sync(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(res.edge_work),
                                      int(res.iterations)))
+        unstable_counts.append(int(res.unstable))
         results[wnd] = res.values
     return WindowSlideRun(results, anchor, base_stats, hop_stats,
                           time.perf_counter() - t_all,
-                          _slide_added_edges(store, windows, anchor))
+                          _slide_added_edges(store, windows, anchor),
+                          stable_milli=stable_fraction_milli(
+                              unstable_counts, store.num_nodes))
 
 
 def run_window_slide_batched(
@@ -245,6 +257,7 @@ def run_window_slide_batched(
     cg_split: int = 1,
     track_parents: bool = False,
     mesh=None,
+    seed: str = "instability",
 ) -> WindowSlideRun:
     """Batched window slide: every slide hop as a lane of ONE stacked launch.
 
@@ -267,7 +280,8 @@ def run_window_slide_batched(
     res, bucket = _slide_launch(store, semiring, anchor_view,
                                 extract_state(base), windows, anchor,
                                 max_iters=max_iters, gated=gated,
-                                track_parents=track_parents, mesh=mesh)
+                                track_parents=track_parents, mesh=mesh,
+                                seed=seed)
     hop_stats = [StreamStats(time.perf_counter() - t0,
                              float(jnp.sum(res.edge_work)),
                              int(jnp.max(res.iterations)))]
@@ -275,14 +289,18 @@ def run_window_slide_batched(
     return WindowSlideRun(results, anchor, base_stats, hop_stats,
                           time.perf_counter() - t_all,
                           _slide_added_edges(store, windows, anchor),
-                          [(len(windows), bucket)])
+                          [(len(windows), bucket)],
+                          stable_milli=stable_fraction_milli(
+                              np.asarray(res.unstable)[:len(windows)],
+                              store.num_nodes))
 
 
 def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
                   state: "QueryState | list[QueryState]",
                   windows: "list[Window]", anchor: Window,
                   *, max_iters: int, gated: bool, track_parents: bool, mesh,
-                  lane_map: "list[int] | None" = None):
+                  lane_map: "list[int] | None" = None,
+                  seed: str = "instability"):
     """ONE stacked launch re-converging every window from anchor state(s).
 
     The shared campaign body of ``run_window_slide_batched``, the streaming
@@ -321,7 +339,7 @@ def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
         store.num_nodes, semiring, values, parent,
         shared_blocks=tuple(anchor_view.blocks), delta_blocks=delta_blocks,
         max_iters=max_iters, track_parents=track_parents, gated=gated,
-        seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid)
+        seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid, seed=seed)
     host_sync(res.values)
     return res, bucket
 
@@ -469,6 +487,18 @@ class CampaignPlan:
       slide Δ (the stacked buffer's lane width). This is device volume,
       not streamed edges — it is what makes width 5 more expensive than
       width 4 even when the exact Δ sums agree.
+
+    ``stable_milli`` records the instability discount the model was priced
+    under: the stable-vertex analysis (graph/stability.py) lets each seed
+    sweep skip Δ edges leaving unreached vertices, so every
+    ``hop_added_edges`` atom is scaled by ``(1000 − stable_milli) / 1000``
+    before entering the slide/pad/anchor-hop terms. The default 0 prices
+    raw Δ volume (no discount); a caller with a measured fraction from a
+    prior run (e.g. the warm-up stream in ``launch/evolve.py``) passes it
+    in so the plan prices the work the executors will actually do. The
+    discount is applied at the ATOM level in both ``campaign_volume`` and
+    the ``optimal_campaigns`` DP, so DP cost equals partition price and
+    auto ≤ fixed-width holds for any ``stable_milli``.
     """
 
     campaigns: "list[list[Window]]"
@@ -478,6 +508,8 @@ class CampaignPlan:
     slide_edges: int
     anchor_edges: int
     padding_edges: int
+    # instability discount (‰ stable) the volumes above were priced under
+    stable_milli: int = 0
 
     @property
     def widths(self) -> "list[int]":
@@ -490,9 +522,25 @@ class CampaignPlan:
         return self.slide_edges + self.anchor_edges + self.padding_edges
 
 
+def _instability_volume(edges: int, stable_milli: int) -> int:
+    """One Δ-volume atom discounted by the modeled stable fraction (‰).
+
+    The stability analysis keeps ``stable_milli``/1000 of vertex-lanes out
+    of the seed frontier, so a hop's effective Δ volume shrinks to
+    ``edges · (1000 − stable_milli) / 1000`` (floor division — integers
+    keep the DP/partition-price equality exact). ``stable_milli=0`` is the
+    identity, so undiscounted plans are bit-stable.
+    """
+    if not 0 <= stable_milli <= 1000:
+        raise ValueError(f"stable_milli must be in [0, 1000], "
+                         f"got {stable_milli!r}")
+    return edges * (1000 - stable_milli) // 1000
+
+
 def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
                     *, data_extent: int = 1,
-                    lane_budget: "int | None" = None) -> CampaignPlan:
+                    lane_budget: "int | None" = None,
+                    stable_milli: int = 0) -> CampaignPlan:
     """Evaluate a campaign partition under the planner's Δ-volume model.
 
     Anchors each campaign exactly as ``run_window_stream_batched`` does —
@@ -500,7 +548,10 @@ def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
     :class:`CampaignPlan` field docs. Works for any partition of any
     advancing window sequence, which is what lets tests (and the planner
     itself) compare ``optimal_campaigns`` against every fixed-width
-    chunking on equal terms.
+    chunking on equal terms. ``stable_milli`` applies the instability
+    discount (:func:`_instability_volume`) to every hop atom — slide Δs,
+    masked-lane padding and incremental anchor hops; the first anchor's
+    from-scratch rebuild is NOT a Δ-seeded sweep and prices undiscounted.
     """
     if not campaigns or not all(campaigns):
         raise ValueError("campaigns must be a non-empty list of non-empty "
@@ -511,22 +562,25 @@ def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
     anchors = [(c[0][0], stream_hi) for c in campaigns]
     slide = padding = 0
     for campaign, anchor in zip(campaigns, anchors):
-        deltas = [hop_added_edges(store, anchor, w) for w in campaign]
+        deltas = [_instability_volume(hop_added_edges(store, anchor, w),
+                                      stable_milli) for w in campaign]
         slide += sum(deltas)
         bucket = lane_bucket(len(campaign), data_extent)
         padding += (bucket - len(campaign)) * max(deltas)
     anchor_edges = store.window_size(*anchors[0]) + sum(
-        hop_added_edges(store, prev, cur)
+        _instability_volume(hop_added_edges(store, prev, cur), stable_milli)
         for prev, cur in zip(anchors, anchors[1:]))
     return CampaignPlan(campaigns, anchors,
                         lane_budget if lane_budget is not None
                         else max(map(len, campaigns)),
-                        data_extent, slide, anchor_edges, padding)
+                        data_extent, slide, anchor_edges, padding,
+                        stable_milli=stable_milli)
 
 
 def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
                       lane_budget: int = 8,
-                      data_extent: int = 1) -> CampaignPlan:
+                      data_extent: int = 1,
+                      stable_milli: int = 0) -> CampaignPlan:
     """Δ-volume-minimal campaign partition of an advancing window sequence.
 
     The streaming analogue of ``optimal_plan``'s interval DP over grid
@@ -556,7 +610,11 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
 
     Guarantee (property-tested): the returned plan's ``total_edges`` is
     ≤ that of EVERY fixed-width chunking with width ≤ ``lane_budget``,
-    fixed widths being points in the DP's search space.
+    fixed widths being points in the DP's search space. ``stable_milli``
+    applies the instability discount to every hop atom exactly as
+    ``campaign_volume`` does (same :func:`_instability_volume` call per
+    atom), so the DP's cost equals the partition's price and the auto ≤
+    fixed-width guarantee holds under any discount.
     """
     windows = [tuple(w) for w in windows]
     if not windows:
@@ -576,12 +634,14 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
     for j in range(n - 1, -1, -1):
         slide, widest = 0, 0
         for i in range(j + 1, min(j + lane_budget, n) + 1):
-            delta = window_size[i - 1] - anchor_size[j]
+            delta = _instability_volume(window_size[i - 1] - anchor_size[j],
+                                        stable_milli)
             slide += delta
             widest = max(widest, delta)
             lanes = i - j
             pad = (lane_bucket(lanes, data_extent) - lanes) * widest
-            hop = anchor_size[i] - anchor_size[j] if i < n else 0
+            hop = (_instability_volume(anchor_size[i] - anchor_size[j],
+                                       stable_milli) if i < n else 0)
             cost = slide + pad + hop + f[i]
             if cost < f[j]:
                 f[j], cut[j] = cost, i
@@ -591,7 +651,8 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
         campaigns.append(windows[j:cut[j]])
         j = cut[j]
     return campaign_volume(store, campaigns, data_extent=data_extent,
-                           lane_budget=lane_budget)
+                           lane_budget=lane_budget,
+                           stable_milli=stable_milli)
 
 
 def _stream_qkey(semiring: Semiring, source: int, max_iters: int, gated: bool,
@@ -626,6 +687,10 @@ class WindowStreamRun:
     lane_layout: "list[tuple[int, int]]"
     # the CampaignPlan that chose the partition (campaign_width="auto" only)
     plan: "CampaignPlan | None" = None
+    # measured stable fraction (‰) over all window hops in the run: the
+    # share of vertex-lanes the stability analysis kept out of the seed
+    # frontier (graph/stability.py; padding lanes excluded)
+    stable_milli: int = 0
 
     @property
     def anchor_rebuilds(self) -> int:
@@ -645,7 +710,8 @@ class WindowStreamRun:
 
 def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
                           semiring: Semiring, source: int, max_iters: int,
-                          gated: bool, cg_split: int, track_parents: bool):
+                          gated: bool, cg_split: int, track_parents: bool,
+                          seed: str = "instability"):
     """Anchor state via cache hit, incremental hop, or from-scratch rebuild.
 
     Returns ``(anchor_view, state, stats, event, delta_edges)`` —
@@ -669,7 +735,8 @@ def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
         view = _anchor_view(store, cover_window, cg_split).extended(delta)
         res = incremental_additions(view, delta, semiring, cover_state.values,
                                     cover_state.parent, max_iters,
-                                    gated=gated, track_parents=track_parents)
+                                    gated=gated, track_parents=track_parents,
+                                    seed=seed)
         host_sync(res.values)
         state = store.anchor_state_put(qkey, anchor, extract_state(res))
         delta_edges = (store.window_size(*anchor)
@@ -869,6 +936,8 @@ def run_window_stream_batched(
     cg_split: int = 1,
     track_parents: bool = False,
     mesh=None,
+    seed: str = "instability",
+    stable_milli: int = 0,
 ) -> WindowStreamRun:
     """Streaming slide campaigns with incremental anchor maintenance.
 
@@ -910,6 +979,15 @@ def run_window_stream_batched(
     Results are bit-identical to running ``run_window_slide_batched`` cold
     per campaign with the same anchors; the streamed path just performs
     strictly fewer anchor rebuilds (1 + evictions vs one per campaign).
+
+    ``seed`` picks the frontier-seeding mode for every hop in the run
+    (``"instability"`` — the stable-vertex analysis, default — or
+    ``"delta"``, the full-Δ baseline; values bit-identical either way).
+    ``stable_milli`` is the PLANNER HINT: the modeled stable fraction (‰)
+    ``optimal_campaigns`` discounts its Δ-volume atoms by in auto mode
+    (e.g. a fraction measured by a prior run over the same load); the
+    run's own measured fraction comes back on the result's
+    ``stable_milli`` field regardless.
     """
     t_all = time.perf_counter()
     if stream is not None:
@@ -948,7 +1026,8 @@ def run_window_stream_batched(
     if campaign_width == CAMPAIGN_AUTO:
         plan = optimal_campaigns(
             store, windows, lane_budget=lane_budget,
-            data_extent=mesh.shape["data"] if mesh is not None else 1)
+            data_extent=mesh.shape["data"] if mesh is not None else 1,
+            stable_milli=stable_milli)
         campaigns = plan.campaigns
     else:
         campaigns = stream_campaigns(windows, campaign_width)
@@ -962,11 +1041,12 @@ def run_window_stream_batched(
     lane_layout: "list[tuple[int, int]]" = []
     added_edges = 0
     anchor_delta_edges = 0
+    unstable_counts: "list[np.ndarray]" = []
     for campaign in campaigns:
         anchor = (min(i for i, _ in campaign), stream_hi)
         anchor_view, state, stats, event, delta_edges = _acquire_anchor_state(
             store, qkey, anchor, semiring, source, max_iters, gated, cg_split,
-            track_parents)
+            track_parents, seed=seed)
         if chain is not None:
             chain.observe(anchor)   # pin before any later put can evict it
         anchors.append(anchor)
@@ -977,11 +1057,12 @@ def run_window_stream_batched(
         res, bucket = _slide_launch(store, semiring, anchor_view, state,
                                     campaign, anchor, max_iters=max_iters,
                                     gated=gated, track_parents=track_parents,
-                                    mesh=mesh)
+                                    mesh=mesh, seed=seed)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(jnp.sum(res.edge_work)),
                                      int(jnp.max(res.iterations))))
         lane_layout.append((len(campaign), bucket))
+        unstable_counts.append(np.asarray(res.unstable)[:len(campaign)])
         for lane, wnd in enumerate(campaign):
             results[wnd] = res.values[lane]
         added_edges += _slide_added_edges(store, campaign, anchor)
@@ -990,4 +1071,7 @@ def run_window_stream_batched(
     return WindowStreamRun(results, campaigns, anchors, anchor_events,
                            anchor_stats, hop_stats,
                            time.perf_counter() - t_all, added_edges,
-                           anchor_delta_edges, lane_layout, plan)
+                           anchor_delta_edges, lane_layout, plan,
+                           stable_milli=stable_fraction_milli(
+                               np.concatenate(unstable_counts),
+                               store.num_nodes))

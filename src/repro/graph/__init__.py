@@ -35,6 +35,13 @@ from repro.graph.engine import (
 )
 from repro.graph.generators import rmat_edges, EvolvingSequence, make_evolving_sequence
 from repro.graph.sampler import NeighborSampler, SampledSubgraph
+from repro.graph.stability import (
+    SEED_MODES,
+    SeededState,
+    seed_mask,
+    seed_state,
+    stable_fraction_milli,
+)
 
 __all__ = [
     "Semiring",
@@ -63,4 +70,9 @@ __all__ = [
     "make_evolving_sequence",
     "NeighborSampler",
     "SampledSubgraph",
+    "SEED_MODES",
+    "SeededState",
+    "seed_mask",
+    "seed_state",
+    "stable_fraction_milli",
 ]

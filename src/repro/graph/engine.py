@@ -45,6 +45,10 @@ class FixpointResult(NamedTuple):
     parent: jnp.ndarray      # int32  [num_nodes], -1 = none/source
     iterations: jnp.ndarray  # int32 scalar — sweeps executed
     edge_work: jnp.ndarray   # float32 scalar — frontier-masked edge relaxations
+    # int32 scalar (per-lane when batched): |instability seed set| from the
+    # stability analysis (graph/stability.py), None for from-scratch runs
+    # where no Δ seeding happened. Identical under both seed modes.
+    unstable: jnp.ndarray | None = None
 
 
 class QueryState(NamedTuple):
@@ -257,24 +261,29 @@ def incremental_additions(
     max_iters: int = 10_000,
     gated: bool = False,
     track_parents: bool = True,
+    seed: str = "instability",
 ) -> FixpointResult:
     """Addition-only incremental update (the cheap KickStarter direction).
 
     ``view`` must already include the added blocks; ``added`` is just the new
-    edges. Seeds the frontier by relaxing only the new edges, then
-    re-converges over the full view with frontier masking. Monotonicity
-    guarantees the exact from-scratch fixpoint is reached.
+    edges. Seeds the frontier from the stable-vertex analysis
+    (graph/stability.py): the Δ edges are relaxed once against the anchor
+    state and only the vertices they strictly improved — the instability
+    set — enter the fixpoint frontier. ``seed="delta"`` keeps the full-Δ
+    baseline seeding (identical values/parents, more seed work; see
+    ``stability.seed_state``). Monotonicity guarantees the exact
+    from-scratch fixpoint is reached either way.
     """
+    from repro.graph.stability import seed_state
     n = view.num_nodes
     add_blocks = (added,) if isinstance(added, EdgeBlock) else tuple(added.blocks)
-    all_on = jnp.ones((n,), bool)
-    values2, parent2, improved, seed_work = relax_sweep(
-        semiring, n, values, parent, all_on, add_blocks,
-        track_parents=track_parents)
-    res = _fixpoint_jit(semiring, n, max_iters, values2, parent2, improved,
-                        tuple(view.blocks), gated, track_parents)
+    seeded = seed_state(semiring, n, values, parent, add_blocks,
+                        mode=seed, track_parents=track_parents)
+    res = _fixpoint_jit(semiring, n, max_iters, seeded.values, seeded.parent,
+                        seeded.frontier, tuple(view.blocks), gated,
+                        track_parents)
     return FixpointResult(res.values, res.parent, res.iterations + 1,
-                          res.edge_work + seed_work)
+                          res.edge_work + seeded.seed_work, seeded.unstable)
 
 
 # ---------------------------------------------------------------------------
@@ -302,7 +311,7 @@ def gather_lane_states(values: jnp.ndarray, parent: jnp.ndarray,
 def batched_incremental(semiring, num_nodes, max_iters,
                         values, parent, shared_blocks, delta_blocks,
                         track_parents=True, gated=False, seed_blocks=None,
-                        lane_valid=None):
+                        lane_valid=None, seed="instability"):
     """vmapped incremental additions (unjitted; launch/dryrun jits with shardings).
 
     values/parent: [S, N]; shared_blocks: tuple of EdgeBlock (broadcast);
@@ -315,44 +324,55 @@ def batched_incremental(semiring, num_nodes, max_iters,
     sequential executor's per-hop seeding (and its edge-work accounting)
     exactly.
 
+    ``seed`` selects the per-lane seeding mode (graph/stability.py):
+    ``"instability"`` masks each lane's seed sweep to its reached vertices
+    — the stable-vertex analysis — and ``"delta"`` is the full-Δ baseline.
+    Bit-identical results either way; the lane's ``unstable`` count and
+    ``edge_work`` are what differ.
+
     ``lane_valid`` ([S] bool, default: all valid): marks padding lanes the
     executors appended to reach a ``lane_bucket`` (pow2, mesh-divisible)
     lane count. A masked lane carries an all-sentinel Δ and a copied anchor
     state, so its values stay inert by construction; the mask additionally
-    zeroes its ``iterations``/``edge_work`` so work accounting stays
-    bit-equal to the sequential executors regardless of padding.
+    zeroes its ``iterations``/``edge_work``/``unstable`` so work and
+    stability accounting stay bit-equal to the sequential executors
+    regardless of padding.
     """
-    seed = delta_blocks if seed_blocks is None else seed_blocks
+    from repro.graph.stability import seed_state
+    seeds = delta_blocks if seed_blocks is None else seed_blocks
 
     def one(values, parent, delta_blocks, seed_blocks):
-        all_on = jnp.ones((num_nodes,), bool)
-        v2, p2, improved, seed_work = relax_sweep(
-            semiring, num_nodes, values, parent, all_on, seed_blocks,
-            track_parents=track_parents)
-        res = _fixpoint(semiring, num_nodes, max_iters, v2, p2, improved,
+        seeded = seed_state(semiring, num_nodes, values, parent, seed_blocks,
+                            mode=seed, track_parents=track_parents)
+        res = _fixpoint(semiring, num_nodes, max_iters, seeded.values,
+                        seeded.parent, seeded.frontier,
                         shared_blocks + delta_blocks, gated=gated,
                         track_parents=track_parents)
         return FixpointResult(res.values, res.parent, res.iterations + 1,
-                              res.edge_work + seed_work)
+                              res.edge_work + seeded.seed_work,
+                              seeded.unstable)
 
     res = jax.vmap(one, in_axes=(0, 0, 0, 0))(values, parent,
-                                              delta_blocks, seed)
+                                              delta_blocks, seeds)
     if lane_valid is None:
         return res
     return FixpointResult(
         res.values, res.parent,
         jnp.where(lane_valid, res.iterations, 0),
-        jnp.where(lane_valid, res.edge_work, jnp.float32(0)))
+        jnp.where(lane_valid, res.edge_work, jnp.float32(0)),
+        jnp.where(lane_valid, res.unstable, 0))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8, 11))
 def _batched_incremental_jit(semiring, num_nodes, max_iters,
                              values, parent, shared_blocks, delta_blocks,
                              track_parents=True, gated=False,
-                             seed_blocks=None, lane_valid=None):
+                             seed_blocks=None, lane_valid=None,
+                             seed="instability"):
     return batched_incremental(semiring, num_nodes, max_iters,
                                values, parent, shared_blocks, delta_blocks,
-                               track_parents, gated, seed_blocks, lane_valid)
+                               track_parents, gated, seed_blocks, lane_valid,
+                               seed)
 
 
 def incremental_additions_batched(
@@ -367,9 +387,10 @@ def incremental_additions_batched(
     gated: bool = False,
     seed_blocks: Blocks | None = None,
     lane_valid: jnp.ndarray | None = None,  # [S] bool; False = padding lane
+    seed: str = "instability",
 ) -> FixpointResult:
     return _batched_incremental_jit(semiring, num_nodes, max_iters,
                                     values, parent, tuple(shared_blocks),
                                     tuple(delta_blocks), track_parents, gated,
                                     None if seed_blocks is None
-                                    else tuple(seed_blocks), lane_valid)
+                                    else tuple(seed_blocks), lane_valid, seed)

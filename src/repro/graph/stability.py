@@ -1,0 +1,135 @@
+"""Stable-vertex analysis: seed incremental sweeps from the instability set.
+
+The follow-up paper to CommonGraph ("Analysis of Stable Vertex Values:
+Fast Query Evaluation Over An Evolving Graph", PAPERS.md) observes that
+most converged vertex values are *stable* across a window: no Δ edge can
+improve them, so an incremental sweep that starts from the full Δ edge
+endpoint set wastes its seed relaxation on edges that provably cannot
+destabilize anything. This module is the one place that analysis lives —
+every executor's frontier seeding routes through :func:`seed_state`
+(graphlint rule G008 forbids raw ``relax_sweep`` seeding elsewhere).
+
+The instability test is the semiring's own monotone-improvement predicate:
+a Δ edge ``(u, v, w)`` destabilizes ``v`` iff ``combine(values[u], w)``
+strictly beats ``values[v]``. Two facts make the pruned seed exact for
+every registered semiring (tests/test_stability.py property-checks all
+five):
+
+* **Unreached sources are inert.** ``combine(identity, w) == identity``
+  for all five semirings (∞+w=∞ for BFS/SSSP, min(-∞,w)=-∞ for SSWP,
+  max(∞,w)=∞ for SSNP, 0·w=0 for Viterbi), and ``identity`` never
+  strictly beats any value. Masking the seed sweep's frontier to *reached*
+  sources (:func:`seed_mask`) therefore changes no candidate the segment
+  reduction can win with — values, parents and the improved set are
+  bit-identical to full-Δ seeding; only the frontier-masked ``edge_work``
+  drops (strictly, whenever some Δ edge leaves an unreached vertex).
+* **Propagation self-prunes.** The seed sweep's ``improved`` output *is*
+  the instability region's boundary: the subsequent frontier-masked
+  fixpoint only ever expands through vertices that strictly improved, so
+  the dependence-region walk stops exactly where no improvement is
+  possible. Stable vertices are never visited again.
+
+Both seeding modes converge to the same unique monotone rounded fixpoint;
+``mode="delta"`` (the faithful full-Δ baseline every prior PR shipped) is
+kept for baselines and property tests, and is what the KickStarter
+comparison baseline uses so its measured cost stays that of the published
+algorithm.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.semiring import Semiring
+
+SEED_MODES = ("instability", "delta")
+
+
+class SeededState(NamedTuple):
+    """The stability analysis' verdict on one Δ batch against one state.
+
+    ``values``/``parent`` are the anchor state with the Δ edges' direct
+    improvements applied; ``frontier`` is the instability seed set (the
+    vertices a Δ edge strictly improved — identical under both seeding
+    modes); ``seed_work`` is the frontier-masked edge work the seed sweep
+    spent; ``unstable`` is ``sum(frontier)`` as an int32 scalar (per-lane
+    under vmap), the numerator of :func:`stable_fraction_milli`.
+    """
+
+    values: jnp.ndarray    # float32 [num_nodes]
+    parent: jnp.ndarray    # int32  [num_nodes]
+    frontier: jnp.ndarray  # bool   [num_nodes] — the instability seed set
+    seed_work: jnp.ndarray  # float32 scalar
+    unstable: jnp.ndarray  # int32 scalar — |frontier|
+
+
+def seed_mask(semiring: Semiring, values: jnp.ndarray) -> jnp.ndarray:
+    """Reached-vertex mask: the sources whose Δ edges can destabilize.
+
+    A vertex still at ``semiring.identity`` is unreached; every candidate
+    its out-edges produce is ``combine(identity, w) == identity``, which
+    never strictly beats an incumbent value under a monotone semiring. The
+    instability analysis therefore masks the seed sweep to this set — the
+    Δ edges it drops are exactly the ones the monotone-improvement test
+    ``combine(values[u], w) beats values[v]`` already rejects.
+    """
+    return values != jnp.float32(semiring.identity)
+
+
+def seed_state(
+    semiring: Semiring,
+    num_nodes: int,
+    values: jnp.ndarray,
+    parent: jnp.ndarray,
+    seed_blocks,
+    *,
+    mode: str = "instability",
+    track_parents: bool = True,
+) -> SeededState:
+    """Seed an incremental launch from the stable-vertex analysis.
+
+    Relaxes ``seed_blocks`` (the Δ edges) against the anchor state once,
+    with the seed frontier chosen by ``mode``: ``"instability"`` masks to
+    :func:`seed_mask` (reached sources only — the pruned dependence-region
+    boundary), ``"delta"`` uses the all-on frontier (full-Δ baseline).
+    Returns a :class:`SeededState` whose ``frontier`` seeds the fixpoint;
+    both modes yield bit-identical values/parents/frontier (unique
+    monotone fixpoint; see the module docstring), differing only in
+    ``seed_work``. Safe under jit/vmap — ``mode`` must be static.
+    """
+    if mode not in SEED_MODES:
+        raise ValueError(
+            f"unknown seed mode {mode!r}: expected one of {SEED_MODES}")
+    from repro.graph.engine import relax_sweep
+    if mode == "instability":
+        frontier = seed_mask(semiring, values)
+    else:
+        frontier = jnp.ones((num_nodes,), bool)
+    new_values, new_parent, improved, seed_work = relax_sweep(
+        semiring, num_nodes, values, parent, frontier, tuple(seed_blocks),
+        track_parents=track_parents)
+    return SeededState(new_values, new_parent, improved, seed_work,
+                       jnp.sum(improved, dtype=jnp.int32))
+
+
+def stable_fraction_milli(unstable, num_nodes: int, lane_valid=None) -> int:
+    """Aggregate per-lane instability counts into a stable fraction (‰).
+
+    ``unstable`` is one int count per lane (a scalar, an array, or any
+    sequence of them — e.g. the ``FixpointResult.unstable`` of several
+    launches concatenated); ``lane_valid`` masks out padding lanes so the
+    pow2 lane buckets never dilute the measurement. Returns
+    ``round(1000 * stable_vertex_lanes / total_vertex_lanes)`` as an int —
+    a machine-independent integer, which is what lets the benches gate it
+    as a schema-v2 exact field. Returns 0 when no valid lanes exist.
+    """
+    counts = np.asarray(unstable, dtype=np.int64).reshape(-1)
+    if lane_valid is not None:
+        counts = counts[np.asarray(lane_valid, dtype=bool).reshape(-1)]
+    total = int(counts.size) * int(num_nodes)
+    if total == 0:
+        return 0
+    return round(1000 * (total - int(counts.sum())) / total)

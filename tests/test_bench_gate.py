@@ -17,6 +17,11 @@ _spec = importlib.util.spec_from_file_location("bench_gate", SCRIPT)
 bench_gate = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(bench_gate)
 
+TREND = pathlib.Path(__file__).parent.parent / "scripts" / "bench_trend.py"
+_tspec = importlib.util.spec_from_file_location("bench_trend", TREND)
+bench_trend = importlib.util.module_from_spec(_tspec)
+_tspec.loader.exec_module(bench_trend)
+
 
 BASE = {
     "bench": "window_stream",
@@ -179,9 +184,68 @@ def test_gate_fails_missing_and_extra_bench_files(tmp_path):
                for p in problems)
 
 
-def test_gate_fails_empty_baseline_dir(tmp_path):
+def test_gate_fails_missing_baseline_dir(tmp_path):
     problems = bench_gate.gate(tmp_path / "run", tmp_path / "nothing", 4.0)
+    assert len(problems) == 1
+    assert "baseline directory" in problems[0]
+    assert "does not exist" in problems[0]
+    assert "benchmarks/baselines/smoke" in problems[0]  # the remedy
+
+
+def test_gate_fails_empty_baseline_dir(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    problems = bench_gate.gate(tmp_path / "run", empty, 4.0)
     assert len(problems) == 1 and "no BENCH_*.json baselines" in problems[0]
+
+
+def test_gate_fails_missing_run_dir(tmp_path):
+    base_dir = tmp_path / "baselines"
+    _write(base_dir, BASE)
+    problems = bench_gate.gate(tmp_path / "never-emitted", base_dir, 4.0)
+    assert len(problems) == 1
+    assert "run directory" in problems[0]
+    assert "does not exist" in problems[0]
+    assert "re-emit the run artifacts" in problems[0]
+
+
+def test_gate_names_corrupt_baseline_json(tmp_path):
+    base_dir, run_dir = _dirs(tmp_path, copy.deepcopy(BASE))
+    (base_dir / "BENCH_window_stream.json").write_text('{"bench": trunc')
+    problems = bench_gate.gate(run_dir, base_dir, 4.0)
+    assert len(problems) == 1
+    assert "BENCH_window_stream.json" in problems[0]
+    assert "baseline is not valid JSON" in problems[0]
+    assert "line 1" in problems[0]                       # parse position
+    assert "refresh the committed baselines" in problems[0]
+
+
+def test_gate_names_corrupt_run_json(tmp_path):
+    base_dir, run_dir = _dirs(tmp_path, copy.deepcopy(BASE))
+    (run_dir / "BENCH_window_stream.json").write_text("")  # truncated upload
+    problems = bench_gate.gate(run_dir, base_dir, 4.0)
+    assert len(problems) == 1
+    assert "run is not valid JSON" in problems[0]
+    assert "re-emit the run artifacts" in problems[0]
+
+
+def test_gate_names_unreadable_baseline_file(tmp_path):
+    base_dir, run_dir = _dirs(tmp_path, copy.deepcopy(BASE))
+    target = base_dir / "BENCH_window_stream.json"
+    target.unlink()
+    target.mkdir()                       # a directory where a file should be
+    problems = bench_gate.gate(run_dir, base_dir, 4.0)
+    assert len(problems) == 1
+    assert "unreadable baseline file" in problems[0]
+
+
+def test_gate_names_non_object_top_level(tmp_path):
+    base_dir, run_dir = _dirs(tmp_path, copy.deepcopy(BASE))
+    (run_dir / "BENCH_window_stream.json").write_text("[1, 2, 3]")
+    problems = bench_gate.gate(run_dir, base_dir, 4.0)
+    assert len(problems) == 1
+    assert "top level must be a JSON object" in problems[0]
+    assert "got list" in problems[0]
 
 
 def test_gate_main_exit_codes(tmp_path, capsys):
@@ -195,6 +259,77 @@ def test_gate_main_exit_codes(tmp_path, capsys):
     assert bench_gate.main(["--run-dir", str(run_dir),
                             "--baseline-dir", str(base_dir)]) == 1
     assert "bench gate: FAIL" in capsys.readouterr().out
+
+
+# -- nightly trend (scripts/bench_trend.py) -----------------------------------
+
+def _trend_dirs(tmp_path, prev_doc, curr_doc):
+    """Write the docs NESTED one level down, the way gh run download
+    unpacks artifacts — flat globbing must not be assumed."""
+    prev_dir = tmp_path / "prev" / "bench-json-nightly-1"
+    curr_dir = tmp_path / "curr"
+    _write(prev_dir, prev_doc)
+    _write(curr_dir, curr_doc)
+    return tmp_path / "prev", curr_dir
+
+
+def test_trend_steady_run_reports_nothing_and_exits_zero(tmp_path, capsys):
+    prev_dir, curr_dir = _trend_dirs(tmp_path, BASE, copy.deepcopy(BASE))
+    assert bench_trend.main(["--prev", str(prev_dir),
+                             "--curr", str(curr_dir)]) == 0
+    assert "steady" in capsys.readouterr().out
+
+
+def test_trend_reports_exact_drift_and_exits_one(tmp_path, capsys):
+    curr = copy.deepcopy(BASE)
+    curr["rows"][0]["exact"]["edge_work"] = 7000
+    prev_dir, curr_dir = _trend_dirs(tmp_path, BASE, curr)
+    assert bench_trend.main(["--prev", str(prev_dir),
+                             "--curr", str(curr_dir)]) == 1
+    out = capsys.readouterr().out
+    assert "exact 'edge_work': 8706 -> 7000" in out
+    assert "behaviour changed" in out
+
+
+def test_trend_reports_wall_moves_without_failing(tmp_path, capsys):
+    curr = copy.deepcopy(BASE)
+    curr["rows"][0]["us_per_call"] *= 3.0       # beyond the 1.5x default
+    prev_dir, curr_dir = _trend_dirs(tmp_path, BASE, curr)
+    assert bench_trend.main(["--prev", str(prev_dir),
+                             "--curr", str(curr_dir)]) == 0
+    out = capsys.readouterr().out
+    assert "moved >1.5x" in out and "(3.00x)" in out
+    # a looser tolerance mutes the same move
+    assert bench_trend.main(["--prev", str(prev_dir), "--curr",
+                             str(curr_dir), "--move-tol", "4"]) == 0
+    assert "steady" in capsys.readouterr().out
+
+
+def test_trend_missing_side_skips_cleanly(tmp_path, capsys):
+    curr_dir = tmp_path / "curr"
+    _write(curr_dir, BASE)
+    # nonexistent --prev directory: first nightly ever
+    assert bench_trend.main(["--prev", str(tmp_path / "nope"),
+                             "--curr", str(curr_dir)]) == 0
+    assert "skipping" in capsys.readouterr().out
+    # existing but empty --prev directory: artifacts expired
+    (tmp_path / "empty").mkdir()
+    assert bench_trend.main(["--prev", str(tmp_path / "empty"),
+                             "--curr", str(curr_dir)]) == 0
+    assert "nothing to compare" in capsys.readouterr().out
+
+
+def test_trend_row_and_file_set_changes_are_informational(tmp_path, capsys):
+    curr = copy.deepcopy(BASE)
+    curr["rows"][1]["name"] = "window_stream/width9"
+    prev_dir, curr_dir = _trend_dirs(tmp_path, BASE, curr)
+    _write(curr_dir, dict(copy.deepcopy(BASE), bench="novel"))
+    assert bench_trend.main(["--prev", str(prev_dir),
+                             "--curr", str(curr_dir)]) == 0
+    out = capsys.readouterr().out
+    assert "width3 disappeared" in out
+    assert "width9 is new" in out
+    assert "BENCH_novel.json: new tonight" in out
 
 
 def test_run_out_dir_created_when_missing(tmp_path):

@@ -303,6 +303,40 @@ def test_pinned_links_survive_release_and_eviction():
     chain.unregister(b)
 
 
+def test_release_AS_skips_pinned_anchor_states_with_refcounts():
+    """``release(("AS",))`` drops only UNPINNED anchor states, and
+    ``pin_count`` stays consistent through nested pin/unpin cycles — the
+    store-level contract the chain's link protection is built on."""
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _store()
+    run_window_stream_batched(store, sr, 0, windows=slide_windows(SNAPS, 3),
+                              campaign_width=2)
+    as_tags = sorted(t for t in store._blocks if t[0] == "AS")
+    assert len(as_tags) >= 2, "stream left too few anchor states to test"
+    keep, dropped = as_tags[0], as_tags[1:]
+    store.pin(keep)
+    store.pin(keep)                          # pins nest (refcounted)
+    assert store.pin_count(keep) == 2
+    assert all(store.pin_count(t) == 0 for t in dropped)
+    freed = store.release(("AS",))
+    assert freed > 0
+    assert {t for t in store._blocks if t[0] == "AS"} == {keep}
+    # releasing never perturbs refcounts — of survivors or of the dropped
+    assert store.pin_count(keep) == 2
+    assert all(store.pin_count(t) == 0 for t in dropped)
+    # the AS-family release left every other block family warm
+    assert any(t[0] != "AS" for t in store._blocks)
+    store.unpin(keep)                        # one unpin is not enough
+    assert store.pin_count(keep) == 1
+    store.release(("AS",))
+    assert keep in store._blocks             # still pinned: still survives
+    store.unpin(keep)                        # refcount drains to zero...
+    assert store.pin_count(keep) == 0
+    assert keep not in store.pinned_tags()
+    store.release(("AS",))
+    assert keep not in store._blocks         # ...and the next release drops it
+
+
 def test_lru_eviction_skips_pinned_tags_with_exact_accounting():
     """Byte-budget eviction walks past pinned tags (evicting unpinned LRU
     entries instead) and cached_nbytes stays the exact sum either way."""

@@ -417,6 +417,63 @@ def test_g007_method_call_form_flagged(tmp_path):
     assert_only_rule(findings, "G007", count=1)
 
 
+# -- G008: stability-layer seeding discipline --------------------------------
+
+BAD_G008 = """\
+from repro.graph.engine import relax_sweep
+
+def seed_from_raw_delta(semiring, n, values, parent, delta_blocks):
+    frontier = values == values  # all-on: the raw Delta endpoint seeding
+    return relax_sweep(semiring, n, values, parent, frontier, delta_blocks)
+"""
+
+GOOD_G008 = """\
+from repro.graph.stability import seed_state
+
+def seed_properly(semiring, n, values, parent, delta_blocks):
+    return seed_state(semiring, n, values, parent, delta_blocks)
+"""
+
+
+def test_g008_bad(tmp_path):
+    findings = lint_snippet(tmp_path, BAD_G008,
+                            relpath="src/repro/core/executor.py")
+    assert_only_rule(findings, "G008", count=1)
+    assert "seed_state" in findings[0].message
+
+
+def test_g008_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G008,
+                        relpath="src/repro/core/executor.py") == []
+
+
+def test_g008_stability_module_exempt(tmp_path):
+    # the analysis itself owns the one sanctioned seeding call site
+    assert lint_snippet(tmp_path, BAD_G008,
+                        relpath="src/repro/graph/stability.py",
+                        rules=[get_rule("G008")]) == []
+
+
+def test_g008_engine_fixpoint_exempt(tmp_path):
+    # _fixpoint's per-sweep relax_sweep is iteration, not seeding — but a
+    # relax_sweep anywhere else in the engine module is still flagged.
+    code = ("def relax_sweep(semiring, n, values, parent, frontier, blocks):\n"
+            "    '''the sweep primitive itself'''\n"
+            "    return values\n"
+            "def _fixpoint(semiring, n, values, parent, frontier, blocks):\n"
+            "    def body(carry):\n"
+            "        return relax_sweep(semiring, n, *carry, blocks)\n"
+            "    return body\n"
+            "def rogue_seed(semiring, n, values, parent, frontier, blocks):\n"
+            "    return relax_sweep(semiring, n, values, parent, frontier,\n"
+            "                       blocks)\n")
+    findings = lint_snippet(tmp_path, code,
+                            relpath="src/repro/graph/engine.py",
+                            rules=[get_rule("G008")])
+    assert_only_rule(findings, "G008", count=1)
+    assert findings[0].line > 7  # only the rogue call, not _fixpoint's
+
+
 # -- suppressions, engine plumbing, CLI --------------------------------------
 
 def test_line_suppression(tmp_path):
@@ -441,7 +498,7 @@ def test_suppression_is_per_rule(tmp_path):
 
 def test_rule_registry_complete():
     assert [r.id for r in all_rules()] == \
-        ["G001", "G002", "G003", "G004", "G005", "G006", "G007"]
+        ["G001", "G002", "G003", "G004", "G005", "G006", "G007", "G008"]
     for rule in all_rules():
         assert rule.title and rule.contract
     with pytest.raises(KeyError):

@@ -1,0 +1,220 @@
+"""Stable-vertex analysis contract (graph/stability.py).
+
+The exactness property every executor's instability seeding rests on:
+for each registered semiring, seeding from the pruned instability
+frontier is BIT-IDENTICAL to full-Δ seeding — values, parents,
+iterations and the instability counts all agree; only the
+frontier-masked ``edge_work`` drops (strictly, whenever some Δ edge
+leaves an unreached vertex). Property-checked here across the single
+and batched engine paths, the TG plan executors, the window
+slide/stream executors and the query service, plus unit coverage of
+``seed_mask`` / ``stable_fraction_milli`` and mode validation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QueryService,
+    SnapshotStore,
+    optimal_plan,
+    run_plan,
+    run_plan_batched,
+    run_window_slide,
+    run_window_stream_batched,
+)
+from repro.graph import (
+    incremental_additions,
+    incremental_additions_batched,
+    make_evolving_sequence,
+    run_to_fixpoint,
+    seed_mask,
+    seed_state,
+    stable_fraction_milli,
+)
+from repro.graph.engine import gather_lane_states
+from repro.graph.semiring import ALL_SEMIRINGS, BFS, SSSP
+
+SEMIRINGS = sorted(ALL_SEMIRINGS)
+
+
+def _store(n=250, e=1800, snaps=6, changes=120, seed=7):
+    return SnapshotStore(make_evolving_sequence(n, e, snaps, changes,
+                                                seed=seed))
+
+
+def _hop_inputs(store, semiring, source=0):
+    """Anchor state + one real slide hop off it (the generic Δ seeding)."""
+    anchor = (0, store.seq.num_snapshots - 1)
+    view = store.common_graph_view(*anchor)
+    base = run_to_fixpoint(view, semiring, source, track_parents=True)
+    wnd = (0, 1)
+    delta = store.slide_block(wnd, anchor)
+    return view.extended(delta), delta, base
+
+
+# -- the exactness property, engine paths -------------------------------------
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_incremental_bit_identical_across_seed_modes(name):
+    semiring = ALL_SEMIRINGS[name]
+    store = _store()
+    view, delta, base = _hop_inputs(store, semiring)
+    inst = incremental_additions(view, delta, semiring, base.values,
+                                 base.parent, track_parents=True)
+    full = incremental_additions(view, delta, semiring, base.values,
+                                 base.parent, track_parents=True,
+                                 seed="delta")
+    assert jnp.array_equal(inst.values, full.values)
+    assert jnp.array_equal(inst.parent, full.parent)
+    assert int(inst.iterations) == int(full.iterations)
+    assert int(inst.unstable) == int(full.unstable)
+    # pruning can only remove seed work, never add it
+    assert float(inst.edge_work) <= float(full.edge_work)
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_instability_seeding_strictly_cheaper_with_unreached(name):
+    # a source-0 query on a loose RMAT graph leaves vertices unreached, so
+    # some Δ edges have inert sources and the masked seed sweep must win
+    semiring = ALL_SEMIRINGS[name]
+    store = _store(n=400, e=1600, seed=0)
+    view, delta, base = _hop_inputs(store, semiring)
+    assert not bool(jnp.all(seed_mask(semiring, base.values)))
+    inst = incremental_additions(view, delta, semiring, base.values,
+                                 base.parent, track_parents=True)
+    full = incremental_additions(view, delta, semiring, base.values,
+                                 base.parent, track_parents=True,
+                                 seed="delta")
+    assert jnp.array_equal(inst.values, full.values)
+    assert float(inst.edge_work) < float(full.edge_work)
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_batched_incremental_bit_identical_across_seed_modes(name):
+    semiring = ALL_SEMIRINGS[name]
+    store = _store()
+    anchor = (0, store.seq.num_snapshots - 1)
+    view = store.common_graph_view(*anchor)
+    base = run_to_fixpoint(view, semiring, 0, track_parents=True)
+    windows = [(0, 1), (1, 2), (2, 3), (3, 4)]
+    stacked = store.slide_stack(windows, anchor, num_lanes=4)
+    values, parent = gather_lane_states(base.values[None], base.parent[None],
+                                        [0] * 4)
+    kwargs = dict(shared_blocks=tuple(view.blocks), delta_blocks=(stacked,),
+                  track_parents=True, seed_blocks=(stacked,))
+    inst = incremental_additions_batched(store.num_nodes, semiring, values,
+                                         parent, **kwargs)
+    full = incremental_additions_batched(store.num_nodes, semiring, values,
+                                         parent, seed="delta", **kwargs)
+    assert jnp.array_equal(inst.values, full.values)
+    assert jnp.array_equal(inst.parent, full.parent)
+    assert jnp.array_equal(inst.unstable, full.unstable)
+    assert float(jnp.sum(inst.edge_work)) <= float(jnp.sum(full.edge_work))
+
+
+# -- the exactness property, executor paths -----------------------------------
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_trigrid_executors_bit_identical_across_seed_modes(name):
+    semiring = ALL_SEMIRINGS[name]
+    store = _store()
+    plan = optimal_plan(store)
+    inst = run_plan_batched(store, plan, semiring, 0)
+    full = run_plan_batched(store, plan, semiring, 0, seed="delta")
+    seq = run_plan(store, plan, semiring, 0, seed="delta")
+    for k in inst.results:
+        assert jnp.array_equal(inst.results[k], full.results[k])
+        assert jnp.array_equal(inst.results[k], seq.results[k])
+    assert inst.stable_milli == full.stable_milli == seq.stable_milli > 0
+    inst_work = sum(h.edge_work for h in inst.hop_stats)
+    full_work = sum(h.edge_work for h in full.hop_stats)
+    assert inst_work <= full_work
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_window_stream_bit_identical_across_seed_modes(name):
+    semiring = ALL_SEMIRINGS[name]
+    store = _store()
+    inst = run_window_stream_batched(store, semiring, 0, 3,
+                                     campaign_width="auto")
+    store.release(("AS",))
+    full = run_window_stream_batched(store, semiring, 0, 3,
+                                     campaign_width="auto", seed="delta")
+    seq = run_window_slide(store, semiring, 0, 3, seed="delta")
+    for w in inst.results:
+        assert jnp.array_equal(inst.results[w], full.results[w])
+        assert jnp.array_equal(inst.results[w], seq.results[w])
+    assert inst.stable_milli == full.stable_milli > 0
+    assert inst.campaigns == full.campaigns  # seeding never moves the cuts
+
+
+def test_service_bit_identical_across_seed_modes():
+    store = _store()
+
+    def serve(seed):
+        store.release(("AS",))
+        svc = QueryService(store, lane_budget=8, seed=seed)
+        c1 = svc.register(SSSP, 0, campaign_width=3)
+        c2 = svc.register(BFS, 5, campaign_width=2)
+        svc.submit(c1, [(0, 2), (1, 3), (2, 4), (3, 5)])
+        svc.submit(c2, [(0, 3), (1, 4), (2, 5)])
+        metrics = svc.drain()
+        svc.unregister(c1)
+        svc.unregister(c2)
+        return (c1, c2), metrics
+
+    (a1, a2), inst = serve("instability")
+    (b1, b2), full = serve("delta")
+    for got, want in ((a1, b1), (a2, b2)):
+        assert got.results.keys() == want.results.keys()
+        for w in got.results:
+            assert jnp.array_equal(got.results[w], want.results[w])
+    # launch composition and stability accounting are seed-mode invariant
+    assert (inst.launches, inst.lanes, inst.completed) == \
+        (full.launches, full.lanes, full.completed)
+    assert inst.stable_fraction_milli == full.stable_fraction_milli > 0
+    assert inst.edge_work <= full.edge_work
+
+
+# -- unit surface -------------------------------------------------------------
+
+def test_seed_mask_marks_reached_vertices():
+    values = jnp.float32([SSSP.identity, 0.0, 3.5, SSSP.identity])
+    assert seed_mask(SSSP, values).tolist() == [False, True, True, False]
+
+
+def test_seed_state_rejects_unknown_mode():
+    store = _store()
+    view, delta, base = _hop_inputs(store, SSSP)
+    with pytest.raises(ValueError, match="unknown seed mode"):
+        seed_state(SSSP, store.num_nodes, base.values, base.parent, (delta,),
+                   mode="everything")
+
+
+def test_seed_state_unstable_counts_frontier():
+    store = _store()
+    _view, delta, base = _hop_inputs(store, SSSP)
+    seeded = seed_state(SSSP, store.num_nodes, base.values, base.parent,
+                        (delta,))
+    assert int(seeded.unstable) == int(jnp.sum(seeded.frontier))
+    full = seed_state(SSSP, store.num_nodes, base.values, base.parent,
+                      (delta,), mode="delta")
+    assert jnp.array_equal(seeded.frontier, full.frontier)
+    assert jnp.array_equal(seeded.values, full.values)
+
+
+def test_stable_fraction_milli_aggregation():
+    # 2 lanes of 100 vertices, 10 + 40 unstable -> 150/200 stable = 750‰
+    assert stable_fraction_milli([10, 40], 100) == 750
+    assert stable_fraction_milli([0, 0], 100) == 1000
+    assert stable_fraction_milli([100], 100) == 0
+    assert stable_fraction_milli([], 100) == 0           # no lanes
+    assert stable_fraction_milli([5], 0) == 0            # degenerate
+    # padding lanes excluded via lane_valid
+    assert stable_fraction_milli([10, 40, 0, 0], 100,
+                                 lane_valid=[1, 1, 0, 0]) == 750
+    # accepts device arrays and nested sequences
+    assert stable_fraction_milli(jnp.int32([10, 40]), 100) == 750
+    assert stable_fraction_milli([np.int32(10), np.int32(40)], 100) == 750
