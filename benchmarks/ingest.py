@@ -1,0 +1,178 @@
+"""Live-ingestion bench: firehose replay vs the precomputed-input path.
+
+Replays a seeded edge-event trace (``events_from_sequence`` of a
+``make_evolving_sequence`` graph) through the full ingestion pipeline —
+``EdgeLog`` (bounded buffer, spill backpressure) → ``Watermark.cut`` per
+tick → ``LiveWindowFeed`` → a live ``WindowStream`` served by
+``run_window_stream_batched`` after every cut — and accounts one row:
+
+* **Exact (gate-strict) fields**: every ``IngestMetrics`` counter
+  (events, late/spilled/dropped/stalls, cuts, applied additions/
+  deletions, redundant events, common-graph shrinkage, compaction trio),
+  the stored-edge count before/after compaction, windows served live,
+  and the bit-identity boolean. All are pure functions of the seed:
+  event consumption is (ts, arrival)-ordered and scheduling count-based.
+* The wall time covers the timed replay *including* live query serving
+  (one warm replay first compiles traces and prices blocks).
+
+The row doubles as the acceptance check (assertions, not just numbers):
+snapshots and Δ-batches cut from the firehose must be **bit-identical**
+to the precomputed sequence; queries answered live during ingestion and
+post-replay window slides across **all five semirings** must be
+bit-identical to the precomputed-input path; and compaction must leave
+**strictly fewer** stored edges.
+
+    PYTHONPATH=src python -m benchmarks.ingest [--smoke]
+
+CI runs this via the bench job's ``benchmarks.run --smoke`` harness pass
+and diffs the emitted BENCH_ingest.json against the committed smoke
+baseline (docs/BENCHMARKS.md).
+"""
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (
+    EdgeLog,
+    IngestMetrics,
+    LiveSequence,
+    LiveWindowFeed,
+    SnapshotStore,
+    Watermark,
+    WindowStream,
+    events_from_sequence,
+    replay_events,
+    run_window_slide_batched,
+    run_window_stream_batched,
+)
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def _replay_and_serve(seq, events, semiring, *, width, campaign_width,
+                      max_pending):
+    """One full live run: replay the trace, serving born windows per cut.
+
+    Returns ``(store, results, windows_served, metrics, watermark)``.
+    The ``"spill"`` policy makes the bounded buffer lossless AND
+    deterministic — spilled events rejoin in (ts, arrival) order at the
+    next cut — so every counter below is a pure function of the trace.
+    """
+    metrics = IngestMetrics()
+    store = SnapshotStore(LiveSequence(seq.num_nodes,
+                                       weight_seed=seq.weight_seed))
+    log = EdgeLog(seq.num_nodes, max_pending_events=max_pending,
+                  policy="spill", metrics=metrics)
+    watermark = Watermark(log, store)
+    stream = WindowStream(campaign_width, name="live-ingest",
+                          feed=LiveWindowFeed(store, width=width))
+    results = {}
+
+    def on_cut(_idx):
+        run = run_window_stream_batched(store, semiring, 0, stream=stream)
+        results.update(run.results)
+
+    replay_events(log, watermark, events, on_cut=on_cut)
+    return store, results, len(results), metrics, watermark
+
+
+def run_ingest_bench(n=2_000, e=20_000, snaps=8, changes=600, width=3,
+                     campaign_width=2, max_pending=1_024, seed=7):
+    """One row of firehose-vs-precomputed accounting + replay wall time."""
+    seq = make_evolving_sequence(n, e, snaps, changes, seed=seed)
+    events = events_from_sequence(seq)
+    semiring = ALL_SEMIRINGS["sssp"]
+    ref = SnapshotStore(seq)
+
+    # Warm-up replay: compiles every slide trace and builds the reference
+    # blocks, so the timed run measures ingestion + serving, not jit.
+    _replay_and_serve(seq, events, semiring, width=width,
+                      campaign_width=campaign_width, max_pending=max_pending)
+    t0 = time.perf_counter()
+    live, live_results, served, metrics, watermark = _replay_and_serve(
+        seq, events, semiring, width=width, campaign_width=campaign_width,
+        max_pending=max_pending)
+    wall_s = time.perf_counter() - t0
+
+    # Bit-identity, structure: every snapshot + canonical Δ pair cut from
+    # the firehose equals the precomputed sequence exactly.
+    bit_identical = all(
+        np.array_equal(live.seq.snapshot_keys[i], seq.snapshot_keys[i])
+        for i in range(snaps))
+    bit_identical = bit_identical and all(
+        np.array_equal(live.seq.additions[t], seq.additions[t])
+        and np.array_equal(live.seq.deletions[t], seq.deletions[t])
+        for t in range(snaps - 1))
+    assert bit_identical, "replayed snapshots/Δ diverged from the sequence"
+
+    # Bit-identity, values: windows answered LIVE (mid-ingestion, anchors
+    # widening cut by cut) vs the precomputed-input slide — the monotone
+    # rounded fixpoint of (window, qkey) is unique, so exact equality.
+    ref_slide = run_window_slide_batched(ref, semiring, 0, width)
+    assert set(live_results) == set(ref_slide.results), "window set diverged"
+    for wnd, vals in ref_slide.results.items():
+        if not np.array_equal(np.asarray(live_results[wnd]),
+                              np.asarray(vals)):
+            bit_identical = False
+    assert bit_identical, "live-served values diverged from precomputed path"
+
+    # All five semirings over the fully ingested store vs the precomputed
+    # one — same blocks, same weights (pure key hash), same fixpoints.
+    for name, sr in sorted(ALL_SEMIRINGS.items()):
+        a = run_window_slide_batched(live, sr, 0, width)
+        b = run_window_slide_batched(ref, sr, 0, width)
+        for wnd, vals in b.results.items():
+            assert np.array_equal(np.asarray(a.results[wnd]),
+                                  np.asarray(vals)), (name, wnd)
+
+    # Compaction: the drained feed's floor frees every out-of-window
+    # snapshot — strictly fewer stored edges (the PR's acceptance bar).
+    stored_before = live.stored_edges
+    stats = watermark.compact()
+    stored_after = live.stored_edges
+    assert stats.retired > 0, "drained feed should allow retirement"
+    assert stored_after < stored_before, (
+        f"compaction must strictly shrink storage "
+        f"({stored_before} -> {stored_after})")
+    live.window_keys(live.first_live, snaps - 1)  # live range still serves
+
+    assert metrics.spilled > 0, "smoke trace should exercise backpressure"
+    assert metrics.late_events == 0 and metrics.dropped == 0
+
+    return {
+        **dataclasses.asdict(metrics),
+        "stored_edges_before": stored_before,
+        "stored_edges_after": stored_after,
+        "windows_served": served,
+        "bit_identical": bit_identical,
+        "wall_s": wall_s,
+    }
+
+
+SMOKE = dict(n=400, e=3_000, snaps=6, changes=200, width=3,
+             campaign_width=2, max_pending=1_024, seed=7)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny graph (CI smoke run)")
+    args = p.parse_args(argv)
+    r = run_ingest_bench(**(SMOKE if args.smoke else {}))
+    print(f"events={r['events']}  cuts={r['cuts']}  "
+          f"spilled={r['spilled']}  "
+          f"applied +{r['applied_additions']}/-{r['applied_deletions']}  "
+          f"redundant={r['redundant_events']}  "
+          f"common-shrinkage={r['common_shrinkage']}  "
+          f"served={r['windows_served']} windows live  "
+          f"compaction retired {r['retired_snapshots']} snaps "
+          f"({r['stored_edges_before']}→{r['stored_edges_after']} edges)  "
+          f"replay {r['wall_s'] * 1e3:.1f}ms  bit-identical ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -90,6 +90,14 @@ SCALES = {
         "full": dict(n=20_000, e=200_000, snaps=10, changes=10_000,
                      width=4),
     },
+    "ingest": {
+        "smoke": dict(n=400, e=3_000, snaps=6, changes=200, width=3,
+                      campaign_width=2, max_pending=1_024, seed=7),
+        "default": dict(n=2_000, e=20_000, snaps=8, changes=600, width=3,
+                        campaign_width=2, max_pending=4_096, seed=7),
+        "full": dict(n=10_000, e=100_000, snaps=12, changes=3_000, width=4,
+                     campaign_width=3, max_pending=16_384, seed=7),
+    },
 }
 
 
@@ -365,6 +373,25 @@ def bench_serve(scale: str):
               "p99_us": round(float(r["p99_us"]), 1)})]
 
 
+def bench_ingest(scale: str):
+    """Live ingestion: firehose replay + live serving vs precomputed path."""
+    from benchmarks.ingest import run_ingest_bench
+    r = run_ingest_bench(**SCALES["ingest"][scale])
+    # snapshot/Δ/value bit-identity across all five semirings AND
+    # strictly-fewer-stored-edges after compaction are asserted inside
+    # run_ingest_bench; a failure raises there
+    exact = {k: (bool(v) if k == "bit_identical" else int(v))
+             for k, v in r.items() if k != "wall_s"}
+    return [("ingest/replay", r["wall_s"] * 1e6,
+             f"events={r['events']} cuts={r['cuts']} "
+             f"spilled={r['spilled']} "
+             f"served={r['windows_served']} "
+             f"shrinkage={r['common_shrinkage']} "
+             f"compacted {r['stored_edges_before']}->"
+             f"{r['stored_edges_after']}",
+             exact)]
+
+
 BENCHES = {
     "table1": bench_table1,
     "del_vs_add": bench_del_vs_add,
@@ -375,6 +402,7 @@ BENCHES = {
     "serve": bench_serve,
     "kernels": bench_kernels,
     "evolve": bench_evolve,
+    "ingest": bench_ingest,
 }
 
 
@@ -423,12 +451,36 @@ def write_bench_json(out_dir: pathlib.Path, bench: str, status: str,
     return path
 
 
+BASELINES_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+
+#: Tier -> committed-baseline path for one bench (``None`` = the gate has
+#: no baseline concept for that tier; only listed tiers are reported).
+BASELINE_TIERS = {
+    "smoke": lambda name: BASELINES_DIR / "smoke" / f"BENCH_{name}.json",
+    "default": lambda name: BASELINES_DIR / f"BENCH_{name}.json",
+}
+
+
+def baseline_status(name: str) -> str:
+    """``"smoke=present default=missing"``-style committed-baseline status.
+
+    One token per gateable tier, read from the same paths
+    ``scripts/bench_gate.py`` diffs against — so a bench added without
+    committing its smoke baseline shows up in ``--list`` before the CI
+    gate fails on it.
+    """
+    return " ".join(
+        f"{tier}={'present' if path_fn(name).is_file() else 'missing'}"
+        for tier, path_fn in BASELINE_TIERS.items())
+
+
 def list_benches(out=print) -> None:
-    """Print every bench with its one-line purpose and scale tiers.
+    """Print every bench: purpose, scale tiers, committed-baseline status.
 
     Reads ``SCALES`` — the same registry the bench functions run from —
     so the listing is exact by construction (docs/BENCHMARKS.md embeds
-    the workflow, not this output).
+    the workflow, not this output). The ``baselines:`` line flags any
+    bench whose committed gate baseline is missing for a tier.
     """
     for name, fn in BENCHES.items():
         doc = (fn.__doc__ or "").strip().splitlines()[0]
@@ -438,6 +490,7 @@ def list_benches(out=print) -> None:
             rendered = ", ".join(f"{k}={v}" for k, v in params.items()) \
                 or "(module defaults)"
             out(f"  {tier:8s} {rendered}")
+        out(f"  baselines: {baseline_status(name)}")
 
 
 def main(argv=None) -> int:

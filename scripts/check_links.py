@@ -1,13 +1,17 @@
 #!/usr/bin/env python3
-"""Docs drift gate: markdown links + embedded --help output.
+"""Docs drift gate: markdown links, orphan pages + embedded --help.
 
-Stdlib-only (runs in CI's docs job before anything is installed). Two
-checks, both on by default:
+Stdlib-only (runs in CI's docs job before anything is installed). Three
+checks, all on by default:
 
 * **Links.** For each markdown file checked, every relative link target
   must exist on disk, and every ``#fragment`` — on another checked
   markdown file or within the same file — must match a heading's
   GitHub-style anchor. External links (http/https/mailto) are ignored.
+* **Orphans** (default file set only). Every ``docs/*.md`` must be
+  reachable from README.md by following relative markdown links — a
+  guide nobody links from the docs index is invisible to readers, so
+  shipping one fails CI until the index row exists.
 * **Embedded --help** (when docs/BENCHMARKS.md is among the files). The
   fenced block under the ``<!-- bench-gate-help -->`` marker must equal
   ``scripts/bench_gate.py --help`` verbatim (COLUMNS=80), so the
@@ -85,6 +89,38 @@ def check(files: list[pathlib.Path]) -> list[str]:
     return errors
 
 
+# -- orphan pages (docs/*.md unreachable from README.md) ----------------------
+
+
+def md_targets(md: pathlib.Path) -> set[pathlib.Path]:
+    """Resolved .md files ``md`` links to (relative links only)."""
+    text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    out = set()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, _ = target.partition("#")
+        if not path_part:
+            continue
+        dest = (md.parent / path_part).resolve()
+        if dest.suffix == ".md" and dest.exists():
+            out.add(dest)
+    return out
+
+
+def check_orphans(root: pathlib.Path, pages: list[pathlib.Path]) -> list[str]:
+    """Pages not reachable from ``root`` via relative markdown links."""
+    reached, frontier = {root}, [root]
+    while frontier:
+        for dest in md_targets(frontier.pop()):
+            if dest not in reached:
+                reached.add(dest)
+                frontier.append(dest)
+    return [f"{rel(p)}: orphan page — not reachable from {rel(root)} "
+            "(add it to the README docs index)"
+            for p in pages if p not in reached]
+
+
 # -- embedded --help drift (docs/BENCHMARKS.md vs scripts/bench_gate.py) ------
 
 HELP_MARKER = "<!-- bench-gate-help -->"
@@ -133,14 +169,18 @@ def main(argv: list[str]) -> int:
         print(f"MISSING FILE: {f}", file=sys.stderr)
     present = [f for f in files if f.exists()]
     errors = check(present)
+    if not argv:   # default set: README must index every docs page
+        errors += check_orphans(REPO / "README.md",
+                                [f for f in present
+                                 if f.parent == REPO / "docs"])
     if REPO / "docs" / "BENCHMARKS.md" in present:
         errors += check_embedded_help(REPO / "docs" / "BENCHMARKS.md")
     for e in errors:
         print(f"BROKEN: {e}", file=sys.stderr)
     if missing or errors:
         return 1
-    print(f"checked {len(files)} files: links and embedded --help all "
-          "in sync")
+    print(f"checked {len(files)} files: links, page reachability and "
+          "embedded --help all in sync")
     return 0
 
 

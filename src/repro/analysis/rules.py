@@ -1,8 +1,8 @@
-"""Rules G001–G005, G007–G008: the launch/cache/sync/seeding invariants.
+"""Rules G001–G005, G007–G009: the launch/cache/sync/seeding invariants.
 
 Each rule encodes one contract the executors' module docstrings state in
 prose (core/trigrid.py, core/snapshots.py, core/window.py, core/service.py,
-graph/semiring.py, graph/stability.py) — see docs/ANALYSIS.md for the
+core/ingest.py, graph/semiring.py, graph/stability.py) — see docs/ANALYSIS.md for the
 catalog with real before/after examples. Rules are static and name-based: they resolve
 callees by their rightmost name within one module (no cross-module import
 resolution), which is exactly the granularity the contracts are written
@@ -509,3 +509,86 @@ class StabilitySeedDiscipline(Rule):
                 f"{self.SWEEP} called outside graph/stability.py — seed "
                 "frontiers must come from repro.graph.stability.seed_state "
                 "(the stable-vertex analysis), not a raw Δ edge sweep")
+
+
+@register
+class IngestCutDiscipline(Rule):
+    """G009: snapshots are cut only via Watermark.cut; no ad-hoc store writes."""
+
+    id = "G009"
+    title = "snapshot write outside the watermark cut path"
+    contract = (
+        "A live SnapshotStore grows through exactly one write path: "
+        "ingest.Watermark.cut consumes watermarked events (timestamp "
+        "order, last-op-wins, redundancy filtered), maintains the running "
+        "common graph, and installs the snapshot + canonical Δ pair via "
+        "SnapshotStore.ingest_cut. An ingest_cut call anywhere else skips "
+        "that bookkeeping (metrics, sealing, common-graph maintenance); "
+        "growing the live sequence directly (.snapshot_keys/.additions/"
+        ".deletions .append) desynchronizes the store's window cache from "
+        "its sequence; and writing the store's _t/_blocks caches from "
+        "outside core/snapshots.py plants entries the pure-cache contract "
+        "cannot rebuild. All three are flagged outside their one legal "
+        "home (ingest.Watermark.cut / ingest.LiveSequence.append / the "
+        "SnapshotStore module itself)."
+    )
+
+    WRITE_PATH = "ingest_cut"
+    INGEST_MODULE = "repro.core.ingest"
+    SANCTIONED_FN = "cut"
+    GROW_ATTRS = ("snapshot_keys", "additions", "deletions")
+    CACHE_ATTRS = ("_t", "_blocks")
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        dotted = module.dotted_name()
+        in_ingest = dotted == self.INGEST_MODULE
+        canonical = any(isinstance(node, ast.ClassDef)
+                        and node.name == "SnapshotStore"
+                        for node in module.tree.body)
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call) \
+                    and call_name(node) == self.WRITE_PATH:
+                if not (in_ingest and self._in_cut(module, node)):
+                    yield self.finding(
+                        module, node,
+                        f"{self.WRITE_PATH} called outside "
+                        "ingest.Watermark.cut — snapshots are born only "
+                        "from watermarked cuts (event ordering, sealing, "
+                        "common-graph maintenance live there)")
+            elif isinstance(node, ast.Call) and not in_ingest \
+                    and self._grows_sequence(node):
+                yield self.finding(
+                    module, node,
+                    "appending to a live sequence's snapshot_keys/"
+                    "additions/deletions outside core/ingest.py — the "
+                    "store's window cache would not see the new snapshot; "
+                    "cut it via ingest.Watermark.cut")
+            elif isinstance(node, ast.Assign) and not canonical:
+                for target in node.targets:
+                    attr = self._cache_subscript(target)
+                    if attr is not None:
+                        yield self.finding(
+                            module, node,
+                            f"direct write to SnapshotStore.{attr}[...] "
+                            "outside core/snapshots.py — cache entries "
+                            "must be installable only by the store (pure-"
+                            "cache contract); use ingest_cut/the canonical "
+                            "accessors")
+
+    def _in_cut(self, module: Module, node: ast.AST) -> bool:
+        return any(isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+                   and fn.name == self.SANCTIONED_FN
+                   for fn in module.function_ancestors(node))
+
+    def _grows_sequence(self, node: ast.Call) -> bool:
+        func = node.func
+        return (isinstance(func, ast.Attribute) and func.attr == "append"
+                and isinstance(func.value, ast.Attribute)
+                and func.value.attr in self.GROW_ATTRS)
+
+    def _cache_subscript(self, target: ast.expr) -> "str | None":
+        if isinstance(target, ast.Subscript) \
+                and isinstance(target.value, ast.Attribute) \
+                and target.value.attr in self.CACHE_ATTRS:
+            return target.value.attr
+        return None

@@ -1,6 +1,7 @@
 """CommonGraph core — the paper's contribution as a composable JAX module.
 
 Layers:
+  ingest       live ingestion (edge-event log, watermark cuts, compaction)
   snapshots    mutation-free window/Δ representation (shared edge blocks)
   kickstarter  the streaming baseline (deletions + trimming) we compare to
   directhop    CommonGraph Direct-Hop schedule (deletion-free, star plan)
@@ -9,7 +10,18 @@ Layers:
   service      always-on multi-client query service (admission + scheduling)
 """
 
-from repro.core.snapshots import SnapshotStore
+from repro.core.snapshots import CompactionStats, SnapshotStore
+from repro.core.ingest import (
+    BackpressureStall,
+    EdgeEvent,
+    EdgeLog,
+    IngestMetrics,
+    LiveSequence,
+    LiveWindowFeed,
+    Watermark,
+    events_from_sequence,
+    replay_events,
+)
 from repro.core.kickstarter import StreamStats, run_kickstarter_stream
 from repro.core.directhop import DirectHopRun, run_direct_hop, run_direct_hop_batched
 from repro.core.trigrid import (
@@ -49,8 +61,18 @@ from repro.core.window import (
 
 __all__ = [
     "AnchorChain",
+    "BackpressureStall",
     "CampaignPlan",
+    "CompactionStats",
+    "EdgeEvent",
+    "EdgeLog",
+    "IngestMetrics",
     "LaunchRecord",
+    "LiveSequence",
+    "LiveWindowFeed",
+    "Watermark",
+    "events_from_sequence",
+    "replay_events",
     "QueryService",
     "ServiceClient",
     "ServiceMetrics",

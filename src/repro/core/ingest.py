@@ -1,0 +1,541 @@
+"""Live ingestion: snapshots born from an edge firehose.
+
+Everything upstream of this module assumes snapshots and Δ-batches are
+*precomputed inputs* (``make_evolving_sequence`` → ``SnapshotStore``).
+The real evolving-graph scenario is the other way around: a stream of
+edge **events** arrives (GraphOne's fine-grained ingestion with
+analytics-chosen visibility, SNIPPETS.md §3; the Besta et al.
+streaming-graph-systems survey, PAPERS.md), and snapshots are *cut* from
+it. This module is that ingestion layer — the event side of the
+CommonGraph machinery:
+
+* :class:`EdgeLog` — the append-only event log. ``append(src, dst, w,
+  op, ts)`` records add/delete events with bounded-buffer backpressure
+  (``max_pending_events`` + a block/drop/spill policy, all surfaced in
+  :class:`IngestMetrics`).
+* :class:`Watermark` — visibility control. ``advance(ts)`` moves the
+  watermark monotonically; ``cut()`` consumes every buffered event at or
+  below it (in timestamp order, last-op-wins per edge) and materializes
+  ONE new snapshot + canonical Δ-batch pair into the
+  :class:`~repro.core.snapshots.SnapshotStore` via
+  ``SnapshotStore.ingest_cut`` — the only sanctioned write path
+  (graphlint rule G009).
+* **Online common-graph maintenance.** The paper's
+  deletion-to-addition conversion, done incrementally: the running
+  common graph obeys ``T(lo, k+1) = T(lo, k) ∖ dels_k`` (a cut's applied
+  additions are disjoint from the previous snapshot, so they can never
+  enter the intersection), so each cut *shrinks* the common-graph lower
+  bound by exactly its deletions — additions only ever land in the
+  per-snapshot Δ-batches, exactly as the batch formulation converts
+  every deletion into downstream additions. The shrinkage is metered
+  (``common_shrinkage``) and the maintained intersection is installed in
+  the store's window cache so anchor queries at the live base pay no
+  re-intersection.
+* :class:`LiveSequence` — the mutable, duck-typed counterpart of
+  ``EvolvingSequence`` a live store grows over
+  (``SnapshotStore(LiveSequence(n))``); weights remain a pure hash of
+  the edge key, so an edge deleted and re-added keeps its weight and a
+  replayed trace is bit-identical to its precomputed counterpart.
+* :class:`LiveWindowFeed` — the bridge to the query layers: emits each
+  slide window the moment its last snapshot is cut, so a
+  ``WindowStream`` (or ``QueryService`` client) registered with
+  ``feed=`` blocks on the watermark instead of a precomputed window
+  list, and registers a compaction floor for the snapshots its pending
+  windows still need.
+* :func:`events_from_sequence` / :func:`replay_events` — seeded trace
+  replay: flatten an ``EvolvingSequence`` into events and drive
+  log → watermark → cuts, one snapshot per distinct timestamp. The
+  acceptance contract (tests/test_ingest.py, ``bench_ingest``): replayed
+  snapshots, Δ-batches and query results across all five semirings are
+  bit-identical to the precomputed-input path.
+
+Retirement is the inverse of birth: ``SnapshotStore.compact`` (driven
+here via :meth:`Watermark.compact`) retires snapshots that have fallen
+out of every registered window floor and every pinned "AS" anchor,
+folding their storage back — strictly fewer stored edges, metered as
+``compactions``/``retired_snapshots``/``freed_edges``.
+
+docs/INGESTION.md is the doctested guide to this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.snapshots import SnapshotStore
+from repro.graph.edgeset import edge_keys, keys_to_edges, merge_changes
+from repro.graph.generators import edge_weights
+
+#: Legal event operations.
+OPS = ("add", "del")
+
+#: Legal backpressure policies for a bounded :class:`EdgeLog`.
+POLICIES = ("block", "drop", "spill")
+
+_FEED_COUNTER = itertools.count()
+
+
+class BackpressureStall(RuntimeError):
+    """Raised by ``EdgeLog.append`` under the ``"block"`` policy when the
+    pending buffer is full — the producer must cut (or drop) before
+    appending more. Each raise is metered as one ``stalls``."""
+
+
+class EdgeEvent(NamedTuple):
+    """One immutable edge event: ``(ts, src, dst, op, w)``.
+
+    ``op`` is ``"add"`` or ``"del"``; ``w`` is an optional payload weight
+    recorded for provenance — materialized blocks derive weights from the
+    edge key (``edge_weights``), which is what keeps a deleted-then-
+    re-added edge's weight stable and replay bit-identical to the
+    precomputed path.
+    """
+
+    ts: int
+    src: int
+    dst: int
+    op: str = "add"
+    w: "float | None" = None
+
+
+@dataclasses.dataclass
+class IngestMetrics:
+    """Ingestion counters, shared by one log/watermark pair.
+
+    Every field is a deterministic integer for a fixed event trace —
+    exactly what ``bench_ingest`` gates as schema-v2 exact fields:
+    ``events`` (accepted appends, spilled included), ``late_events``
+    (rejected: at or below the last cut), ``stalls``/``dropped``/
+    ``spilled`` (backpressure, per policy), ``cuts``,
+    ``applied_additions``/``applied_deletions`` (edges that actually
+    changed a snapshot), ``redundant_events`` (no-ops: add of present,
+    del of absent, or superseded by a later same-edge event in the same
+    cut), ``common_shrinkage`` (edges deletions removed from the running
+    common graph), and the compaction trio ``compactions``/
+    ``retired_snapshots``/``freed_edges``.
+    """
+
+    events: int = 0
+    late_events: int = 0
+    stalls: int = 0
+    dropped: int = 0
+    spilled: int = 0
+    cuts: int = 0
+    applied_additions: int = 0
+    applied_deletions: int = 0
+    redundant_events: int = 0
+    common_shrinkage: int = 0
+    compactions: int = 0
+    retired_snapshots: int = 0
+    freed_edges: int = 0
+
+
+@dataclasses.dataclass
+class LiveSequence:
+    """A mutable evolving sequence a live ``SnapshotStore`` grows over.
+
+    Duck-types ``repro.graph.generators.EvolvingSequence`` (``num_nodes``,
+    ``snapshot_keys``, ``additions``, ``deletions``, ``weights_for``,
+    ``num_snapshots``) but holds *lists* that ``append`` extends — the
+    store reads ``num_snapshots`` dynamically, so snapshots cut after the
+    store was built are fully first-class. Compaction may replace retired
+    entries with ``None`` placeholders; absolute snapshot indices never
+    shift. Weights are the same pure key hash as the precomputed path
+    (``weight_seed``), which is what makes live replay bit-identical to
+    ``make_evolving_sequence`` inputs.
+    """
+
+    num_nodes: int
+    snapshot_keys: "list[np.ndarray | None]" = dataclasses.field(
+        default_factory=list)
+    additions: "list[np.ndarray | None]" = dataclasses.field(
+        default_factory=list)
+    deletions: "list[np.ndarray | None]" = dataclasses.field(
+        default_factory=list)
+    weight_seed: int = 0
+
+    @property
+    def num_snapshots(self) -> int:
+        """Snapshots cut so far (compaction never shrinks this)."""
+        return len(self.snapshot_keys)
+
+    def weights_for(self, keys: np.ndarray) -> np.ndarray:
+        """Per-edge weights: the same pure key hash as EvolvingSequence."""
+        return edge_weights(keys, self.weight_seed)
+
+    def append(self, keys: np.ndarray, added: np.ndarray,
+               deleted: np.ndarray) -> int:
+        """Append one cut snapshot + its transition Δ pair; returns its index.
+
+        The first snapshot has no incoming transition, so ``added``/
+        ``deleted`` are recorded only from the second snapshot on —
+        keeping ``len(additions) == num_snapshots - 1`` exactly like
+        ``EvolvingSequence``. Reached only via ``SnapshotStore.ingest_cut``
+        (graphlint G009 flags other callers).
+        """
+        idx = len(self.snapshot_keys)
+        self.snapshot_keys.append(keys)
+        if idx > 0:
+            self.additions.append(added)
+            self.deletions.append(deleted)
+        return idx
+
+
+class EdgeLog:
+    """Append-only edge-event log with bounded-buffer backpressure.
+
+    Producers call :meth:`append` (or :meth:`extend`); the paired
+    :class:`Watermark` consumes buffered events at each ``cut()``. Events
+    may arrive out of timestamp order as long as they are above the last
+    cut's watermark — at or below it they are **late**, rejected and
+    metered (``late_events``).
+
+    ``max_pending_events`` bounds the pending buffer; ``policy`` picks
+    what happens at the bound:
+
+    * ``"block"`` — refuse the event: meter one ``stalls`` and raise
+      :class:`BackpressureStall`; the producer must cut first.
+    * ``"drop"`` — discard the event (lossy), metered as ``dropped``.
+    * ``"spill"`` — divert to an unbounded spill buffer (lossless,
+      metered as ``spilled``); spilled events rejoin at the next cut in
+      timestamp-then-arrival order, so results stay deterministic.
+    """
+
+    def __init__(self, num_nodes: int, *,
+                 max_pending_events: "int | None" = None,
+                 policy: str = "block",
+                 metrics: "IngestMetrics | None" = None):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {policy!r}")
+        if max_pending_events is not None and max_pending_events < 1:
+            raise ValueError(f"max_pending_events must be >= 1, "
+                             f"got {max_pending_events}")
+        self.num_nodes = num_nodes
+        self.max_pending_events = max_pending_events
+        self.policy = policy
+        self.metrics = metrics if metrics is not None else IngestMetrics()
+        self._pending: "list[tuple[int, EdgeEvent]]" = []  # (arrival, event)
+        self._spill: "list[tuple[int, EdgeEvent]]" = []
+        self._arrivals = itertools.count()
+        self._sealed_ts: "int | None" = None   # last cut watermark
+        self._latest_ts = 0                    # default-ts tick
+
+    def append(self, src: int, dst: int, w: "float | None" = None,
+               op: str = "add", ts: "int | None" = None) -> "EdgeEvent | None":
+        """Record one edge event; returns it, or ``None`` if rejected.
+
+        ``ts=None`` stamps the latest timestamp seen so far (0 initially)
+        — events belong to the current tick until the producer stamps a
+        later one. Late events (``ts`` at or below the last cut) are
+        rejected and metered; a full buffer applies the backpressure
+        policy (see class docstring).
+        """
+        if op not in OPS:
+            raise ValueError(f"op must be one of {OPS}, got {op!r}")
+        if not (0 <= src < self.num_nodes and 0 <= dst < self.num_nodes):
+            raise ValueError(f"edge ({src}, {dst}) out of range for "
+                             f"{self.num_nodes} nodes")
+        if ts is None:
+            ts = self._latest_ts
+        ts = int(ts)
+        if self._sealed_ts is not None and ts <= self._sealed_ts:
+            self.metrics.late_events += 1
+            return None
+        event = EdgeEvent(ts, int(src), int(dst), op,
+                          None if w is None else float(w))
+        if (self.max_pending_events is not None
+                and len(self._pending) >= self.max_pending_events):
+            if self.policy == "block":
+                self.metrics.stalls += 1
+                raise BackpressureStall(
+                    f"EdgeLog pending buffer full "
+                    f"({self.max_pending_events} events): cut the "
+                    "watermark before appending more")
+            if self.policy == "drop":
+                self.metrics.dropped += 1
+                return None
+            self.metrics.spilled += 1
+            self._spill.append((next(self._arrivals), event))
+        else:
+            self._pending.append((next(self._arrivals), event))
+        self.metrics.events += 1
+        self._latest_ts = max(self._latest_ts, ts)
+        return event
+
+    def extend(self, events) -> int:
+        """Append an iterable of :class:`EdgeEvent`; returns the accepted count.
+
+        Backpressure applies per event (a ``"block"`` stall propagates);
+        late/dropped events do not count.
+        """
+        accepted = 0
+        for ev in events:
+            if self.append(ev.src, ev.dst, w=ev.w, op=ev.op,
+                           ts=ev.ts) is not None:
+                accepted += 1
+        return accepted
+
+    def pending_events(self) -> int:
+        """Events buffered (pending + spilled) and not yet cut."""
+        return len(self._pending) + len(self._spill)
+
+    def _take_upto(self, ts: int) -> "list[EdgeEvent]":
+        """Remove and return every buffered event with ``event.ts <= ts``,
+        sorted by (timestamp, arrival order) — the cut's deterministic
+        consumption order, spill included."""
+        taken, kept_p, kept_s = [], [], []
+        for bucket, kept in ((self._pending, kept_p), (self._spill, kept_s)):
+            for arrival, ev in bucket:
+                (taken if ev.ts <= ts else kept).append((arrival, ev))
+        self._pending, self._spill = kept_p, kept_s
+        taken.sort(key=lambda item: (item[1].ts, item[0]))
+        return [ev for _, ev in taken]
+
+    def _seal(self, ts: int) -> None:
+        """Mark ``ts`` consumed: later appends at or below it are late."""
+        if self._sealed_ts is None or ts > self._sealed_ts:
+            self._sealed_ts = ts
+
+
+class Watermark:
+    """Watermark-based snapshot cuts over one ``EdgeLog``/``SnapshotStore``.
+
+    ``advance(ts)`` declares "every event at or below ``ts`` has
+    arrived"; ``cut()`` then materializes those events as ONE new
+    snapshot + Δ-batch pair — the only sanctioned
+    ``SnapshotStore.ingest_cut`` call site (graphlint rule G009).
+    Between cuts the watermark also maintains the running common graph
+    online (module docstring: ``T(lo, k+1) = T(lo, k) ∖ dels_k``) and,
+    via :meth:`compact`, drives snapshot retirement.
+    """
+
+    def __init__(self, log: EdgeLog, store: SnapshotStore):
+        self.log = log
+        self.store = store
+        self.metrics = log.metrics
+        self._ts: "int | None" = None
+        self._common: "np.ndarray | None" = None
+        self._common_lo = 0
+
+    @property
+    def ts(self) -> "int | None":
+        """Current watermark timestamp (``None`` before any advance)."""
+        return self._ts
+
+    def advance(self, ts: int) -> "Watermark":
+        """Move the watermark forward (monotone; regressions raise)."""
+        ts = int(ts)
+        if self._ts is not None and ts < self._ts:
+            raise ValueError(f"watermark cannot regress: {ts} < {self._ts}")
+        self._ts = ts
+        return self
+
+    def cut(self) -> "int | None":
+        """Materialize one snapshot from all events at or below the watermark.
+
+        Consumes the log's eligible events in (timestamp, arrival) order
+        with last-op-wins semantics per edge, filters no-ops (add of a
+        present edge, delete of an absent one — metered as
+        ``redundant_events``), and installs the new snapshot + canonical
+        Δ pair via ``SnapshotStore.ingest_cut`` together with the
+        incrementally maintained common graph. Returns the new snapshot
+        index — or ``None`` when no eligible event arrived and a snapshot
+        already exists (an empty cut never duplicates a snapshot). The
+        consumed timestamp range is sealed: appending at or below it
+        afterwards is late.
+        """
+        if self._ts is None:
+            raise ValueError("advance() the watermark before cutting")
+        store, metrics = self.store, self.metrics
+        events = self.log._take_upto(self._ts)
+        num_before = store.seq.num_snapshots
+        if not events and num_before > 0:
+            self.log._seal(self._ts)
+            return None
+        if num_before:
+            current = store.window_keys(num_before - 1, num_before - 1)
+        else:
+            current = np.empty(0, np.int64)
+
+        last_op: "dict[int, str]" = {}
+        for ev in events:
+            key = int(edge_keys(np.int64(ev.src), np.int64(ev.dst),
+                                store.num_nodes))
+            last_op[key] = ev.op
+        add_keys = np.sort(np.array(
+            [k for k, op in last_op.items() if op == "add"], dtype=np.int64))
+        del_keys = np.sort(np.array(
+            [k for k, op in last_op.items() if op == "del"], dtype=np.int64))
+        add_is_new = ~np.isin(add_keys, current, assume_unique=True)
+        del_is_present = np.isin(del_keys, current, assume_unique=True)
+        applied_adds = add_keys[add_is_new]
+        applied_dels = del_keys[del_is_present]
+        metrics.redundant_events += (len(events) - len(last_op)
+                                     + int((~add_is_new).sum())
+                                     + int((~del_is_present).sum()))
+        metrics.applied_additions += int(applied_adds.shape[0])
+        metrics.applied_deletions += int(applied_dels.shape[0])
+        new_keys = merge_changes(current, applied_adds, applied_dels)
+
+        if num_before == 0:
+            # First cut: the snapshot IS the running common graph.
+            self._common, self._common_lo = new_keys, store.first_live
+            idx = store.ingest_cut(new_keys,
+                                   np.empty(0, np.int64),
+                                   np.empty(0, np.int64))
+        else:
+            if self._common is None or self._common_lo != store.first_live:
+                # (Re)base after compaction moved the live window.
+                self._common = store.window_keys(store.first_live,
+                                                 num_before - 1)
+                self._common_lo = store.first_live
+            # The incremental deletion-to-addition conversion: additions
+            # are disjoint from the previous snapshot (hence from its
+            # intersection), so only deletions shrink the common graph.
+            shrunk = np.setdiff1d(self._common, applied_dels,
+                                  assume_unique=True)
+            metrics.common_shrinkage += int(self._common.shape[0]
+                                            - shrunk.shape[0])
+            self._common = shrunk
+            idx = store.ingest_cut(new_keys, applied_adds, applied_dels,
+                                   common=shrunk,
+                                   common_lo=self._common_lo)
+        metrics.cuts += 1
+        self.log._seal(self._ts)
+        return idx
+
+    def compact(self, before: "int | None" = None):
+        """Retire snapshots via ``SnapshotStore.compact`` and meter it.
+
+        Forwards to the store (which clamps the horizon to every
+        registered floor and every pinned "AS" anchor), accumulates
+        ``compactions``/``retired_snapshots``/``freed_edges``, and — when
+        anything was retired — marks the running common graph for lazy
+        rebasing at the next cut (the old intersection spanned retired
+        snapshots and would under-approximate the narrower live window).
+        Returns the store's ``CompactionStats``.
+        """
+        stats = self.store.compact(before)
+        self.metrics.compactions += 1
+        self.metrics.retired_snapshots += stats.retired
+        self.metrics.freed_edges += stats.freed_edges
+        if stats.retired:
+            self._common = None
+        return stats
+
+
+class LiveWindowFeed:
+    """Emits slide windows the moment their newest snapshot is cut.
+
+    The bridge between ingestion and the query layers: attach one feed to
+    one ``WindowStream(feed=...)`` (or ``QueryService.register(...,
+    feed=...)`` client) and ``poll()`` after cuts — each width-``width``
+    window ``(lo, lo + width - 1)`` is *born* when snapshot
+    ``lo + width - 1`` exists, so consumers block on the watermark
+    instead of a precomputed window list. The feed also registers a
+    compaction floor under its name: the store may never retire a
+    snapshot an unconsumed (or future) window still needs. One feed
+    serves one consumer (it holds a single emission cursor).
+    """
+
+    def __init__(self, store: SnapshotStore, width: int, step: int = 1,
+                 name: "str | None" = None):
+        if width < 1:
+            raise ValueError(f"width must be >= 1, got {width}")
+        if step < 1:
+            raise ValueError(f"step must be >= 1, got {step}")
+        self.store = store
+        self.width = width
+        self.step = step
+        self.name = name if name is not None else f"feed-{next(_FEED_COUNTER)}"
+        self.next_lo = store.first_live
+        store.set_floor(self.name, self.next_lo)
+
+    def poll(self) -> "list[tuple[int, int]]":
+        """Windows born since the last poll (empty when none), in order."""
+        born = []
+        last = self.store.seq.num_snapshots - 1
+        while self.next_lo + self.width - 1 <= last:
+            born.append((self.next_lo, self.next_lo + self.width - 1))
+            self.next_lo += self.step
+        return born
+
+    def advance_floor(self, lo: "int | None" = None) -> None:
+        """Report consumer progress: the oldest snapshot still needed.
+
+        ``lo`` is the consumer's first *unconsumed* window low (``None``
+        = fully drained, the floor moves to the next unborn window's
+        low). Compaction can then retire everything older.
+        """
+        floor = self.next_lo if lo is None else min(int(lo), self.next_lo)
+        self.store.set_floor(self.name, floor)
+
+    def close(self) -> None:
+        """Withdraw the feed's compaction floor (consumer finished)."""
+        self.store.drop_floor(self.name)
+
+
+def events_from_sequence(seq) -> "list[EdgeEvent]":
+    """Flatten an evolving sequence into a replayable edge-event trace.
+
+    Timestamp 0 carries every edge of snapshot 0 as an add; timestamp
+    ``t + 1`` carries transition ``t``'s deletions then additions.
+    Replaying the trace with one cut per distinct timestamp
+    (:func:`replay_events`) reproduces ``seq`` exactly — same snapshot
+    key sets, same canonical Δ-batches — which is the bit-identity
+    contract ``bench_ingest`` and tests/test_ingest.py gate.
+    """
+    events: "list[EdgeEvent]" = []
+
+    def emit(ts: int, keys: np.ndarray, op: str) -> None:
+        src, dst = keys_to_edges(keys, seq.num_nodes)
+        events.extend(EdgeEvent(ts, int(s), int(d), op)
+                      for s, d in zip(src, dst))
+
+    emit(0, seq.snapshot_keys[0], "add")
+    for t in range(len(seq.additions)):
+        emit(t + 1, seq.deletions[t], "del")
+        emit(t + 1, seq.additions[t], "add")
+    return events
+
+
+def replay_events(log: EdgeLog, watermark: Watermark, events, *,
+                  on_cut=None) -> "list[int]":
+    """Drive a ts-sorted event trace through log → watermark → cuts.
+
+    Appends each event and cuts once per distinct timestamp (the trace's
+    tick = one snapshot), calling ``on_cut(snapshot_index)`` after each
+    materialized cut — the hook where a live consumer drains its
+    ``WindowStream`` or turns its ``QueryService``. Under the ``"block"``
+    policy the bounded buffer must hold one tick's events (the cut at
+    every boundary empties it); ``"spill"`` replays any trace losslessly;
+    ``"drop"`` replays lossily (no bit-identity). Returns the cut
+    snapshot indices.
+    """
+    cuts: "list[int]" = []
+
+    def cut_now(ts: int) -> None:
+        idx = watermark.advance(ts).cut()
+        if idx is not None:
+            cuts.append(idx)
+            if on_cut is not None:
+                on_cut(idx)
+
+    prev_ts: "int | None" = None
+    for ev in events:
+        if prev_ts is not None and ev.ts < prev_ts:
+            raise ValueError(
+                f"replay_events needs a ts-sorted trace: {ev.ts} after "
+                f"{prev_ts} (sort the events, or feed the log directly)")
+        if prev_ts is not None and ev.ts > prev_ts:
+            cut_now(prev_ts)
+        log.append(ev.src, ev.dst, w=ev.w, op=ev.op, ts=ev.ts)
+        prev_ts = ev.ts
+    if prev_ts is not None:
+        cut_now(prev_ts)
+    return cuts

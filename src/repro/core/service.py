@@ -84,7 +84,12 @@ class ServiceClient:
     latencies; the service owns scheduling. ``horizon`` is the last
     snapshot index the client may ever query (defaults to the store's
     final snapshot): launch anchors widen to it, which keeps successive
-    anchors nested so anchor maintenance stays incremental.
+    anchors nested so anchor maintenance stays incremental. A live
+    ``feed`` (``ingest.LiveWindowFeed``) makes the horizon grow instead:
+    each service turn polls the feed and admits windows the watermark has
+    born, widening ``horizon`` to their newest snapshot — a horizon jump
+    makes the previous anchor non-covering, so the next launch soundly
+    rebuilds (or hops to) the wider anchor.
     """
 
     name: str
@@ -96,6 +101,7 @@ class ServiceClient:
     gated: bool = False
     cg_split: int = 1
     track_parents: bool = False
+    feed: "object | None" = None
     results: "dict[Window, jnp.ndarray]" = dataclasses.field(
         default_factory=dict)
     latencies_s: "list[float]" = dataclasses.field(default_factory=list)
@@ -258,7 +264,8 @@ class QueryService:
                  campaign_width: int = 4, name: "str | None" = None,
                  horizon: "int | None" = None, max_iters: int = 10_000,
                  gated: bool = False, cg_split: int = 1,
-                 track_parents: bool = False) -> ServiceClient:
+                 track_parents: bool = False,
+                 feed: "object | None" = None) -> ServiceClient:
         """Add a client; returns its :class:`ServiceClient` handle.
 
         ``campaign_width`` (int, ≤ ``lane_budget``) bounds the windows
@@ -268,6 +275,13 @@ class QueryService:
         solo streams). The client joins the :class:`AnchorChain` for its
         query key (created on first use), pinning shared anchor states
         until it advances past them or unregisters.
+
+        ``feed`` attaches a live window source (``ingest.LiveWindowFeed``):
+        instead of :meth:`submit` calls, every turn polls the feed and
+        admits windows born by watermark cuts (``horizon`` then grows with
+        the cuts; see :class:`ServiceClient`). The feed's compaction floor
+        is advanced as this client's windows complete and withdrawn at
+        :meth:`unregister`.
         """
         if campaign_width == CAMPAIGN_AUTO:
             raise ValueError(
@@ -292,7 +306,7 @@ class QueryService:
             name=name, semiring=semiring, source=source,
             stream=WindowStream(campaign_width, name=name), horizon=horizon,
             max_iters=max_iters, gated=gated, cg_split=cg_split,
-            track_parents=track_parents)
+            track_parents=track_parents, feed=feed)
         chain = self._chains.setdefault(
             client.qkey,
             AnchorChain(self.store, name=f"svc-chain-{len(self._chains)}"))
@@ -333,6 +347,8 @@ class QueryService:
                 f"client {client.name!r} still has {len(client.pending())} "
                 "pending windows — drain before unregistering")
         self._chains[client.qkey].unregister(client.stream)
+        if client.feed is not None:
+            client.feed.close()  # withdraw the compaction floor
         self.clients.remove(client)
         if self.clients:
             self._rr %= len(self.clients)
@@ -352,8 +368,10 @@ class QueryService:
         compatibility groups and runs each group as one batched launch.
         Returns this turn's :class:`LaunchRecord`\\ s (empty when no
         client had pending work — an idle turn is a no-op and is not
-        counted).
+        counted). Clients with a live ``feed`` are polled first, so
+        windows born since the last turn are admitted before selection.
         """
+        self._poll_feeds()
         t0 = time.perf_counter()
         selected = self._select()
         if not selected:
@@ -362,6 +380,7 @@ class QueryService:
                    for group, chunk in self._pack(selected)]
         self._metrics.turns += 1
         self._metrics.wall_s += time.perf_counter() - t0
+        self._report_feeds()
         return records
 
     def drain(self, max_turns: int = 10_000) -> ServiceMetrics:
@@ -372,6 +391,7 @@ class QueryService:
         bug, so it fails loudly instead of spinning.
         """
         turns = 0
+        self._poll_feeds()  # admit already-born live windows up front
         while self.pending():
             self.turn()
             turns += 1
@@ -385,6 +405,37 @@ class QueryService:
         return self._metrics
 
     # -- scheduling internals -------------------------------------------------
+
+    def _poll_feeds(self) -> int:
+        """Admit windows born from live feeds since the last poll.
+
+        For each feed-backed client: poll the feed, widen the client's
+        ``horizon`` to the newest born snapshot (anchors widen with it —
+        the previous anchor stops covering, so the next launch soundly
+        re-anchors), and route the windows through :meth:`submit` so the
+        admitted/latency bookkeeping is identical to open-loop clients.
+        Count-based and sync-free, like all scheduling here (G007).
+        """
+        admitted = 0
+        for client in self.clients:
+            if client.feed is None:
+                continue
+            born = client.feed.poll()
+            if born:
+                client.horizon = max(client.horizon,
+                                     max(w[1] for w in born))
+                admitted += self.submit(client, born)
+        return admitted
+
+    def _report_feeds(self) -> None:
+        """Advance live feeds' compaction floors to consumption progress:
+        the oldest snapshot a client still needs is its first unconsumed
+        window's lo (``None`` = fully drained)."""
+        for client in self.clients:
+            if client.feed is None:
+                continue
+            rest = client.stream.pending()
+            client.feed.advance_floor(rest[0][0] if rest else None)
 
     def _select(self) -> "list[tuple[ServiceClient, list[Window]]]":
         """Round-robin draw: ≤ one campaign per ready client, ≤ turn_budget

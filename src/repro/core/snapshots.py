@@ -52,6 +52,7 @@ Store contract (what every executor may assume):
 
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 
 import numpy as np
@@ -102,6 +103,45 @@ def anchor_tag(qkey: tuple, window: "tuple[int, int]") -> tuple:
     return ("AS", qkey, tuple(window))
 
 
+@dataclasses.dataclass(frozen=True)
+class CompactionStats:
+    """What one :meth:`SnapshotStore.compact` call retired.
+
+    ``horizon`` is the first snapshot index kept live after clamping to
+    every registered floor and pinned "AS" anchor; ``retired`` counts
+    snapshots actually freed this call; ``freed_edges`` sums the host-side
+    key/Δ array entries released. ``retired == 0`` (horizon already live,
+    or clamped all the way back) is a legal no-op result.
+    """
+
+    horizon: int
+    retired: int
+    freed_edges: int
+
+
+def _tag_min_index(tag: tuple) -> "int | None":
+    """Smallest snapshot index a cached block tag depends on (None = keep).
+
+    Families: ``("T", i, j)`` / ``("Ts", i, j, n, k)`` depend on ``i``;
+    ``("D", parent, child)`` and ``("DS", lanes, *hops)`` on the smallest
+    window low across their hop windows; ``("A", t)`` on transition ``t``
+    (snapshot ``t`` → ``t+1``); ``("AS", qkey, (i, j))`` on ``i``. Unknown
+    families are kept — compaction must never guess an entry stale.
+    """
+    fam = tag[0]
+    if fam in ("T", "Ts"):
+        return int(tag[1])
+    if fam == "D":
+        return min(int(tag[1][0]), int(tag[2][0]))
+    if fam == "DS":
+        return min(int(w[0]) for hop in tag[2:] for w in hop)
+    if fam == "A":
+        return int(tag[1])
+    if fam == "AS":
+        return int(tag[2][0])
+    return None
+
+
 def _block_nbytes(blk) -> int:
     # Cached entries that know their own footprint (engine QueryStates via
     # the ``nbytes`` hook) report it; raw EdgeBlocks are summed directly.
@@ -136,6 +176,8 @@ class SnapshotStore:
         self._cached_nbytes = 0
         self._pins: dict[tuple, int] = {}   # tag -> refcount (see pin())
         self.evictions = 0  # lifetime count, for tests/benchmarks
+        self.first_live = 0  # oldest non-retired snapshot (see compact())
+        self._floors: dict[str, int] = {}   # name -> oldest index needed
 
     # -- block cache (LRU by bytes + explicit release) -------------------------
 
@@ -280,6 +322,10 @@ class SnapshotStore:
             return self._t[(i, j)]
         if j < i:
             raise ValueError(f"window ({i}, {j}) is empty: need i <= j")
+        if i < self.first_live:
+            raise ValueError(
+                f"window ({i}, {j}) reaches below first_live="
+                f"{self.first_live}: snapshot {i} was retired by compact()")
         k = j
         while (i, k) not in self._t:
             k -= 1
@@ -374,8 +420,12 @@ class SnapshotStore:
         """Standalone single-block view of S_i (used by from-scratch baselines)."""
         return EdgeView((self.window_block(i, i),), self.num_nodes)
 
-    def common_graph_view(self, i: int = 0, j: int | None = None) -> EdgeView:
-        """Single-block view of T(i, j); defaults to the global common graph."""
+    def common_graph_view(self, i: int | None = None,
+                          j: int | None = None) -> EdgeView:
+        """Single-block view of T(i, j); defaults to the global common graph
+        over the live range (``first_live`` .. last snapshot)."""
+        if i is None:
+            i = self.first_live
         if j is None:
             j = self.seq.num_snapshots - 1
         return EdgeView((self.window_block(i, j),), self.num_nodes)
@@ -389,6 +439,118 @@ class SnapshotStore:
     def deletion_keys(self, t: int) -> np.ndarray:
         """Keys deleted at transition t → t+1 (KickStarter baseline input)."""
         return self.seq.deletions[t]
+
+    # -- live ingestion (core/ingest.py) ---------------------------------------
+    #
+    # The one write path that grows the store after construction. A live
+    # store wraps a mutable sequence (ingest.LiveSequence); `ingest_cut`
+    # appends one snapshot + canonical Δ pair per watermark cut, and
+    # `compact` retires snapshots no registered window floor or pinned "AS"
+    # anchor still needs. Graphlint rule G009 confines `ingest_cut` calls to
+    # `Watermark.cut` and bans ad-hoc cache writes from ingestion paths.
+
+    def ingest_cut(self, keys: np.ndarray, added: np.ndarray,
+                   deleted: np.ndarray, common: "np.ndarray | None" = None,
+                   common_lo: "int | None" = None) -> int:
+        """Install one cut snapshot + Δ pair; returns its index.
+
+        The ingestion write path (called from ``ingest.Watermark.cut`` —
+        graphlint G009 flags any other caller): appends to the live
+        sequence, registers the new diagonal ``(idx, idx)`` in the window
+        cache (``window_keys``' prefix scan requires every diagonal), and,
+        when the watermark passes its incrementally maintained common
+        graph (``common`` spanning ``[common_lo .. idx]``), installs it so
+        anchor queries at the live base pay no re-intersection. Requires a
+        mutable sequence (``ingest.LiveSequence``); a frozen
+        ``EvolvingSequence`` store is input-only and raises ``TypeError``.
+        """
+        append = getattr(self.seq, "append", None)
+        if append is None:
+            raise TypeError(
+                "ingest_cut needs a mutable live sequence "
+                "(ingest.LiveSequence); EvolvingSequence stores are "
+                "precomputed inputs")
+        idx = append(keys, added, deleted)
+        self._t[(idx, idx)] = keys
+        if common is not None and common_lo is not None and common_lo != idx:
+            self._t[(common_lo, idx)] = common
+        return idx
+
+    def set_floor(self, name: str, index: int) -> None:
+        """Register/advance a named compaction floor: "snapshots older than
+        ``index`` are no longer needed by this consumer". ``compact`` clamps
+        its horizon to the minimum registered floor, so a consumer that
+        never advances its floor simply prevents retirement."""
+        self._floors[name] = int(index)
+
+    def drop_floor(self, name: str) -> None:
+        """Withdraw a named floor (missing names are a no-op)."""
+        self._floors.pop(name, None)
+
+    @property
+    def stored_edges(self) -> int:
+        """Host-side edge entries currently stored (snapshot keys + Δ pairs).
+
+        The compaction yardstick: ``compact`` must strictly shrink this
+        when it retires anything (acceptance criterion of the ingestion
+        PR). Retired entries are ``None`` and count zero.
+        """
+        seq = self.seq
+        arrays = list(seq.snapshot_keys) + list(seq.additions) \
+            + list(seq.deletions)
+        return sum(int(a.shape[0]) for a in arrays if a is not None)
+
+    def compact(self, before: "int | None" = None) -> CompactionStats:
+        """Retire snapshots older than every consumer still needs.
+
+        The horizon starts at ``before`` (default: the latest snapshot)
+        and clamps DOWN to (a) every floor registered via
+        :meth:`set_floor` — live window feeds keep the snapshots their
+        unconsumed windows span — and (b) every pinned "AS" anchor's
+        window low: a pinned anchor state is a promise some stream will
+        hop from it, and the hop's Δ keys need the anchor window's
+        intersection. Snapshots below the clamped horizon are freed
+        (host key/Δ arrays become ``None`` placeholders so absolute
+        indices never shift), stale window-cache entries and device
+        blocks referencing them are purged (pinned tags skipped — they are
+        unreachable only until unpinned), and ``first_live`` advances.
+        Requires a mutable live sequence, like :meth:`ingest_cut`.
+        """
+        seq = self.seq
+        if not isinstance(seq.snapshot_keys, list):
+            raise TypeError(
+                "compact needs a mutable live sequence "
+                "(ingest.LiveSequence); EvolvingSequence stores are "
+                "precomputed inputs")
+        horizon = seq.num_snapshots - 1 if before is None else int(before)
+        for floor in self._floors.values():
+            horizon = min(horizon, floor)
+        for tag in self._pins:
+            if tag[0] == "AS":
+                horizon = min(horizon, int(tag[2][0]))
+        horizon = max(horizon, self.first_live)
+        freed = 0
+        for i in range(self.first_live, horizon):
+            freed += int(seq.snapshot_keys[i].shape[0])
+            seq.snapshot_keys[i] = None
+            if seq.additions[i] is not None:
+                freed += int(seq.additions[i].shape[0])
+                freed += int(seq.deletions[i].shape[0])
+                seq.additions[i] = None
+                seq.deletions[i] = None
+        retired = horizon - self.first_live
+        if retired:
+            for w in [w for w in self._t if w[0] < horizon]:
+                del self._t[w]
+            for tag in list(self._blocks):
+                low = _tag_min_index(tag)
+                if low is not None and low < horizon \
+                        and not self._pins.get(tag):
+                    self._cached_nbytes -= _block_nbytes(
+                        self._blocks.pop(tag))
+            self.first_live = horizon
+        return CompactionStats(horizon=horizon, retired=retired,
+                               freed_edges=freed)
 
     # -- sliding windows (full-paper feature) -----------------------------------
     #
@@ -409,7 +571,7 @@ class SnapshotStore:
         additions only) — see tests/test_core.py::test_sliding_window_hop.
         """
         if anchor is None:
-            anchor = (0, self.seq.num_snapshots - 1)
+            anchor = (self.first_live, self.seq.num_snapshots - 1)
         return self.delta_block(anchor, new_window)
 
     def slide_stack(self, windows: "list[tuple[int, int]]",
@@ -425,6 +587,6 @@ class SnapshotStore:
         ``num_lanes`` buckets the lane axis exactly as in ``delta_stack``.
         """
         if anchor is None:
-            anchor = (0, self.seq.num_snapshots - 1)
+            anchor = (self.first_live, self.seq.num_snapshots - 1)
         return self.delta_stack([(anchor, w) for w in windows],
                                 num_lanes=num_lanes)

@@ -388,12 +388,20 @@ class WindowStream:
     incremental. ``name`` identifies the stream to an :class:`AnchorChain`
     when several overlapping streams share one (auto-generated unless
     given).
+
+    ``feed`` attaches a live window source (``ingest.LiveWindowFeed``):
+    the stream then blocks on the watermark instead of a precomputed
+    list — every ``pending``/``take``/``take_next`` first polls the feed
+    for windows born by new snapshot cuts, and every consumption reports
+    progress back so the feed's compaction floor tracks the oldest
+    snapshot an unconsumed window still needs.
     """
 
     campaign_width: "int | str"
     windows: "list[Window]" = dataclasses.field(default_factory=list)
     consumed: int = 0
     name: "str | None" = None
+    feed: "object | None" = None
 
     def __post_init__(self):
         if not _valid_campaign_width(self.campaign_width):
@@ -404,6 +412,22 @@ class WindowStream:
         _validate_advancing(self.windows)
         if self.name is None:
             self.name = f"stream-{next(_STREAM_COUNTER)}"
+        self._sync_feed()
+
+    def _sync_feed(self) -> None:
+        # Pull windows born from the live feed since the last poll. Duck-
+        # typed (anything with poll()) so window.py never imports ingest.py.
+        if self.feed is not None:
+            born = self.feed.poll()
+            if born:
+                self.extend(born)
+
+    def _report_feed(self) -> None:
+        # Report consumption so the feed's compaction floor advances: the
+        # oldest snapshot still needed is the first unconsumed window's lo.
+        if self.feed is not None:
+            rest = self.windows[self.consumed:]
+            self.feed.advance_floor(rest[0][0] if rest else None)
 
     def extend(self, windows: "list[Window]") -> "WindowStream":
         """Append newly arrived windows (must keep the sequence advancing)."""
@@ -414,13 +438,18 @@ class WindowStream:
         return self
 
     def pending(self) -> "list[Window]":
-        """Windows buffered but not yet consumed by the executor."""
+        """Windows buffered but not yet consumed by the executor.
+
+        With a live ``feed``, polls it first so freshly cut windows count.
+        """
+        self._sync_feed()
         return self.windows[self.consumed:]
 
     def take(self) -> "list[Window]":
         """Drain and return the pending windows (executor entry point)."""
         out = self.pending()
         self.consumed = len(self.windows)
+        self._report_feed()
         return out
 
     def take_next(self, count: int) -> "list[Window]":
@@ -429,10 +458,14 @@ class WindowStream:
         The query service's bounded per-turn draw: one scheduler turn takes
         at most a campaign's worth of windows from each stream so no client
         monopolizes a turn (``take()`` drains everything — the
-        stream-at-a-time executor's entry point).
+        stream-at-a-time executor's entry point). With a live ``feed`` this
+        is the blocking-on-the-watermark call: it returns only windows
+        whose newest snapshot has been cut, possibly none.
         """
+        self._sync_feed()
         out = self.windows[self.consumed:self.consumed + count]
         self.consumed += len(out)
+        self._report_feed()
         return out
 
 

@@ -220,3 +220,18 @@ def keys_to_edges(keys: np.ndarray, num_nodes: int) -> tuple[np.ndarray, np.ndar
     src = (keys // num_nodes).astype(np.int32)
     dst = (keys % num_nodes).astype(np.int32)
     return src, dst
+
+
+def merge_changes(keys: np.ndarray, add_keys: np.ndarray,
+                  del_keys: np.ndarray) -> np.ndarray:
+    """Apply one change batch to a sorted key set: ``(keys ∖ del) ∪ add``.
+
+    The one transition rule shared by the offline generator
+    (``make_evolving_sequence``) and the live ingestion cut
+    (``core/ingest.py``) — sharing it is what makes a replayed event trace
+    bit-identical to its precomputed counterpart. All three inputs must be
+    sorted unique key arrays with ``del_keys ⊆ keys`` and
+    ``add_keys ∩ keys = ∅`` already enforced by the caller.
+    """
+    out = np.setdiff1d(keys, del_keys, assume_unique=True)
+    return np.union1d(out, add_keys)

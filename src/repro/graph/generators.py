@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.graph.edgeset import edge_keys, keys_to_edges
+from repro.graph.edgeset import edge_keys, keys_to_edges, merge_changes
 
 
 def rmat_edges(
@@ -118,8 +118,7 @@ def make_evolving_sequence(
             cand = cand[~np.isin(cand, current)]
             add_keys = np.unique(np.concatenate([add_keys, cand]))
         add_keys = np.sort(rng.permutation(add_keys)[:half])
-        nxt = np.setdiff1d(current, del_keys, assume_unique=True)
-        nxt = np.union1d(nxt, add_keys)
+        nxt = merge_changes(current, add_keys, del_keys)
         snaps.append(nxt)
         adds.append(add_keys)
         dels.append(del_keys)

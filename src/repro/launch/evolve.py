@@ -27,6 +27,12 @@ slide/anchor/padding volumes of the plan it picked (docs/STREAMING.md).
 dhb/wsb, windows for --window-batch) over a 1-D ``data`` mesh spanning all
 local devices (launch/mesh.py::make_snapshot_mesh) — on one CPU device it
 is a no-op, on a multi-chip host each launch's lanes split across chips.
+
+``--ingest`` builds the store by replaying the generated sequence as a
+seeded edge-event firehose instead of loading it precomputed: every
+snapshot is born from a ``Watermark.cut`` over an ``EdgeLog``
+(core/ingest.py), asserted bit-identical to the precomputed sequence, and
+every mode below then runs over the cut-born store (docs/INGESTION.md).
 """
 
 from __future__ import annotations
@@ -37,7 +43,12 @@ import time
 import numpy as np
 
 from repro.core import (
+    EdgeLog,
+    IngestMetrics,
+    LiveSequence,
     SnapshotStore,
+    Watermark,
+    events_from_sequence,
     optimal_plan,
     plan_added_edges,
     run_direct_hop,
@@ -45,6 +56,7 @@ from repro.core import (
     run_kickstarter_stream,
     run_plan,
     run_plan_batched,
+    replay_events,
     run_window_slide,
     run_window_slide_batched,
     run_window_stream_batched,
@@ -69,6 +81,30 @@ def _campaign_width(arg: str):
         raise argparse.ArgumentTypeError(
             f"campaign width must be >= 1, got {width}")
     return width
+
+
+def _ingest_store(seq) -> SnapshotStore:
+    """Replay ``seq`` as a timestamped edge firehose and return the live
+    store its watermark cuts materialize — bit-identical to
+    ``SnapshotStore(seq)`` (asserted), so every downstream mode is
+    oblivious to how its snapshots were born (docs/INGESTION.md)."""
+    metrics = IngestMetrics()
+    store = SnapshotStore(LiveSequence(seq.num_nodes,
+                                       weight_seed=seq.weight_seed))
+    log = EdgeLog(seq.num_nodes, metrics=metrics)
+    watermark = Watermark(log, store)
+    t0 = time.perf_counter()
+    cuts = replay_events(log, watermark, events_from_sequence(seq))
+    wall = time.perf_counter() - t0
+    for i in range(seq.num_snapshots):
+        assert np.array_equal(store.seq.snapshot_keys[i],
+                              seq.snapshot_keys[i]), f"cut {i} diverged"
+    print(f"[evolve] ingest: replayed {metrics.events} events -> "
+          f"{len(cuts)} cuts in {wall:.2f}s "
+          f"(+{metrics.applied_additions}/-{metrics.applied_deletions} "
+          f"applied, common-shrinkage {metrics.common_shrinkage}); "
+          f"snapshots bit-identical to the precomputed sequence")
+    return store
 
 
 def _shard_report(mesh, label: str,
@@ -121,6 +157,11 @@ def main(argv=None):
                         "too — the slide windows consumed as campaigns with "
                         "incremental anchor maintenance (core/window.py "
                         "run_window_stream_batched; composes with --shard)")
+    p.add_argument("--ingest", action="store_true",
+                   help="build the store by replaying the sequence as a "
+                        "seeded edge-event firehose (core/ingest.py) — "
+                        "snapshots are born from watermark cuts, asserted "
+                        "bit-identical, and serve every mode below")
     p.add_argument("--campaign-width", type=_campaign_width, default=4,
                    metavar="C",
                    help="windows per streaming campaign for --stream "
@@ -139,7 +180,7 @@ def main(argv=None):
           f"~{args.edges} edges ({args.changes} changes each) ...")
     seq = make_evolving_sequence(args.nodes, args.edges, args.snapshots,
                                  args.changes, seed=args.seed)
-    store = SnapshotStore(seq)
+    store = _ingest_store(seq) if args.ingest else SnapshotStore(seq)
 
     t0 = time.perf_counter()
     ks_res, ks_stats = run_kickstarter_stream(store, sr, args.source)

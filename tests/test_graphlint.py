@@ -474,6 +474,77 @@ def test_g008_engine_fixpoint_exempt(tmp_path):
     assert findings[0].line > 7  # only the rogue call, not _fixpoint's
 
 
+# -- G009: watermark cut discipline ------------------------------------------
+
+BAD_G009 = """\
+import numpy as np
+
+def sneak_snapshot(store, keys):
+    store.ingest_cut(keys, np.empty(0, np.int64), np.empty(0, np.int64))
+
+def grow_directly(store, keys):
+    store.seq.snapshot_keys.append(keys)
+
+def plant_cache_entry(store, i, j, keys):
+    store._t[(i, j)] = keys
+"""
+
+GOOD_G009 = """\
+def serve_live(watermark, ts):
+    watermark.advance(ts)
+    return watermark.cut()
+
+def retire_old(watermark):
+    return watermark.compact()
+"""
+
+
+def test_g009_bad(tmp_path):
+    # an ad-hoc ingest_cut, a direct sequence append, a planted cache entry
+    findings = lint_snippet(tmp_path, BAD_G009,
+                            relpath="src/repro/launch/firehose.py")
+    assert_only_rule(findings, "G009", count=3)
+    messages = " | ".join(f.message for f in findings)
+    assert "Watermark.cut" in messages
+    assert "window cache" in messages
+    assert "pure-cache" in messages
+
+
+def test_g009_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G009,
+                        relpath="src/repro/launch/firehose.py") == []
+
+
+def test_g009_ingest_cut_exempt_only_inside_cut(tmp_path):
+    # In core/ingest.py: legal from a function named cut, flagged elsewhere.
+    code = ("import numpy as np\n"
+            "class Watermark:\n"
+            "    '''doc'''\n"
+            "    def cut(self):\n"
+            "        '''doc'''\n"
+            "        return self.store.ingest_cut(self.k, self.a, self.d)\n"
+            "    def shortcut(self):\n"
+            "        '''doc'''\n"
+            "        return self.store.ingest_cut(self.k, self.a, self.d)\n")
+    findings = lint_snippet(tmp_path, code,
+                            relpath="src/repro/core/ingest.py",
+                            rules=[get_rule("G009")])
+    assert_only_rule(findings, "G009", count=1)
+    assert findings[0].line > 6  # only shortcut's call, not cut's
+
+
+def test_g009_canonical_module_exempt_for_cache_writes(tmp_path):
+    code = ("class SnapshotStore:\n"
+            "    '''the canonical store module'''\n"
+            "    def ingest_cut(self, keys, added, deleted):\n"
+            "        '''doc'''\n"
+            "        self._t[(0, 0)] = keys\n"
+            "        return 0\n")
+    assert lint_snippet(tmp_path, code,
+                        relpath="src/repro/core/snapshots.py",
+                        rules=[get_rule("G009")]) == []
+
+
 # -- suppressions, engine plumbing, CLI --------------------------------------
 
 def test_line_suppression(tmp_path):
@@ -498,7 +569,8 @@ def test_suppression_is_per_rule(tmp_path):
 
 def test_rule_registry_complete():
     assert [r.id for r in all_rules()] == \
-        ["G001", "G002", "G003", "G004", "G005", "G006", "G007", "G008"]
+        ["G001", "G002", "G003", "G004", "G005", "G006", "G007", "G008",
+         "G009"]
     for rule in all_rules():
         assert rule.title and rule.contract
     with pytest.raises(KeyError):

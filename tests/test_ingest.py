@@ -1,0 +1,340 @@
+"""Live-ingestion contract (core/ingest.py).
+
+Covers the acceptance criteria of the ingestion PR: a replayed edge
+firehose is bit-identical to its precomputed sequence (structure AND
+query values across all five semirings), watermark cuts obey
+last-op-wins / sealing / monotonicity, the three backpressure policies
+meter what they promise, the running common graph is maintained online,
+and compaction strictly shrinks storage while respecting window-feed
+floors. Feed wiring into WindowStream and QueryService is covered here;
+the pinned-"AS" compaction audit lives in tests/test_window_stream.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BackpressureStall,
+    EdgeEvent,
+    EdgeLog,
+    IngestMetrics,
+    LiveSequence,
+    LiveWindowFeed,
+    QueryService,
+    SnapshotStore,
+    Watermark,
+    WindowStream,
+    events_from_sequence,
+    replay_events,
+    run_window_slide_batched,
+    run_window_stream_batched,
+)
+from repro.graph import make_evolving_sequence
+from repro.graph.semiring import ALL_SEMIRINGS
+
+
+def _seq(n=200, e=1400, snaps=5, changes=100, seed=11):
+    return make_evolving_sequence(n, e, snaps, changes, seed=seed)
+
+
+def _live(num_nodes, weight_seed=0, **log_kw):
+    """Fresh (store, log, watermark) triple over an empty live sequence."""
+    store = SnapshotStore(LiveSequence(num_nodes, weight_seed=weight_seed))
+    log = EdgeLog(num_nodes, metrics=IngestMetrics(), **log_kw)
+    return store, log, Watermark(log, store)
+
+
+def _replayed(seq, **log_kw):
+    store, log, wm = _live(seq.num_nodes, seq.weight_seed, **log_kw)
+    cuts = replay_events(log, wm, events_from_sequence(seq))
+    return store, wm, cuts
+
+
+# -- replay bit-identity (the PR's acceptance bar) ----------------------------
+
+def test_replay_bit_identical_structure():
+    """Snapshots + canonical Δ pairs cut from the firehose equal the
+    precomputed sequence exactly, with zero redundancy or loss."""
+    seq = _seq()
+    store, wm, cuts = _replayed(seq)
+    assert cuts == list(range(seq.num_snapshots))
+    for i in range(seq.num_snapshots):
+        np.testing.assert_array_equal(store.seq.snapshot_keys[i],
+                                      seq.snapshot_keys[i])
+    for t in range(seq.num_snapshots - 1):
+        np.testing.assert_array_equal(store.seq.additions[t],
+                                      seq.additions[t])
+        np.testing.assert_array_equal(store.seq.deletions[t],
+                                      seq.deletions[t])
+    m = wm.metrics
+    assert m.cuts == seq.num_snapshots
+    assert m.late_events == m.dropped == m.stalls == m.redundant_events == 0
+    assert m.applied_additions == sum(len(a) for a in seq.additions) \
+        + len(seq.snapshot_keys[0])
+    assert m.applied_deletions == sum(len(d) for d in seq.deletions)
+
+
+@pytest.mark.parametrize("alg", sorted(ALL_SEMIRINGS))
+def test_replay_values_bit_identical_all_semirings(alg):
+    """Query values over the replayed store equal the precomputed-input
+    path bit-for-bit — same keys, same hash weights, same fixpoints."""
+    seq = _seq(n=150, e=1000, snaps=4)
+    live, _, _ = _replayed(seq)
+    ref = SnapshotStore(seq)
+    sr = ALL_SEMIRINGS[alg]
+    a = run_window_slide_batched(live, sr, 0, 2)
+    b = run_window_slide_batched(ref, sr, 0, 2)
+    assert list(a.results) == list(b.results)
+    for wnd in b.results:
+        np.testing.assert_array_equal(np.asarray(a.results[wnd]),
+                                      np.asarray(b.results[wnd]))
+
+
+def test_online_common_graph_matches_batch_intersection():
+    """The incrementally shrunk common graph equals the batch T(0, n-1)
+    and is installed in the window cache; total shrinkage telescopes to
+    |S_0| - |T(0, n-1)|."""
+    seq = _seq()
+    live, wm, _ = _replayed(seq)
+    ref = SnapshotStore(seq)
+    last = seq.num_snapshots - 1
+    expected = ref.window_keys(0, last)
+    np.testing.assert_array_equal(live._t[(0, last)], expected)
+    assert wm.metrics.common_shrinkage == \
+        len(seq.snapshot_keys[0]) - len(expected)
+
+
+# -- EdgeLog: validation, ticks, lateness, backpressure -----------------------
+
+def test_edge_log_validation():
+    with pytest.raises(ValueError):
+        EdgeLog(10, policy="shed")
+    with pytest.raises(ValueError):
+        EdgeLog(10, max_pending_events=0)
+    log = EdgeLog(10)
+    with pytest.raises(ValueError):
+        log.append(0, 1, op="toggle")
+    with pytest.raises(ValueError):
+        log.append(0, 10)
+
+
+def test_default_ts_follows_latest_stamp():
+    """ts=None events belong to the current tick — the latest stamped ts."""
+    log = EdgeLog(10)
+    assert log.append(0, 1).ts == 0
+    log.append(1, 2, ts=5)
+    assert log.append(2, 3).ts == 5
+    assert log.pending_events() == 3
+
+
+def test_late_events_rejected_after_seal():
+    store, log, wm = _live(10)
+    log.append(0, 1, ts=3)
+    assert wm.advance(3).cut() == 0
+    assert log.append(1, 2, ts=3) is None          # at the seal: late
+    assert log.append(1, 2, ts=2) is None          # below it: late
+    assert log.metrics.late_events == 2
+    ev = log.append(1, 2, ts=4)                    # above it: accepted
+    assert ev is not None
+    assert log.extend([EdgeEvent(2, 3, 4), EdgeEvent(4, 3, 4)]) == 1
+
+
+def test_block_policy_stalls_until_cut():
+    store, log, wm = _live(10, max_pending_events=2, policy="block")
+    log.append(0, 1)
+    log.append(1, 2)
+    with pytest.raises(BackpressureStall):
+        log.append(2, 3)
+    assert log.metrics.stalls == 1
+    assert log.metrics.events == 2                 # the stalled event is not in
+    wm.advance(0).cut()                            # cut empties the buffer
+    assert log.append(2, 3, ts=1) is not None
+
+
+def test_drop_policy_is_lossy_and_metered():
+    store, log, wm = _live(10, max_pending_events=2, policy="drop")
+    log.append(0, 1)
+    log.append(1, 2)
+    assert log.append(2, 3) is None
+    assert log.metrics.dropped == 1 and log.metrics.events == 2
+    assert log.pending_events() == 2
+
+
+def test_spill_policy_is_lossless_and_deterministic():
+    """A tiny spill buffer replays any trace to the same snapshots as an
+    unbounded log — spilled events rejoin in (ts, arrival) order."""
+    seq = _seq(n=80, e=300, snaps=4, changes=40)
+    free, _, _ = _replayed(seq)
+    tight_store, tight_log, tight_wm = _live(seq.num_nodes, seq.weight_seed,
+                                             max_pending_events=16,
+                                             policy="spill")
+    replay_events(tight_log, tight_wm, events_from_sequence(seq))
+    assert tight_log.metrics.spilled > 0
+    for i in range(seq.num_snapshots):
+        np.testing.assert_array_equal(tight_store.seq.snapshot_keys[i],
+                                      free.seq.snapshot_keys[i])
+
+
+# -- Watermark: guards, last-op-wins, sealing ---------------------------------
+
+def test_watermark_guards():
+    store, log, wm = _live(10)
+    with pytest.raises(ValueError):
+        wm.cut()                                   # advance first
+    wm.advance(4)
+    with pytest.raises(ValueError):
+        wm.advance(3)                              # no regressions
+    assert wm.ts == 4
+    assert wm.advance(4).cut() == 0                # first cut may be empty
+    assert store.seq.snapshot_keys[0].shape == (0,)
+    assert wm.advance(9).cut() is None             # empty cut: no duplicate
+
+
+def test_cut_last_op_wins_and_meters_redundancy():
+    store, log, wm = _live(10)
+    log.append(0, 1, ts=0)
+    log.append(0, 2, ts=0)
+    assert wm.advance(0).cut() == 0
+    log.append(0, 3, ts=1)                          # add then del: net del
+    log.append(0, 3, op="del", ts=1)                # ... of an absent edge
+    log.append(0, 1, op="del", ts=1)                # real deletion
+    assert wm.advance(1).cut() == 1
+    m = wm.metrics
+    # one superseded add + one no-op del of the absent (0, 3)
+    assert m.redundant_events == 2
+    assert m.applied_deletions == 1
+    assert store.seq.snapshot_keys[1].shape == (1,)  # only (0, 2) remains
+    np.testing.assert_array_equal(store.seq.deletions[0],
+                                  store.seq.snapshot_keys[0][:1])
+
+
+def test_out_of_order_within_tick_is_timestamp_ordered():
+    """Events may arrive out of ts order above the seal; the cut consumes
+    them in (ts, arrival) order, so interleaved ticks still converge."""
+    store, log, wm = _live(10)
+    log.append(0, 1, ts=2)
+    log.append(0, 1, op="del", ts=5)               # later tick wins
+    log.append(0, 2, ts=4)
+    assert wm.advance(5).cut() == 0
+    keys = store.seq.snapshot_keys[0]
+    assert keys.shape == (1,)                       # (0,1) added then deleted
+    assert replay_events(EdgeLog(10), Watermark(EdgeLog(10), store),
+                         []) == []
+    with pytest.raises(ValueError):                 # replay needs sorted ts
+        replay_events(*_live(10)[1:], [EdgeEvent(3, 0, 1), EdgeEvent(1, 0, 2)])
+
+
+# -- compaction + floors ------------------------------------------------------
+
+def test_compact_respects_feed_floor_then_retires():
+    seq = _seq()
+    store, wm, _ = _replayed(seq)
+    feed = LiveWindowFeed(store, width=2, name="lagging")
+    assert feed.poll() == [(i, i + 1) for i in range(seq.num_snapshots - 1)]
+    stats = wm.compact()                            # floor 0: nothing retires
+    assert stats.retired == 0 and store.first_live == 0
+    feed.advance_floor(3)                           # consumer is at (3, 4)
+    before = store.stored_edges
+    stats = wm.compact()
+    assert stats.retired == 3 and store.first_live == 3
+    assert store.stored_edges < before              # strictly fewer edges
+    assert wm.metrics.freed_edges == stats.freed_edges > 0
+    store.window_keys(3, 4)                         # live range still serves
+    with pytest.raises(ValueError):
+        store.window_keys(2, 4)                     # retired range does not
+    feed.close()
+    assert wm.compact().horizon == seq.num_snapshots - 1
+
+
+def test_cut_rebases_common_graph_after_compaction():
+    """Compaction moves the live base; the next cut lazily rebases its
+    running intersection to T(first_live, ·) and stays bit-identical."""
+    seq = _seq(snaps=6)
+    events = events_from_sequence(seq)
+    split = next(i for i, ev in enumerate(events) if ev.ts == 4)
+    store, log, wm = _live(seq.num_nodes, seq.weight_seed)
+    replay_events(log, wm, events[:split])          # snapshots 0..3
+    store.set_floor("consumer", 2)
+    wm.compact()
+    assert store.first_live == 2
+    replay_events(log, wm, events[split:])          # snapshots 4, 5
+    ref = SnapshotStore(seq)
+    for i in range(2, seq.num_snapshots):
+        np.testing.assert_array_equal(store.seq.snapshot_keys[i],
+                                      seq.snapshot_keys[i])
+    np.testing.assert_array_equal(store._t[(2, 5)], ref.window_keys(2, 5))
+
+
+def test_frozen_store_rejects_live_operations():
+    store = SnapshotStore(_seq(n=60, e=200, snaps=3, changes=30))
+    empty = np.empty(0, np.int64)
+    with pytest.raises(TypeError):
+        store.ingest_cut(empty, empty, empty)
+    with pytest.raises(TypeError):
+        store.compact()
+
+
+# -- feed wiring: WindowStream + QueryService ---------------------------------
+
+def test_live_window_feed_validation_and_cursor():
+    store, _, _ = _live(10)
+    with pytest.raises(ValueError):
+        LiveWindowFeed(store, width=0)
+    with pytest.raises(ValueError):
+        LiveWindowFeed(store, width=2, step=0)
+    feed = LiveWindowFeed(store, width=2, name="f")
+    assert feed.poll() == []                        # nothing born yet
+    assert store._floors["f"] == 0
+    feed.close()
+    assert "f" not in store._floors
+
+
+def test_window_stream_feed_serves_windows_as_cut():
+    """A feed-driven WindowStream blocks on the watermark: windows appear
+    in pending() as their last snapshot is cut, values stay bit-identical
+    to the precomputed slide, and draining advances the feed's floor."""
+    seq = _seq()
+    sr = ALL_SEMIRINGS["sssp"]
+    store, log, wm = _live(seq.num_nodes, seq.weight_seed)
+    stream = WindowStream(campaign_width=2, name="live",
+                          feed=LiveWindowFeed(store, width=3, name="live"))
+    results = {}
+
+    def on_cut(_idx):
+        run = run_window_stream_batched(store, sr, 0, stream=stream)
+        results.update(run.results)
+
+    replay_events(log, wm, events_from_sequence(seq), on_cut=on_cut)
+    ref = run_window_slide_batched(SnapshotStore(seq), sr, 0, 3)
+    assert set(results) == set(ref.results)
+    for wnd, vals in ref.results.items():
+        np.testing.assert_array_equal(np.asarray(results[wnd]),
+                                      np.asarray(vals))
+    # fully drained: the floor parks at the next unborn window's low,
+    # so compaction retires everything older than the live tail
+    stats = wm.compact()
+    assert stats.retired > 0
+    assert store.first_live == store._floors["live"]
+
+
+def test_query_service_feed_client_live():
+    """register(feed=...) grows the client's horizon as snapshots are cut
+    and serves born windows through the normal admission path."""
+    seq = _seq()
+    sr = ALL_SEMIRINGS["sssp"]
+    store, log, wm = _live(seq.num_nodes, seq.weight_seed)
+    service = QueryService(store)
+    client = service.register(
+        sr, 0, campaign_width=2, name="live",
+        feed=LiveWindowFeed(store, width=3, name="live"))
+    replay_events(log, wm, events_from_sequence(seq),
+                  on_cut=lambda _idx: service.turn())
+    service.drain()
+    assert client.horizon == seq.num_snapshots - 1
+    ref = run_window_slide_batched(SnapshotStore(seq), sr, 0, 3)
+    assert set(client.results) == set(ref.results)
+    for wnd, vals in ref.results.items():
+        np.testing.assert_array_equal(np.asarray(client.results[wnd]),
+                                      np.asarray(vals))
+    service.unregister(client)
+    assert "live" not in store._floors              # unregister closes the feed

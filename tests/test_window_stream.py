@@ -301,3 +301,61 @@ def test_release_AS_leaves_blocks_warm():
     store.release(("AS",))
     assert not any(t[0] == "AS" for t in store._blocks)
     assert any(t[0] == "DS" for t in store._blocks)  # stacks stay warm
+
+
+# -- compaction vs pinned anchor states (live ingestion audit) ----------------
+
+def _live_store(n=240, e=1800, snaps=8, changes=120, seed=11):
+    """A store whose snapshots were born from a replayed firehose —
+    compaction (core/ingest.py) only operates on live stores."""
+    from repro.core import (EdgeLog, IngestMetrics, LiveSequence, Watermark,
+                            events_from_sequence, replay_events)
+    seq = make_evolving_sequence(n, e, snaps, changes, seed=seed)
+    store = SnapshotStore(LiveSequence(seq.num_nodes,
+                                       weight_seed=seq.weight_seed))
+    log = EdgeLog(seq.num_nodes, metrics=IngestMetrics())
+    replay_events(log, Watermark(log, store), events_from_sequence(seq))
+    return store
+
+
+def test_compact_never_retires_pinned_anchor_window():
+    """The audit: compaction must clamp its horizon to every pinned "AS"
+    link's window low — a pinned anchor state is a promise some stream
+    will hop from it, and the hop needs that window's intersection."""
+    from repro.core.snapshots import anchor_tag
+    store = _live_store()
+    qkey = _qkey(ALL_SEMIRINGS["sssp"])
+    store.pin(anchor_tag(qkey, (2, 7)))
+    stats = store.compact()              # wants 7; the pin clamps to 2
+    assert stats.horizon == 2 and stats.retired == 2
+    assert store.first_live == 2
+    store.window_keys(2, 7)              # the pinned window still serves
+    store.unpin(anchor_tag(qkey, (2, 7)))
+    assert store.compact().retired == 5  # unpinned: the clamp lifts
+
+
+def test_compact_clamps_to_anchor_chain_pins_of_lagging_stream():
+    """End-to-end: an AnchorChain pins the links its registered streams
+    are still behind; compaction respects them until the laggard advances
+    (or unregisters), then retires — and the pinned anchor's state block
+    survives the purge."""
+    from repro.core import AnchorChain
+    sr = ALL_SEMIRINGS["sssp"]
+    store = _live_store()
+    chain = AnchorChain(store, name="shared")
+    chain.register("laggard")            # behind everything: pins every link
+    lead = WindowStream(campaign_width=2, name="lead",
+                        windows=slide_windows(8, 3))
+    run_window_stream_batched(store, sr, 0, stream=lead, chain=chain)
+    lows = sorted(w[0] for w in chain.links)
+    assert len(lows) > 1
+    assert store.compact().horizon == lows[0]   # laggard keeps everything
+    pinned_tags = store.pinned_tags()
+    assert pinned_tags and all(tag in store._blocks for tag in pinned_tags)
+    chain.advance("laggard", chain.links[-1])   # at the newest link now
+    stats = store.compact()
+    assert stats.horizon == lows[-1] > lows[0]  # only that link clamps
+    store.window_keys(lows[-1], store.seq.num_snapshots - 1)
+    chain.unregister("laggard")
+    chain.unregister("lead")
+    assert store.compact().horizon == store.seq.num_snapshots - 1
