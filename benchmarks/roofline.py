@@ -29,6 +29,16 @@ ratio MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/padding overhead.
 Run standalone (own process — the XLA flag must precede jax init):
     PYTHONPATH=src python benchmarks/roofline.py --json roofline.json \
         --dryrun dryrun_results.json --markdown roofline.md
+
+``--kernels`` switches to the graph-kernel roofline instead of the model
+cells: the fused k-sweep relax kernel (kernels/edge_relax_multi) is lowered
+in both edge streams — ``edge`` (caller order) and ``csr`` (dst-sorted, the
+segment-reduce layout) — plus the unfused 1-sweep kernel dispatched k
+times, and their compiled cost_analysis terms are compared. Results are
+bit-identical across layouts (tests/test_kernels_diff.py); this mode shows
+what the layout/fusion choice costs in bytes and FLOPs:
+    PYTHONPATH=src python benchmarks/roofline.py --kernels \
+        [--nodes N --edges E --fused-k K] [--json kernels_roofline.json]
 """
 
 import argparse          # noqa: E402
@@ -195,6 +205,61 @@ def dominant(terms):
     return max(terms, key=lambda k: terms[k])
 
 
+def kernels_main(args):
+    """Roofline terms for the fused relax kernel's layout variants.
+
+    Lowers the fused k-sweep kernel per layout (edge-parallel vs csr) and
+    the unfused 1-sweep kernel (charged ×k — what k separate dispatches
+    would move), and reports compiled cost_analysis terms. The csr stream
+    adds an argsort but turns the per-block scatter into segment runs; the
+    fused grid skips k−1 HBM round trips of values/parent/frontier.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import relax_multi
+
+    n, e, k = args.nodes, args.edges, args.fused_k
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+    w = jnp.asarray((rng.random(e) + 0.01).astype(np.float32))
+    values = jnp.asarray((rng.random(n) * 10).astype(np.float32))
+    parent = jnp.full((n,), -1, jnp.int32)
+    frontier = jnp.ones((n,), bool)
+
+    def measure(k_eff, layout, charge=1):
+        compiled = relax_multi.lower(
+            values, parent, frontier, src, dst, w, op="min_plus",
+            num_nodes=n, k=k_eff, layout=layout).compile()
+        cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # older jax: list of one dict
+            cost = cost[0] if cost else {}
+        return {"flops": charge * cost.get("flops", 0.0),
+                "bytes": charge * cost.get("bytes accessed", 0.0),
+                "coll": 0.0}
+
+    rows = []
+    cells = [(f"edge_relax_multi/fused{k}/edge", measure(k, "edge")),
+             (f"edge_relax_multi/fused{k}/csr", measure(k, "csr")),
+             (f"edge_relax_multi/unfused x{k}/edge", measure(1, "edge", k))]
+    for cell, meas in cells:
+        t = terms_from(meas)
+        rows.append({"cell": cell, "family": "kernel",
+                     **{key: round(v, 6) for key, v in t.items()},
+                     "dominant": dominant(t),
+                     "hlo_flops_dev": meas["flops"],
+                     "hlo_bytes_dev": meas["bytes"]})
+        print(f"[roofline] {cell:42s} comp {t['compute_s']:.6f}s "
+              f"mem {t['memory_s']:.6f}s dom={rows[-1]['dominant']}")
+    fused, unfused = rows[0]["hlo_bytes_dev"], rows[2]["hlo_bytes_dev"]
+    if unfused:
+        print(f"[roofline] fused/{k} moves {fused / unfused:.2f}x the bytes "
+              f"of {k} unfused dispatches")
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+    return 0
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--dryrun", default="dryrun_results.json")
@@ -202,7 +267,15 @@ def main(argv=None):
     p.add_argument("--markdown", default=None)
     p.add_argument("--arch", default=None)
     p.add_argument("--shape", default=None)
+    p.add_argument("--kernels", action="store_true",
+                   help="graph-kernel layout roofline instead of model cells")
+    p.add_argument("--nodes", type=int, default=2_000)
+    p.add_argument("--edges", type=int, default=24_000)
+    p.add_argument("--fused-k", type=int, default=4)
     args = p.parse_args(argv)
+
+    if args.kernels:
+        return kernels_main(args)
 
     with open(args.dryrun) as f:
         dry = {(r["cell"], len(r["mesh"])): r for r in json.load(f)["records"]}

@@ -79,9 +79,15 @@ SCALES = {
                      num_clients=8, seed=7),
     },
     "kernels": {
-        "smoke": dict(n=1_000, e=12_000),
-        "default": dict(n=5_000, e=60_000),
-        "full": dict(n=5_000, e=60_000),
+        "smoke": dict(n=1_000, e=12_000, fused_k=4, plan_n=400,
+                      plan_e=3_000, plan_snaps=6, plan_changes=200,
+                      plan_width=3),
+        "default": dict(n=5_000, e=60_000, fused_k=8, plan_n=2_000,
+                        plan_e=20_000, plan_snaps=8, plan_changes=600,
+                        plan_width=3),
+        "full": dict(n=5_000, e=60_000, fused_k=8, plan_n=2_000,
+                     plan_e=20_000, plan_snaps=8, plan_changes=600,
+                     plan_width=3),
     },
     "evolve": {
         "smoke": dict(n=2_000, e=20_000, snaps=5, changes=600, width=3),
@@ -157,9 +163,17 @@ def bench_tg_sharing(scale: str):
 
 
 def bench_kernels(scale: str):
-    """Interpret-mode kernels vs jnp oracle: correctness + oracle timing."""
+    """Kernels vs jnp oracle, fused k-sweep chunk, planner calibration."""
     import jax
+    import jax.numpy as jnp
     import numpy as np
+    from repro.core import (SnapshotStore, campaign_volume, optimal_campaigns,
+                            slide_windows)
+    from repro.core.costmodel import calibrate
+    from repro.graph import make_evolving_sequence
+    from repro.graph.edgeset import make_block
+    from repro.graph.engine import relax_sweep, relax_sweep_fused
+    from repro.graph.semiring import ALL_SEMIRINGS
     from repro.kernels import edge_relax
     from repro.kernels.edge_relax.ref import edge_relax_ref
 
@@ -181,7 +195,105 @@ def bench_kernels(scale: str):
         dt = time.perf_counter() - t0
         out.append((f"kernels/edge_relax/{op}", dt * 1e6, "allclose=1",
                     {"allclose": True}))
+
+    # -- fused k-sweep chunk vs k host-synced sequential dispatches -------
+    # Same math (bit-compared below); the fused chunk replaces k dispatch/
+    # host-sync round trips — where values/parent/frontier would bounce
+    # through HBM between sweeps — with one call that keeps them resident.
+    sr = ALL_SEMIRINGS["sssp"]
+    fused_k = p["fused_k"]
+    rng = np.random.default_rng(0)
+    bsrc = np.concatenate([np.arange(n - 1), rng.integers(0, n, e)])
+    bdst = np.concatenate([np.arange(1, n), rng.integers(0, n, e)])
+    bw = (rng.random(bsrc.size) + 0.01).astype(np.float32)
+    blocks = (make_block(bsrc.astype(np.int32), bdst.astype(np.int32),
+                         bw, n),)
+    values0 = jnp.full((n,), jnp.float32(sr.identity)).at[0].set(
+        jnp.float32(sr.source_value))
+    parent0 = jnp.full((n,), -1, jnp.int32)
+    frontier0 = jnp.zeros((n,), bool).at[0].set(True)
+
+    def run_seq():
+        v, par, fro = values0, parent0, frontier0
+        sweeps = 0
+        for _ in range(fused_k):
+            if not bool(np.any(np.asarray(fro))):  # per-sweep host sync
+                break
+            v, par, fro, _ = relax_sweep(sr, n, v, par, fro, blocks)
+            jax.block_until_ready(v)
+            sweeps += 1
+        return v, par, fro, sweeps
+
+    @jax.jit
+    def _fused_chunk(v, par, fro, blk):
+        # jitted like the engine's _fixpoint chunk — one dispatch for the
+        # whole while_loop, no host round trips between sweeps
+        return relax_sweep_fused(sr, n, v, par, fro, blk, k=fused_k)
+
+    def run_fused():
+        v, par, fro, sweeps, _ = _fused_chunk(values0, parent0, frontier0,
+                                              blocks)
+        jax.block_until_ready(v)
+        return v, par, fro, int(sweeps)
+
+    seq_out = run_seq()      # warm-up both paths (compile) + bit-compare
+    fused_out = run_fused()
+    bit_identical = (
+        seq_out[3] == fused_out[3]
+        and all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(seq_out[:3], fused_out[:3])))
+    assert bit_identical, "fused chunk diverged from sequential sweeps"
+    sweeps_fused = fused_out[3]
+    assert sweeps_fused == fused_k, \
+        f"frontier drained early at smoke scale: {sweeps_fused} < {fused_k}"
+    t_seq = min(_timed(run_seq) for _ in range(5))
+    t_fused = min(_timed(run_fused) for _ in range(5))
+    speedup = t_seq / t_fused
+    assert speedup >= 1.0, \
+        f"fused chunk slower than {fused_k} sequential dispatches: " \
+        f"{speedup:.2f}x"
+    out.append((f"kernels/relax_fused/{sr.name}", t_fused * 1e6,
+                f"k={fused_k} sweeps={sweeps_fused} "
+                f"speedup={speedup:.2f}x bit_identical=1",
+                {"fused_k": fused_k,
+                 "sweeps_fused": sweeps_fused,
+                 "hbm_roundtrips_skipped": sweeps_fused - 1,
+                 "bit_identical": True},
+                {"fused_speedup": round(speedup, 3)}))
+
+    # -- measured-cost planner calibration --------------------------------
+    # Fit a SweepCostModel on this machine, then price BOTH partitions
+    # under it: the raw-edge-count DP's plan vs the calibrated DP's plan.
+    # The calibrated DP optimizes exactly the price campaign_volume
+    # charges, so it can never be worse — asserted, and exported as the
+    # gate's exact field.
+    seq2 = make_evolving_sequence(p["plan_n"], p["plan_e"], p["plan_snaps"],
+                                  p["plan_changes"], seed=0)
+    store = SnapshotStore(seq2)
+    windows = slide_windows(p["plan_snaps"], p["plan_width"])
+    t0 = time.perf_counter()
+    model = calibrate(store, sr, 0, stable_milli=500, fused_k=fused_k)
+    raw_plan = optimal_campaigns(store, windows)
+    raw_priced = campaign_volume(store, raw_plan.campaigns,
+                                 cost_model=model).total_edges
+    cal_plan = optimal_campaigns(store, windows, cost_model=model)
+    dt = time.perf_counter() - t0
+    assert cal_plan.total_edges <= raw_priced, \
+        f"calibrated plan worse than raw-edge-count plan: " \
+        f"{cal_plan.total_edges} > {raw_priced} modeled ns"
+    saving = 1.0 - cal_plan.total_edges / max(raw_priced, 1)
+    out.append(("kernels/planner_calibration", dt * 1e6,
+                f"{model.per_edge_nanos}ns/edge+{model.per_sweep_nanos}"
+                f"ns/sweep raw={raw_priced}ns cal={cal_plan.total_edges}ns "
+                f"saving={saving:.1%}",
+                {"calibrated_not_worse": True}))
     return out
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def bench_window_slide(scale: str):

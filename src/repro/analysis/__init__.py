@@ -19,8 +19,8 @@ Layout:
 * :mod:`repro.analysis.linter` — the rule-engine core: parsed-module
   model, ``# graphlint: disable=RULE`` suppressions, rule registry,
   finding type, human/JSON rendering.
-* :mod:`repro.analysis.rules` — rules G001–G005 (launch/cache/sync/
-  semiring invariants).
+* :mod:`repro.analysis.rules` — rules G001–G005, G007–G010 (launch/
+  cache/sync/semiring/serving/ingest/fused-launch invariants).
 * :mod:`repro.analysis.apidoc` — rule G006 (docs/API.md coverage +
   docstring presence; the ast half of the old ``scripts/check_links.py``
   promoted to a first-class rule).
@@ -37,7 +37,7 @@ from repro.analysis.linter import (
     render_human,
     render_json,
 )
-from repro.analysis import rules as _rules      # noqa: F401  (registers G001-G005)
+from repro.analysis import rules as _rules      # noqa: F401  (G001-G005, G007-G010)
 from repro.analysis import apidoc as _apidoc    # noqa: F401  (registers G006)
 
 __all__ = [

@@ -1,4 +1,4 @@
-"""Rules G001–G005, G007–G009: the launch/cache/sync/seeding invariants.
+"""Rules G001–G005, G007–G010: the launch/cache/sync/seeding invariants.
 
 Each rule encodes one contract the executors' module docstrings state in
 prose (core/trigrid.py, core/snapshots.py, core/window.py, core/service.py,
@@ -485,14 +485,16 @@ class StabilitySeedDiscipline(Rule):
         "call anywhere else re-derives a seed frontier from the raw Δ edge "
         "endpoint set — bypassing the pruning, the mode switch and the "
         "accounting at once. Only the stability module itself and the "
-        "engine's fixpoint iteration body (_fixpoint, where relax_sweep is "
-        "the per-sweep step, not a seeding) may call it."
+        "engine's fixpoint machinery (_fixpoint, where relax_sweep is the "
+        "per-sweep step, not a seeding, and relax_sweep_fused, whose "
+        "reference path iterates relax_sweep inside one fused chunk) may "
+        "call it."
     )
 
     SWEEP = "relax_sweep"
     STABILITY_MODULE = "repro.graph.stability"
     ENGINE_MODULE = "repro.graph.engine"
-    ENGINE_SANCTIONED = "_fixpoint"
+    ENGINE_SANCTIONED = ("_fixpoint", "relax_sweep_fused")
 
     def check(self, module: Module) -> Iterator[Finding]:
         dotted = module.dotted_name()
@@ -501,7 +503,7 @@ class StabilitySeedDiscipline(Rule):
         for node in calls_named(module.tree, self.SWEEP):
             if dotted == self.ENGINE_MODULE and any(
                     isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
-                    and fn.name == self.ENGINE_SANCTIONED
+                    and fn.name in self.ENGINE_SANCTIONED
                     for fn in module.function_ancestors(node)):
                 continue
             yield self.finding(
@@ -592,3 +594,63 @@ class IngestCutDiscipline(Rule):
                 and target.value.attr in self.CACHE_ATTRS:
             return target.value.attr
         return None
+
+
+@register
+class FusedLaunchDiscipline(Rule):
+    """G010: fused relax chunks launch only through the engine's fixpoint."""
+
+    id = "G010"
+    title = "fused relax chunk launched outside the sanctioned fixpoint path"
+    contract = (
+        "relax_sweep_fused (the fused multi-sweep chunk over "
+        "kernels/edge_relax_multi) extends G008's seeding monopoly: it IS "
+        "a relax-sweep sequence, so launching it from an executor re-opens "
+        "the raw-Δ seeding hole G008 closed, and it additionally carries "
+        "the bit-exactness contract (fused(k) == k relax_sweep "
+        "applications) that only the engine's chunked fixpoint "
+        "(engine._fixpoint) and the stability layer's seed sweep "
+        "(graph/stability.py, k=1) are tested to preserve. Everything "
+        "else reaches fused execution through the fused_k LAUNCH OPTION "
+        "threaded engine -> trigrid -> window -> service — and that knob "
+        "must flow from launch options (a variable or attribute), never a "
+        "literal at a call site, so one configuration point controls every "
+        "launch in a run and packed lanes cannot silently mix chunk sizes."
+    )
+
+    FUSED = "relax_sweep_fused"
+    KNOB = "fused_k"
+    STABILITY_MODULE = "repro.graph.stability"
+    ENGINE_MODULE = "repro.graph.engine"
+    ENGINE_SANCTIONED = "_fixpoint"
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        dotted = module.dotted_name()
+        if dotted != self.STABILITY_MODULE:
+            for node in calls_named(module.tree, self.FUSED):
+                if dotted == self.ENGINE_MODULE and any(
+                        isinstance(fn, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef))
+                        and fn.name == self.ENGINE_SANCTIONED
+                        for fn in module.function_ancestors(node)):
+                    continue
+                yield self.finding(
+                    module, node,
+                    f"{self.FUSED} called outside graph/stability.py and "
+                    "engine._fixpoint — executors reach fused execution "
+                    "via the fused_k launch option (run_to_fixpoint/"
+                    "incremental_additions/...), never by launching fused "
+                    "chunks directly")
+        if dotted == self.ENGINE_MODULE:
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            value = get_keyword(node, self.KNOB)
+            if isinstance(value, ast.Constant):
+                yield self.finding(
+                    module, node,
+                    f"literal {self.KNOB}={value.value!r} at a call site — "
+                    "the fused chunk size is a launch option: thread it "
+                    "from the caller's options (a variable or attribute), "
+                    "so one knob configures every launch in the run")

@@ -7,6 +7,7 @@ Layers:
   directhop    CommonGraph Direct-Hop schedule (deletion-free, star plan)
   trigrid      Triangular Grid + work-sharing plans (DP-optimal / bisection)
   window       sliding-window executors (sequential + one-launch batched)
+  costmodel    measured-cost calibration for the Δ-volume planners
   service      always-on multi-client query service (admission + scheduling)
 """
 
@@ -35,6 +36,11 @@ from repro.core.trigrid import (
     plan_levels,
     run_plan,
     run_plan_batched,
+)
+from repro.core.costmodel import (
+    SweepCostModel,
+    calibrate,
+    measure_sweep_nanos,
 )
 from repro.core.service import (
     LaunchRecord,
@@ -77,6 +83,9 @@ __all__ = [
     "ServiceClient",
     "ServiceMetrics",
     "SnapshotStore",
+    "SweepCostModel",
+    "calibrate",
+    "measure_sweep_nanos",
     "WindowSlideRun",
     "WindowStream",
     "WindowStreamRun",

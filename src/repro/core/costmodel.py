@@ -1,0 +1,150 @@
+"""Measured-cost calibration for the Δ-volume planners (SweepCostModel).
+
+The TG interval DP (core/trigrid.py::optimal_plan) and the campaign DP
+(core/window.py::optimal_campaigns) are exact optimizers — but over a
+*proxy* objective: raw added-edge counts, latterly discounted by the
+measured stable fraction (PR 8's ``stable_milli``). The proxy assumes a
+hop's cost is proportional to its Δ volume with zero per-launch overhead,
+which the fused-sweep work (kernels/edge_relax_multi) makes visibly wrong:
+once convergence checks stop round-tripping HBM, the fixed per-sweep price
+shrinks while the per-edge price stays, so plans that trade a few more
+hops for less Δ volume (or vice versa) flip order.
+
+:class:`SweepCostModel` closes the loop: an affine cost
+
+    hop_cost(Δ)  =  per_edge_nanos · live(Δ)  +  per_sweep_nanos
+
+fit from *measured* sweep timings (``evolve --calibrate``), where
+``live(Δ)`` is the stable-vertex discount the planners already apply
+(``Δ · (1000 − stable_milli) / 1000``, integer arithmetic). Both
+coefficients are integers so DP costs remain exact integer prices — two
+plans compare the same way on every host, which is what lets the benches
+gate "calibrated plan never worse than the raw-count plan" as a schema-v2
+exact field (benchmarks/run.py::bench_kernels).
+
+With ``cost_model=None`` every planner prices exactly as before; a model
+with ``per_edge_nanos=1, per_sweep_nanos=0`` reproduces the raw/discounted
+edge-count objective identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+from repro.graph.engine import host_sync, run_to_fixpoint
+
+
+def _instability_volume(edges: int, stable_milli: int) -> int:
+    """The planners' live-edge discount (see core/window.py)."""
+    if not 0 <= stable_milli <= 1000:
+        raise ValueError(f"stable_milli {stable_milli} outside [0, 1000]")
+    return edges * (1000 - stable_milli) // 1000
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCostModel:
+    """Affine measured cost of one incremental hop, in integer nanoseconds.
+
+    ``per_edge_nanos`` is the marginal price of streaming one live Δ edge
+    through a frontier-masked sweep; ``per_sweep_nanos`` is the fixed
+    per-launch price (dispatch + convergence check — what the fused kernel
+    amortizes over ``fused_k`` sweeps); ``stable_milli`` folds in the
+    stable-vertex discount the planners previously applied to raw counts.
+    """
+
+    per_edge_nanos: int
+    per_sweep_nanos: int
+    stable_milli: int = 0
+
+    def hop_cost(self, added_edges: int) -> int:
+        """Price of an incremental hop streaming ``added_edges`` Δ edges."""
+        live = _instability_volume(added_edges, self.stable_milli)
+        return live * self.per_edge_nanos + self.per_sweep_nanos
+
+    def anchor_cost(self, edges: int) -> int:
+        """Price of a from-scratch anchor build over ``edges`` edges.
+
+        Undiscounted — a cold anchor has no stable incumbent state to
+        skip, mirroring the raw planners' undiscounted first-anchor term.
+        """
+        return edges * self.per_edge_nanos + self.per_sweep_nanos
+
+    @classmethod
+    def fit(cls, samples: Sequence[tuple[int, int]], *,
+            stable_milli: int = 0) -> "SweepCostModel":
+        """Least-squares affine fit from ``(edges, nanos)`` measurements.
+
+        Needs >= 2 samples at distinct edge scales for a full affine fit;
+        with a degenerate spread it falls back to a pure per-edge model.
+        Coefficients are rounded to integers, ``per_edge_nanos`` clamped to
+        >= 1 so a hop's price always grows with its Δ volume.
+        """
+        if not samples:
+            raise ValueError("SweepCostModel.fit needs at least one sample")
+        xs = [float(e) for e, _ in samples]
+        ys = [float(t) for _, t in samples]
+        n = len(samples)
+        mx = sum(xs) / n
+        my = sum(ys) / n
+        var = sum((x - mx) ** 2 for x in xs)
+        if var == 0.0:
+            per_edge = max(1, round(my / mx)) if mx else 1
+            return cls(per_edge, 0, stable_milli)
+        slope = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / var
+        per_edge = max(1, round(slope))
+        per_sweep = max(0, round(my - slope * mx))
+        return cls(per_edge, per_sweep, stable_milli)
+
+
+def measure_sweep_nanos(view, semiring, source, *, gated: bool = False,
+                        track_parents: bool = False, fused_k: int = 1,
+                        repeats: int = 3) -> int:
+    """Measured wall nanoseconds of ONE frontier-masked sweep over ``view``.
+
+    Converges the query once (untimed, also the jit warm-up), then times a
+    warm all-on-frontier re-sweep capped at a single iteration — a full
+    pass over every edge that improves nothing, i.e. exactly the per-sweep
+    price the planners buy per unit of Δ volume. Best-of-``repeats``
+    through the public engine API (the fused launch path when
+    ``fused_k`` > 1), synced via the sanctioned :func:`host_sync`.
+    """
+    base = run_to_fixpoint(view, semiring, source, gated=gated,
+                           track_parents=track_parents, fused_k=fused_k)
+    host_sync(base.values)
+
+    def once() -> int:
+        t0 = time.perf_counter_ns()
+        res = run_to_fixpoint(view, semiring, source, 1, values=base.values,
+                              parent=base.parent, gated=gated,
+                              track_parents=track_parents, fused_k=fused_k)
+        host_sync(res.values)
+        return time.perf_counter_ns() - t0
+
+    once()  # compile the warm-start trace before timing
+    return min(once() for _ in range(repeats))
+
+
+def calibrate(store, semiring, source, *, stable_milli: int = 0,
+              gated: bool = False, track_parents: bool = False,
+              fused_k: int = 1, repeats: int = 3) -> SweepCostModel:
+    """Fit a :class:`SweepCostModel` from two measured sweep scales.
+
+    Times one sweep over the store's common graph (the smallest window
+    view) and one over its first snapshot (common graph ∪ its Δs), giving
+    two honestly different edge scales on the exact views the executors
+    launch. ``stable_milli`` (from a prior measured run, e.g. the warm-up
+    stream in ``evolve --calibrate``) is folded into the returned model's
+    hop discount.
+    """
+    last = store.seq.num_snapshots - 1
+    scales = [(0, last), (0, 0)]
+    samples = []
+    for (i, j) in scales:
+        edges = store.window_size(i, j)
+        nanos = measure_sweep_nanos(
+            store.common_graph_view(i, j), semiring, source, gated=gated,
+            track_parents=track_parents, fused_k=fused_k, repeats=repeats)
+        samples.append((edges, nanos))
+    return SweepCostModel.fit(samples, stable_milli=stable_milli)

@@ -101,6 +101,12 @@ class ServiceClient:
     gated: bool = False
     cg_split: int = 1
     track_parents: bool = False
+    # fused-chunk size for every launch serving this client (engine
+    # fused_k). A LAUNCH option, not a query option: results are
+    # bit-identical at any value, so it joins the admission okey (packed
+    # lanes must share one jit trace) but NOT the anchor-state qkey
+    # (states stay shareable across fused chunk sizes).
+    fused_k: int = 1
     feed: "object | None" = None
     results: "dict[Window, jnp.ndarray]" = dataclasses.field(
         default_factory=dict)
@@ -264,7 +270,7 @@ class QueryService:
                  campaign_width: int = 4, name: "str | None" = None,
                  horizon: "int | None" = None, max_iters: int = 10_000,
                  gated: bool = False, cg_split: int = 1,
-                 track_parents: bool = False,
+                 track_parents: bool = False, fused_k: int = 1,
                  feed: "object | None" = None) -> ServiceClient:
         """Add a client; returns its :class:`ServiceClient` handle.
 
@@ -276,6 +282,9 @@ class QueryService:
         query key (created on first use), pinning shared anchor states
         until it advances past them or unregisters.
 
+        ``fused_k`` sets the engine's fused-chunk size for every launch
+        serving this client (values bit-identical at any size; clients
+        only pack together when it matches — see :meth:`_pack`).
         ``feed`` attaches a live window source (``ingest.LiveWindowFeed``):
         instead of :meth:`submit` calls, every turn polls the feed and
         admits windows born by watermark cuts (``horizon`` then grows with
@@ -306,7 +315,7 @@ class QueryService:
             name=name, semiring=semiring, source=source,
             stream=WindowStream(campaign_width, name=name), horizon=horizon,
             max_iters=max_iters, gated=gated, cg_split=cg_split,
-            track_parents=track_parents, feed=feed)
+            track_parents=track_parents, fused_k=fused_k, feed=feed)
         chain = self._chains.setdefault(
             client.qkey,
             AnchorChain(self.store, name=f"svc-chain-{len(self._chains)}"))
@@ -465,8 +474,9 @@ class QueryService:
         """Group compatible campaigns into launches (the admission layer).
 
         Compatibility = identical launch options (every static jit
-        argument: semiring, max_iters, gated, cg_split, track_parents)
-        AND equal pow2 width bucket of the campaign's largest slide-Δ
+        argument: semiring, max_iters, gated, cg_split, track_parents,
+        fused_k) AND equal pow2 width bucket of the campaign's largest
+        slide-Δ
         (priced by ``hop_added_edges`` against the group's provisional
         shared anchor) — so packed lanes stack into one shape-bucketed
         trace. Groups chunk at ``lane_budget`` lanes; campaigns never
@@ -476,7 +486,7 @@ class QueryService:
         by_options: dict = {}
         for client, campaign in selected:
             okey = (client.semiring.name, client.max_iters, client.gated,
-                    client.cg_split, client.track_parents)
+                    client.cg_split, client.track_parents, client.fused_k)
             by_options.setdefault(okey, []).append((client, campaign))
         launches = []
         for okey in sorted(by_options):
@@ -525,7 +535,8 @@ class QueryService:
             view, state, stats, event, _delta = _acquire_anchor_state(
                 self.store, qkey, anchor, client.semiring, client.source,
                 client.max_iters, client.gated, client.cg_split,
-                client.track_parents, seed=self.seed)
+                client.track_parents, seed=self.seed,
+                fused_k=client.fused_k)
             self._chains[qkey].observe(anchor)  # pin before later puts evict
             state_idx[qkey] = len(states)
             states.append(state)
@@ -552,7 +563,7 @@ class QueryService:
             self.store, lead.semiring, anchor_view, states, windows, anchor,
             max_iters=lead.max_iters, gated=lead.gated,
             track_parents=lead.track_parents, mesh=self.mesh,
-            lane_map=lane_map, seed=self.seed)
+            lane_map=lane_map, seed=self.seed, fused_k=lead.fused_k)
         done = time.perf_counter()
         for lane, (wnd, client) in enumerate(zip(windows, owners)):
             client.results[wnd] = res.values[lane]

@@ -109,8 +109,17 @@ def hop_added_edges(store: SnapshotStore, parent: Window, child: Window) -> int:
     return store.window_size(*child) - store.window_size(*parent)
 
 
-def optimal_plan(store: SnapshotStore, i: int = 0, j: int | None = None) -> PlanNode:
-    """Interval-DP plan minimizing total added-edge volume.
+def optimal_plan(store: SnapshotStore, i: int = 0, j: int | None = None,
+                 cost_model=None) -> PlanNode:
+    """Interval-DP plan minimizing total hop cost.
+
+    Without ``cost_model`` a hop's price is its raw added-edge volume (the
+    paper's objective). With a calibrated :class:`~repro.core.costmodel.
+    SweepCostModel` each hop is priced by ``cost_model.hop_cost(Δ)`` — the
+    measured affine per-edge + per-sweep cost (with the stable-vertex
+    discount folded in), so the DP trades hop count against Δ volume the
+    way the machine actually charges for them. Either way the DP is exact
+    over integer prices.
 
     Bottom-up over interval spans (and an explicit-stack tree build), so
     neither the DP nor a maximally skewed optimal plan can hit Python's
@@ -119,6 +128,8 @@ def optimal_plan(store: SnapshotStore, i: int = 0, j: int | None = None) -> Plan
     if j is None:
         j = store.seq.num_snapshots - 1
     size = store.window_size  # cached |T(a,b)|
+    price = (cost_model.hop_cost if cost_model is not None
+             else (lambda added: added))
 
     cost: dict[Window, int] = {(a, a): 0 for a in range(i, j + 1)}
     split: dict[Window, int] = {}
@@ -128,8 +139,8 @@ def optimal_plan(store: SnapshotStore, i: int = 0, j: int | None = None) -> Plan
             s_ab = size(a, b)
             best, arg = None, a
             for m in range(a, b):
-                c = ((size(a, m) - s_ab) + cost[(a, m)]
-                     + (size(m + 1, b) - s_ab) + cost[(m + 1, b)])
+                c = (price(size(a, m) - s_ab) + cost[(a, m)]
+                     + price(size(m + 1, b) - s_ab) + cost[(m + 1, b)])
                 if best is None or c < best:
                     best, arg = c, m
             cost[(a, b)] = best
@@ -219,7 +230,7 @@ def _anchor_view(store, window, cg_split):
 
 
 def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
-                 track_parents):
+                 track_parents, fused_k=1):
     """Anchor-window fixpoint shared by all executors: (view, result, stats).
 
     The TG executors anchor at the plan apex; the sliding-window executors
@@ -228,7 +239,7 @@ def _anchor_base(store, window, semiring, source, max_iters, gated, cg_split,
     t0 = time.perf_counter()
     apex_view = _anchor_view(store, window, cg_split)
     base = run_to_fixpoint(apex_view, semiring, source, max_iters, gated=gated,
-                           track_parents=track_parents)
+                           track_parents=track_parents, fused_k=fused_k)
     host_sync(base.values)
     base_stats = StreamStats(time.perf_counter() - t0, float(base.edge_work),
                              int(base.iterations))
@@ -245,12 +256,17 @@ def run_plan(
     cg_split: int = 1,
     track_parents: bool = False,
     seed: str = "instability",
+    fused_k: int = 1,
 ) -> WorkSharingRun:
-    """Execute a TG plan (DFS; each hop = addition-only incremental update)."""
+    """Execute a TG plan (DFS; each hop = addition-only incremental update).
+
+    ``fused_k`` threads to the engine's fused-chunk launch option
+    (bit-identical results at any value; see engine.relax_sweep_fused).
+    """
     t_all = time.perf_counter()
     apex_view, base, base_stats = _anchor_base(
         store, plan.window, semiring, source, max_iters, gated, cg_split,
-        track_parents)
+        track_parents, fused_k)
 
     results: dict[int, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
@@ -266,7 +282,8 @@ def run_plan(
             child_view = view.extended(delta)          # shared immutable blocks
             res = incremental_additions(child_view, delta, semiring,
                                         values, parent, max_iters, gated=gated,
-                                        track_parents=track_parents, seed=seed)
+                                        track_parents=track_parents, seed=seed,
+                                        fused_k=fused_k)
             host_sync(res.values)
             hop_stats.append(StreamStats(time.perf_counter() - t0,
                                          float(res.edge_work),
@@ -334,6 +351,7 @@ def run_plan_batched(
     track_parents: bool = False,
     mesh=None,
     seed: str = "instability",
+    fused_k: int = 1,
 ) -> WorkSharingRun:
     """Execute a TG plan level-synchronously: one batched launch per depth.
 
@@ -366,7 +384,7 @@ def run_plan_batched(
     t_all = time.perf_counter()
     apex_view, base, base_stats = _anchor_base(
         store, plan.window, semiring, source, max_iters, gated, cg_split,
-        track_parents)
+        track_parents, fused_k)
 
     results: dict[int, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
@@ -409,7 +427,8 @@ def run_plan_batched(
             n, semiring, values, parent,
             shared_blocks=tuple(apex_view.blocks), delta_blocks=delta_blocks,
             max_iters=max_iters, track_parents=track_parents, gated=gated,
-            seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid, seed=seed)
+            seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid, seed=seed,
+            fused_k=fused_k)
         host_sync(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(jnp.sum(res.edge_work)),

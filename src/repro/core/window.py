@@ -205,6 +205,7 @@ def run_window_slide(
     cg_split: int = 1,
     track_parents: bool = False,
     seed: str = "instability",
+    fused_k: int = 1,
 ) -> WindowSlideRun:
     """Sequential window slide: one anchor fixpoint, then per-window hops.
 
@@ -212,12 +213,14 @@ def run_window_slide(
     against: each window re-executes ``incremental_additions`` from the
     anchor state with that window's slide Δ, seeded per the stable-vertex
     analysis (``seed="delta"`` restores full-Δ seeding; values identical).
+    ``fused_k`` threads to the engine's fused-chunk launch option
+    (bit-identical results at any value).
     """
     t_all = time.perf_counter()
     windows, anchor = _resolve(store, width, windows, step, start, anchor)
     anchor_view, base, base_stats = _anchor_base(
         store, anchor, semiring, source, max_iters, gated, cg_split,
-        track_parents)
+        track_parents, fused_k)
 
     results: dict[Window, jnp.ndarray] = {}
     hop_stats: list[StreamStats] = []
@@ -228,7 +231,8 @@ def run_window_slide(
         view = anchor_view.extended(delta)       # shared immutable blocks
         res = incremental_additions(view, delta, semiring, base.values,
                                     base.parent, max_iters, gated=gated,
-                                    track_parents=track_parents, seed=seed)
+                                    track_parents=track_parents, seed=seed,
+                                    fused_k=fused_k)
         host_sync(res.values)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(res.edge_work),
@@ -258,6 +262,7 @@ def run_window_slide_batched(
     track_parents: bool = False,
     mesh=None,
     seed: str = "instability",
+    fused_k: int = 1,
 ) -> WindowSlideRun:
     """Batched window slide: every slide hop as a lane of ONE stacked launch.
 
@@ -274,14 +279,14 @@ def run_window_slide_batched(
     windows, anchor = _resolve(store, width, windows, step, start, anchor)
     anchor_view, base, base_stats = _anchor_base(
         store, anchor, semiring, source, max_iters, gated, cg_split,
-        track_parents)
+        track_parents, fused_k)
 
     t0 = time.perf_counter()
     res, bucket = _slide_launch(store, semiring, anchor_view,
                                 extract_state(base), windows, anchor,
                                 max_iters=max_iters, gated=gated,
                                 track_parents=track_parents, mesh=mesh,
-                                seed=seed)
+                                seed=seed, fused_k=fused_k)
     hop_stats = [StreamStats(time.perf_counter() - t0,
                              float(jnp.sum(res.edge_work)),
                              int(jnp.max(res.iterations)))]
@@ -300,7 +305,7 @@ def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
                   windows: "list[Window]", anchor: Window,
                   *, max_iters: int, gated: bool, track_parents: bool, mesh,
                   lane_map: "list[int] | None" = None,
-                  seed: str = "instability"):
+                  seed: str = "instability", fused_k: int = 1):
     """ONE stacked launch re-converging every window from anchor state(s).
 
     The shared campaign body of ``run_window_slide_batched``, the streaming
@@ -339,7 +344,8 @@ def _slide_launch(store: SnapshotStore, semiring: Semiring, anchor_view,
         store.num_nodes, semiring, values, parent,
         shared_blocks=tuple(anchor_view.blocks), delta_blocks=delta_blocks,
         max_iters=max_iters, track_parents=track_parents, gated=gated,
-        seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid, seed=seed)
+        seed_blocks=(delta_blocks[-1],), lane_valid=lane_valid, seed=seed,
+        fused_k=fused_k)
     host_sync(res.values)
     return res, bucket
 
@@ -543,6 +549,9 @@ class CampaignPlan:
     padding_edges: int
     # instability discount (‰ stable) the volumes above were priced under
     stable_milli: int = 0
+    # measured-cost model (core/costmodel.SweepCostModel) the volumes were
+    # priced under, or None for the raw discounted edge-count objective
+    cost_model: object = None
 
     @property
     def widths(self) -> "list[int]":
@@ -551,7 +560,12 @@ class CampaignPlan:
 
     @property
     def total_edges(self) -> int:
-        """The planner's objective: slide + anchor + masked-lane volume."""
+        """The planner's objective: slide + anchor + masked-lane volume.
+
+        With a ``cost_model`` the unit is integer nanoseconds of modeled
+        launch time rather than discounted edge count — still an exact
+        integer, so plan comparisons stay machine-independent.
+        """
         return self.slide_edges + self.anchor_edges + self.padding_edges
 
 
@@ -573,7 +587,8 @@ def _instability_volume(edges: int, stable_milli: int) -> int:
 def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
                     *, data_extent: int = 1,
                     lane_budget: "int | None" = None,
-                    stable_milli: int = 0) -> CampaignPlan:
+                    stable_milli: int = 0,
+                    cost_model=None) -> CampaignPlan:
     """Evaluate a campaign partition under the planner's Δ-volume model.
 
     Anchors each campaign exactly as ``run_window_stream_batched`` does —
@@ -585,6 +600,12 @@ def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
     discount (:func:`_instability_volume`) to every hop atom — slide Δs,
     masked-lane padding and incremental anchor hops; the first anchor's
     from-scratch rebuild is NOT a Δ-seeded sweep and prices undiscounted.
+
+    With a ``cost_model`` (core/costmodel.SweepCostModel, duck-typed) every
+    hop atom prices via ``cost_model.hop_cost(edges)`` instead — the
+    model's own ``stable_milli`` applies and this function's
+    ``stable_milli`` argument is ignored — and the first anchor via
+    ``cost_model.anchor_cost``; volumes become modeled integer nanoseconds.
     """
     if not campaigns or not all(campaigns):
         raise ValueError("campaigns must be a non-empty list of non-empty "
@@ -593,27 +614,33 @@ def campaign_volume(store: SnapshotStore, campaigns: "list[list[Window]]",
     _validate_advancing(windows)
     stream_hi = windows[-1][1]
     anchors = [(c[0][0], stream_hi) for c in campaigns]
+    if cost_model is not None:
+        price = cost_model.hop_cost
+        first_anchor = cost_model.anchor_cost(store.window_size(*anchors[0]))
+    else:
+        price = lambda edges: _instability_volume(edges, stable_milli)
+        first_anchor = store.window_size(*anchors[0])
     slide = padding = 0
     for campaign, anchor in zip(campaigns, anchors):
-        deltas = [_instability_volume(hop_added_edges(store, anchor, w),
-                                      stable_milli) for w in campaign]
+        deltas = [price(hop_added_edges(store, anchor, w)) for w in campaign]
         slide += sum(deltas)
         bucket = lane_bucket(len(campaign), data_extent)
         padding += (bucket - len(campaign)) * max(deltas)
-    anchor_edges = store.window_size(*anchors[0]) + sum(
-        _instability_volume(hop_added_edges(store, prev, cur), stable_milli)
+    anchor_edges = first_anchor + sum(
+        price(hop_added_edges(store, prev, cur))
         for prev, cur in zip(anchors, anchors[1:]))
     return CampaignPlan(campaigns, anchors,
                         lane_budget if lane_budget is not None
                         else max(map(len, campaigns)),
                         data_extent, slide, anchor_edges, padding,
-                        stable_milli=stable_milli)
+                        stable_milli=stable_milli, cost_model=cost_model)
 
 
 def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
                       lane_budget: int = 8,
                       data_extent: int = 1,
-                      stable_milli: int = 0) -> CampaignPlan:
+                      stable_milli: int = 0,
+                      cost_model=None) -> CampaignPlan:
     """Δ-volume-minimal campaign partition of an advancing window sequence.
 
     The streaming analogue of ``optimal_plan``'s interval DP over grid
@@ -647,7 +674,12 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
     applies the instability discount to every hop atom exactly as
     ``campaign_volume`` does (same :func:`_instability_volume` call per
     atom), so the DP's cost equals the partition's price and the auto ≤
-    fixed-width guarantee holds under any discount.
+    fixed-width guarantee holds under any discount. A ``cost_model``
+    substitutes ``cost_model.hop_cost`` for that atom in BOTH the DP and
+    the returned plan's pricing (``campaign_volume(..., cost_model=...)``),
+    preserving the same DP-equals-price exactness — so the calibrated plan
+    is never worse than any other partition *under the model*, including
+    the raw-count plan re-priced by it.
     """
     windows = [tuple(w) for w in windows]
     if not windows:
@@ -660,6 +692,8 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
     stream_hi = windows[-1][1]
     anchor_size = [store.window_size(lo, stream_hi) for lo, _ in windows]
     window_size = [store.window_size(*w) for w in windows]
+    price = (cost_model.hop_cost if cost_model is not None
+             else lambda edges: _instability_volume(edges, stable_milli))
 
     INF = float("inf")
     f = [INF] * n + [0.0]
@@ -667,14 +701,12 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
     for j in range(n - 1, -1, -1):
         slide, widest = 0, 0
         for i in range(j + 1, min(j + lane_budget, n) + 1):
-            delta = _instability_volume(window_size[i - 1] - anchor_size[j],
-                                        stable_milli)
+            delta = price(window_size[i - 1] - anchor_size[j])
             slide += delta
             widest = max(widest, delta)
             lanes = i - j
             pad = (lane_bucket(lanes, data_extent) - lanes) * widest
-            hop = (_instability_volume(anchor_size[i] - anchor_size[j],
-                                       stable_milli) if i < n else 0)
+            hop = (price(anchor_size[i] - anchor_size[j]) if i < n else 0)
             cost = slide + pad + hop + f[i]
             if cost < f[j]:
                 f[j], cut[j] = cost, i
@@ -685,7 +717,7 @@ def optimal_campaigns(store: SnapshotStore, windows: "list[Window]", *,
         j = cut[j]
     return campaign_volume(store, campaigns, data_extent=data_extent,
                            lane_budget=lane_budget,
-                           stable_milli=stable_milli)
+                           stable_milli=stable_milli, cost_model=cost_model)
 
 
 def _stream_qkey(semiring: Semiring, source: int, max_iters: int, gated: bool,
@@ -744,7 +776,7 @@ class WindowStreamRun:
 def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
                           semiring: Semiring, source: int, max_iters: int,
                           gated: bool, cg_split: int, track_parents: bool,
-                          seed: str = "instability"):
+                          seed: str = "instability", fused_k: int = 1):
     """Anchor state via cache hit, incremental hop, or from-scratch rebuild.
 
     Returns ``(anchor_view, state, stats, event, delta_edges)`` —
@@ -753,7 +785,9 @@ def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
     hit/rebuild, cover view ⊕ hop Δ after a hop) — per-sweep reductions are
     block-partition invariant, so downstream campaign results do not depend
     on which path ran. The acquired state is (re-)cached under the anchor's
-    "AS" tag.
+    "AS" tag. ``fused_k`` only shapes the hop/rebuild launches (bit-identical
+    states at any value), which is why it is a launch option and NOT part of
+    ``qkey`` — states stay shareable across fused chunk sizes.
     """
     t0 = time.perf_counter()
     state = store.anchor_state_get(qkey, anchor)
@@ -769,7 +803,7 @@ def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
         res = incremental_additions(view, delta, semiring, cover_state.values,
                                     cover_state.parent, max_iters,
                                     gated=gated, track_parents=track_parents,
-                                    seed=seed)
+                                    seed=seed, fused_k=fused_k)
         host_sync(res.values)
         state = store.anchor_state_put(qkey, anchor, extract_state(res))
         delta_edges = (store.window_size(*anchor)
@@ -780,7 +814,7 @@ def _acquire_anchor_state(store: SnapshotStore, qkey: tuple, anchor: Window,
             delta_edges
     anchor_view, base, base_stats = _anchor_base(
         store, anchor, semiring, source, max_iters, gated, cg_split,
-        track_parents)
+        track_parents, fused_k)
     state = store.anchor_state_put(qkey, anchor, extract_state(base))
     return anchor_view, state, base_stats, "rebuild", 0
 
@@ -971,6 +1005,8 @@ def run_window_stream_batched(
     mesh=None,
     seed: str = "instability",
     stable_milli: int = 0,
+    cost_model=None,
+    fused_k: int = 1,
 ) -> WindowStreamRun:
     """Streaming slide campaigns with incremental anchor maintenance.
 
@@ -1021,6 +1057,15 @@ def run_window_stream_batched(
     (e.g. a fraction measured by a prior run over the same load); the
     run's own measured fraction comes back on the result's
     ``stable_milli`` field regardless.
+
+    ``cost_model`` upgrades the auto-mode planner from the discounted
+    edge-count proxy to measured prices (core/costmodel.SweepCostModel,
+    e.g. from ``evolve --calibrate``) — it is forwarded to
+    ``optimal_campaigns`` and recorded on the returned plan; ignored
+    outside auto mode. ``fused_k`` is the engine's fused-chunk launch
+    option, threaded to every anchor acquisition and stacked slide launch
+    in the run; results are bit-identical at any value, so it is NOT part
+    of the anchor-state cache key.
     """
     t_all = time.perf_counter()
     if stream is not None:
@@ -1060,7 +1105,7 @@ def run_window_stream_batched(
         plan = optimal_campaigns(
             store, windows, lane_budget=lane_budget,
             data_extent=mesh.shape["data"] if mesh is not None else 1,
-            stable_milli=stable_milli)
+            stable_milli=stable_milli, cost_model=cost_model)
         campaigns = plan.campaigns
     else:
         campaigns = stream_campaigns(windows, campaign_width)
@@ -1079,7 +1124,7 @@ def run_window_stream_batched(
         anchor = (min(i for i, _ in campaign), stream_hi)
         anchor_view, state, stats, event, delta_edges = _acquire_anchor_state(
             store, qkey, anchor, semiring, source, max_iters, gated, cg_split,
-            track_parents, seed=seed)
+            track_parents, seed=seed, fused_k=fused_k)
         if chain is not None:
             chain.observe(anchor)   # pin before any later put can evict it
         anchors.append(anchor)
@@ -1090,7 +1135,7 @@ def run_window_stream_batched(
         res, bucket = _slide_launch(store, semiring, anchor_view, state,
                                     campaign, anchor, max_iters=max_iters,
                                     gated=gated, track_parents=track_parents,
-                                    mesh=mesh, seed=seed)
+                                    mesh=mesh, seed=seed, fused_k=fused_k)
         hop_stats.append(StreamStats(time.perf_counter() - t0,
                                      float(jnp.sum(res.edge_work)),
                                      int(jnp.max(res.iterations))))

@@ -41,6 +41,8 @@ Blocks = tuple[EdgeBlock, ...]
 
 
 class FixpointResult(NamedTuple):
+    """Final state of a fixpoint run plus its iteration/work accounting."""
+
     values: jnp.ndarray      # float32 [num_nodes]
     parent: jnp.ndarray      # int32  [num_nodes], -1 = none/source
     iterations: jnp.ndarray  # int32 scalar — sweeps executed
@@ -102,6 +104,7 @@ def host_sync(x):
 
 
 def init_values(num_nodes: int, semiring: Semiring, source: int) -> jnp.ndarray:
+    """Fresh value vector: identity everywhere, source_value at source."""
     values = jnp.full((num_nodes,), semiring.identity, dtype=jnp.float32)
     return values.at[source].set(semiring.source_value)
 
@@ -199,12 +202,99 @@ def relax_sweep(
     return new_values, new_parent, improved, work
 
 
+def relax_sweep_fused(
+    semiring: Semiring,
+    num_nodes: int,
+    values: jnp.ndarray,
+    parent: jnp.ndarray,
+    frontier: jnp.ndarray,
+    blocks: Blocks,
+    k: int = 1,
+    allowed: jnp.ndarray | None = None,
+    gated: bool = False,
+    track_parents: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Up to ``k`` frontier-masked sweeps as one fused chunk.
+
+    The fused unit of execution ``_fixpoint`` consumes: a chunk runs sweeps
+    until the frontier empties or ``min(k, allowed)`` is reached (``allowed``
+    is a traced int32 cap, default ``k`` — the fixpoint driver uses it to
+    respect ``max_iters`` exactly), and convergence checks inside the chunk
+    never surface to the host. Two implementations, bit-identical by the
+    differential harness (tests/test_kernels_diff.py):
+
+    * reference (default): an inner ``lax.while_loop`` over
+      :func:`relax_sweep` — the portable path and the engine's CPU default;
+    * ``use_pallas=True``: the fused pallas kernel
+      (``kernels/edge_relax_multi``), which keeps values/frontier
+      VMEM-resident across all sweeps with an on-chip early exit — the TPU
+      path (``interpret=True`` validates it in this CPU-only container).
+
+    graphlint rule G010 grants this call to ``graph.stability`` seeding and
+    the engine's ``_fixpoint`` only — everything else reaches fused sweeps
+    through the launch stack's ``fused_k`` option.
+
+    Returns ``(values, parent, frontier, sweeps, work)``.
+    """
+    if allowed is None:
+        allowed = jnp.int32(k)
+    if use_pallas:
+        from repro.kernels import relax_multi
+        from repro.kernels.edge_relax.edge_relax import KERNEL_OP_FOR
+        src = jnp.concatenate([b[0] for b in blocks])
+        dst = jnp.concatenate([b[1] for b in blocks])
+        w = jnp.concatenate([b[2] for b in blocks])
+        return relax_multi(values, parent, frontier, src, dst, w, allowed,
+                           op=KERNEL_OP_FOR[semiring.name],
+                           num_nodes=num_nodes, k=k,
+                           track_parents=track_parents, interpret=interpret)
+
+    def cond(state):
+        _, _, frontier, s, _ = state
+        return jnp.logical_and(s < allowed, jnp.any(frontier))
+
+    def body(state):
+        values, parent, frontier, s, work = state
+        values, parent, improved, dw = relax_sweep(
+            semiring, num_nodes, values, parent, frontier, blocks,
+            gated=gated, track_parents=track_parents)
+        return values, parent, improved, s + 1, work + dw
+
+    init = (values, parent, frontier, jnp.int32(0), jnp.float32(0))
+    return jax.lax.while_loop(cond, body, init)
+
+
 def _fixpoint(semiring: Semiring, num_nodes: int, max_iters: int,
               values, parent, frontier, blocks: Blocks,
-              gated: bool = False, track_parents: bool = True) -> FixpointResult:
+              gated: bool = False, track_parents: bool = True,
+              fused_k: int = 1) -> FixpointResult:
     def cond(state):
         _, _, frontier, it, _ = state
         return jnp.logical_and(it < max_iters, jnp.any(frontier))
+
+    if fused_k > 1:
+        # Consume fused chunks: each outer step advances up to fused_k
+        # sweeps via relax_sweep_fused, so the host-visible convergence
+        # check runs once per chunk instead of once per sweep. The sweep
+        # sequence (and therefore values/parent/iterations/edge_work) is
+        # bit-identical to the unfused loop: the chunk's dynamic cap
+        # min(fused_k, max_iters - it) never overruns max_iters, and the
+        # chunk stops early the moment the frontier empties.
+        def chunk_body(state):
+            values, parent, frontier, it, work = state
+            cap = jnp.minimum(jnp.int32(fused_k), max_iters - it)
+            values, parent, frontier, s, dw = relax_sweep_fused(
+                semiring, num_nodes, values, parent, frontier, blocks,
+                k=fused_k, allowed=cap, gated=gated,
+                track_parents=track_parents)
+            return values, parent, frontier, it + s, work + dw
+
+        init = (values, parent, frontier, jnp.int32(0), jnp.float32(0))
+        values, parent, _, it, work = jax.lax.while_loop(cond, chunk_body,
+                                                         init)
+        return FixpointResult(values, parent, it, work)
 
     def body(state):
         values, parent, frontier, it, work = state
@@ -218,11 +308,11 @@ def _fixpoint(semiring: Semiring, num_nodes: int, max_iters: int,
     return FixpointResult(values, parent, it, work)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8, 9))
 def _fixpoint_jit(semiring, num_nodes, max_iters, values, parent, frontier,
-                  blocks, gated=False, track_parents=True):
+                  blocks, gated=False, track_parents=True, fused_k=1):
     return _fixpoint(semiring, num_nodes, max_iters, values, parent, frontier,
-                     blocks, gated, track_parents)
+                     blocks, gated, track_parents, fused_k)
 
 
 def run_to_fixpoint(
@@ -235,8 +325,14 @@ def run_to_fixpoint(
     frontier: jnp.ndarray | None = None,
     gated: bool = False,
     track_parents: bool = True,
+    fused_k: int = 1,
 ) -> FixpointResult:
-    """Run the query to fixpoint on ``view`` (from scratch or a warm state)."""
+    """Run the query to fixpoint on ``view`` (from scratch or a warm state).
+
+    ``fused_k`` > 1 makes the fixpoint consume fused chunks of up to that
+    many sweeps per convergence check (:func:`relax_sweep_fused`) — a pure
+    launch-shape knob, bit-identical results at any value.
+    """
     n = view.num_nodes
     fresh = values is None
     if fresh:
@@ -249,7 +345,7 @@ def run_to_fixpoint(
         frontier = (jnp.zeros((n,), bool).at[source].set(True) if fresh
                     else jnp.ones((n,), bool))
     return _fixpoint_jit(semiring, n, max_iters, values, parent, frontier,
-                         tuple(view.blocks), gated, track_parents)
+                         tuple(view.blocks), gated, track_parents, fused_k)
 
 
 def incremental_additions(
@@ -262,6 +358,7 @@ def incremental_additions(
     gated: bool = False,
     track_parents: bool = True,
     seed: str = "instability",
+    fused_k: int = 1,
 ) -> FixpointResult:
     """Addition-only incremental update (the cheap KickStarter direction).
 
@@ -281,7 +378,7 @@ def incremental_additions(
                         mode=seed, track_parents=track_parents)
     res = _fixpoint_jit(semiring, n, max_iters, seeded.values, seeded.parent,
                         seeded.frontier, tuple(view.blocks), gated,
-                        track_parents)
+                        track_parents, fused_k)
     return FixpointResult(res.values, res.parent, res.iterations + 1,
                           res.edge_work + seeded.seed_work, seeded.unstable)
 
@@ -311,7 +408,7 @@ def gather_lane_states(values: jnp.ndarray, parent: jnp.ndarray,
 def batched_incremental(semiring, num_nodes, max_iters,
                         values, parent, shared_blocks, delta_blocks,
                         track_parents=True, gated=False, seed_blocks=None,
-                        lane_valid=None, seed="instability"):
+                        lane_valid=None, seed="instability", fused_k=1):
     """vmapped incremental additions (unjitted; launch/dryrun jits with shardings).
 
     values/parent: [S, N]; shared_blocks: tuple of EdgeBlock (broadcast);
@@ -347,7 +444,7 @@ def batched_incremental(semiring, num_nodes, max_iters,
         res = _fixpoint(semiring, num_nodes, max_iters, seeded.values,
                         seeded.parent, seeded.frontier,
                         shared_blocks + delta_blocks, gated=gated,
-                        track_parents=track_parents)
+                        track_parents=track_parents, fused_k=fused_k)
         return FixpointResult(res.values, res.parent, res.iterations + 1,
                               res.edge_work + seeded.seed_work,
                               seeded.unstable)
@@ -363,16 +460,16 @@ def batched_incremental(semiring, num_nodes, max_iters,
         jnp.where(lane_valid, res.unstable, 0))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8, 11))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8, 11, 12))
 def _batched_incremental_jit(semiring, num_nodes, max_iters,
                              values, parent, shared_blocks, delta_blocks,
                              track_parents=True, gated=False,
                              seed_blocks=None, lane_valid=None,
-                             seed="instability"):
+                             seed="instability", fused_k=1):
     return batched_incremental(semiring, num_nodes, max_iters,
                                values, parent, shared_blocks, delta_blocks,
                                track_parents, gated, seed_blocks, lane_valid,
-                               seed)
+                               seed, fused_k)
 
 
 def incremental_additions_batched(
@@ -388,9 +485,16 @@ def incremental_additions_batched(
     seed_blocks: Blocks | None = None,
     lane_valid: jnp.ndarray | None = None,  # [S] bool; False = padding lane
     seed: str = "instability",
+    fused_k: int = 1,
 ) -> FixpointResult:
+    """Batched addition-only updates, one lane per Δ (see batched_incremental).
+
+    Bit-identical per lane to :func:`incremental_additions`; ``fused_k``
+    sets the sweeps-per-dispatch chunk size, a pure launch-shape knob.
+    """
     return _batched_incremental_jit(semiring, num_nodes, max_iters,
                                     values, parent, tuple(shared_blocks),
                                     tuple(delta_blocks), track_parents, gated,
                                     None if seed_blocks is None
-                                    else tuple(seed_blocks), lane_valid, seed)
+                                    else tuple(seed_blocks), lane_valid, seed,
+                                    fused_k)

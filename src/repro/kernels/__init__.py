@@ -1,12 +1,15 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-Three kernels (each: <name>.py pl.pallas_call + BlockSpec, ops.py jit
+Four kernels (each: <name>.py pl.pallas_call + BlockSpec, ops.py jit
 wrapper, ref.py pure-jnp oracle, interpret-mode tests in tests/):
 
-  edge_relax      the paper's hot loop — gather(val[src]) ⊕ w → segment
-                  min/max by dst over dst-sorted edge blocks
-  segment_reduce  GNN message aggregation (sum/min/max over edge messages)
-  embedding_bag   fused multi-hot gather + bag reduction (recsys)
+  edge_relax       the paper's hot loop — gather(val[src]) ⊕ w → segment
+                   min/max by dst over dst-sorted edge blocks
+  edge_relax_multi fused k-sweep relax — up to k frontier-masked sweeps in
+                   one pallas_call, values/frontier VMEM-resident across
+                   the grid, on-chip convergence early exit
+  segment_reduce   GNN message aggregation (sum/min/max over edge messages)
+  embedding_bag    fused multi-hot gather + bag reduction (recsys)
 
 This container is CPU-only: kernels are written against the TPU model
 (BlockSpec VMEM tiling, MXU-aligned last dims, sequential grid accumulation)
@@ -14,7 +17,9 @@ and validated with interpret=True, per the assignment.
 """
 
 from repro.kernels.edge_relax.ops import edge_relax
+from repro.kernels.edge_relax_multi.ops import relax_multi
 from repro.kernels.segment_reduce.ops import segment_reduce
 from repro.kernels.embedding_bag.ops import embedding_bag_fused
 
-__all__ = ["edge_relax", "segment_reduce", "embedding_bag_fused"]
+__all__ = ["edge_relax", "relax_multi", "segment_reduce",
+           "embedding_bag_fused"]

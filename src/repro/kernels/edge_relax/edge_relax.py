@@ -17,9 +17,12 @@ Design (TPU adaptation of the CPU papers' per-vertex worklists — DESIGN.md §2
   scatter a near-monotone segment update, which the Mosaic compiler turns
   into runs rather than random access.
 
-Semirings: min_plus (BFS/SSSP), max_min (SSWP), min_max (SSNP),
-max_times (Viterbi). Padding edges carry dst == num_nodes and land in the
-sentinel row, which the wrapper drops.
+Semirings: min_plus (SSSP), min_plus_unit (BFS — unit edge cost, weights
+ignored), max_min (SSWP), min_max (SSNP), max_times (Viterbi); the
+engine-name → kernel-op mapping is :data:`KERNEL_OP_FOR` and is
+completeness-tested against ``ALL_SEMIRINGS`` (tests/test_kernels_diff.py).
+Padding edges carry dst == num_nodes and land in the sentinel row, which
+the wrapper drops.
 """
 
 from __future__ import annotations
@@ -36,14 +39,39 @@ BLOCK_E = 4096
 SEMIRING_OPS = {
     # name: (combine, reduce-kind, identity)
     "min_plus": (lambda v, w: v + w, "min", jnp.inf),
+    "min_plus_unit": (lambda v, w: v + 1.0, "min", jnp.inf),  # BFS: unit cost
     "max_min": (lambda v, w: jnp.minimum(v, w), "max", -jnp.inf),
     "min_max": (lambda v, w: jnp.maximum(v, w), "min", jnp.inf),
     "max_times": (lambda v, w: v * w, "max", 0.0),
 }
 
+# Engine semiring name -> kernel op name. One entry per ALL_SEMIRINGS member;
+# tests/test_kernels_diff.py cross-checks completeness in both directions.
+KERNEL_OP_FOR = {
+    "bfs": "min_plus_unit",
+    "sssp": "min_plus",
+    "sswp": "max_min",
+    "ssnp": "min_max",
+    "viterbi": "max_times",
+}
+
+
+class UnsupportedSemiring(KeyError):
+    """A kernel was asked for a semiring op it has no lowering for."""
+
+
+def ops_for(op: str):
+    """Resolve ``op`` in SEMIRING_OPS, raising loudly on unknown names."""
+    try:
+        return SEMIRING_OPS[op]
+    except KeyError as exc:
+        raise UnsupportedSemiring(
+            f"no kernel lowering for semiring op {op!r}; known ops: "
+            f"{sorted(SEMIRING_OPS)}") from exc
+
 
 def _kernel(values_ref, src_ref, dst_ref, w_ref, out_ref, *, op: str):
-    combine, reduce_kind, ident = SEMIRING_OPS[op]
+    combine, reduce_kind, ident = ops_for(op)
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -69,7 +97,13 @@ def edge_relax_pallas(values, src, dst, w, *, op: str, num_nodes: int,
     Returns the [N] segment-reduced candidate vector (sentinel row dropped).
     """
     e = src.shape[0]
-    assert e % BLOCK_E == 0, f"edge count {e} must be padded to {BLOCK_E}"
+    # A real error, not an assert: `python -O` strips asserts, and a
+    # misaligned edge stream would silently drop the trailing partial block.
+    if e % BLOCK_E != 0:
+        raise ValueError(
+            f"edge count {e} is not a multiple of the kernel block "
+            f"BLOCK_E={BLOCK_E}; pad the edge stream (sentinel dst == "
+            f"num_nodes) before calling edge_relax_pallas")
     grid = (e // BLOCK_E,)
     # sentinel row N absorbs padding edges
     values_pad = jnp.concatenate([values, jnp.zeros((1,), values.dtype)])

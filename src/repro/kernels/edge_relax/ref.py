@@ -5,11 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.edge_relax.edge_relax import SEMIRING_OPS
+from repro.kernels.edge_relax.edge_relax import ops_for
 
 
 def edge_relax_ref(values, src, dst, w, *, op: str, num_nodes: int):
-    combine, reduce_kind, ident = SEMIRING_OPS[op]
+    combine, reduce_kind, ident = ops_for(op)
     cand = combine(values[src], w)
     if reduce_kind == "min":
         out = jax.ops.segment_min(cand, dst, num_nodes + 1)

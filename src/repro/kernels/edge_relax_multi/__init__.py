@@ -1,0 +1,6 @@
+"""Fused k-sweep frontier-masked relax kernel (see edge_relax_multi.py)."""
+
+from repro.kernels.edge_relax_multi.ops import relax_multi
+from repro.kernels.edge_relax_multi.ref import relax_multi_ref
+
+__all__ = ["relax_multi", "relax_multi_ref"]

@@ -1,0 +1,185 @@
+"""Pallas TPU kernel: fused k-sweep frontier-masked edge relaxation.
+
+One ``pallas_call`` runs up to ``k`` full relax sweeps (the engine's
+Bellman-Ford-style rounds) back to back. The unfused engine pays one HBM
+round-trip per sweep: ``_fixpoint``'s while_loop reads the frontier back to
+decide convergence, and values/frontier are rematerialized from HBM every
+iteration. Here the grid is ``(k, E/BLOCK_E)`` and everything a convergence
+check needs stays on chip:
+
+* node values, dependence parents and the frontier bitmask are resident
+  VMEM **outputs** (BlockSpec index map pinned to block 0) carried across
+  all ``k * nb`` sequential grid steps;
+* the per-sweep best-candidate and winner-src accumulators live in VMEM
+  scratch, re-initialized at each sweep's first edge block;
+* the improved mask written at each sweep's last block *is* the next
+  sweep's frontier — on-chip frontier compaction, no HBM round-trip;
+* an SMEM run flag computed at each sweep's first block gates every later
+  block with ``pl.when``: once the frontier empties (or the dynamic
+  ``allowed`` cap is reached) the remaining sweeps retire without touching
+  the edge stream — the early-exit path.
+
+Bit-exactness contract (tests/test_kernels_diff.py): for every semiring in
+the engine registry, ``(values, parent, frontier, iterations, edge_work)``
+equal ``k`` sequential applications of ``engine.relax_sweep`` — including
+runs that converge before ``k`` — in interpret and lowered-CPU modes.
+
+The incremental winner merge reproduces the engine's post-hoc cross-block
+parent tie-break (smallest winning src): carrying ``(best-so-far, min src
+achieving it)`` and merging each block with strictly-better/equal cases is
+inductively equal to merging all per-block winners against the final best.
+
+Sentinel row ``num_nodes`` absorbs padding edges (dst == num_nodes); its
+value is pinned to the reduce order's *anti-identity* (-inf for min
+semirings, +inf for max) so it can never strictly improve and therefore
+never re-enters the frontier.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.edge_relax.edge_relax import ops_for
+
+BLOCK_E = 4096
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def anti_identity(op: str) -> float:
+    """The value nothing can strictly beat under ``op``'s reduce order."""
+    _, reduce_kind, _ = ops_for(op)
+    return float(-jnp.inf) if reduce_kind == "min" else float(jnp.inf)
+
+
+def _kernel(values_in, parent_in, frontier_in, src_ref, dst_ref, w_ref,
+            allowed_ref, values_out, parent_out, frontier_out, iters_out,
+            work_out, best_acc, winner_acc, run_flag,
+            *, op: str, num_nodes: int, blocks_per_sweep: int,
+            track_parents: bool):
+    combine, reduce_kind, ident_f = ops_for(op)
+    is_min = reduce_kind == "min"
+    ident = jnp.float32(ident_f)
+    sweep = pl.program_id(0)
+    blk = pl.program_id(1)
+
+    @pl.when((sweep == 0) & (blk == 0))
+    def _init():
+        values_out[...] = values_in[...]
+        parent_out[...] = parent_in[...]
+        frontier_out[...] = frontier_in[...]
+        iters_out[...] = jnp.zeros_like(iters_out)
+        work_out[...] = jnp.zeros_like(work_out)
+
+    @pl.when(blk == 0)
+    def _sweep_init():
+        live = jnp.any(frontier_out[...]) & (sweep < allowed_ref[0])
+        run_flag[0] = live.astype(jnp.int32)
+        best_acc[...] = jnp.full_like(best_acc, ident)
+        if track_parents:
+            winner_acc[...] = jnp.full_like(winner_acc, INT_MAX)
+
+    run = run_flag[0] > 0
+
+    @pl.when(run)
+    def _block():
+        vals = values_out[...]
+        s, d, w = src_ref[...], dst_ref[...], w_ref[...]
+        active = jnp.take(frontier_out[...], s, axis=0)
+        cand = jnp.where(active, combine(jnp.take(vals, s, axis=0), w), ident)
+        full_ident = jnp.full((num_nodes + 1,), ident)
+        if is_min:
+            blk_best = full_ident.at[d].min(cand)
+        else:
+            blk_best = full_ident.at[d].max(cand)
+        ba = best_acc[...]
+        if track_parents:
+            # smallest winning src in this block, merged incrementally
+            is_win = active & (cand == jnp.take(blk_best, d, axis=0))
+            blk_winner = jnp.full(
+                (num_nodes + 1,), INT_MAX, jnp.int32
+            ).at[d].min(jnp.where(is_win, s, INT_MAX))
+            wa = winner_acc[...]
+            stricter = (blk_best < ba) if is_min else (blk_best > ba)
+            winner_acc[...] = jnp.where(
+                stricter, blk_winner,
+                jnp.where(blk_best == ba, jnp.minimum(wa, blk_winner), wa))
+        best_acc[...] = (jnp.minimum(ba, blk_best) if is_min
+                         else jnp.maximum(ba, blk_best))
+        work_out[...] = work_out[...] + jnp.sum(
+            active & (d < num_nodes), dtype=jnp.float32)
+
+    @pl.when(run & (blk == blocks_per_sweep - 1))
+    def _finish():
+        vals = values_out[...]
+        best = best_acc[...]
+        improved = (best < vals) if is_min else (best > vals)
+        values_out[...] = (jnp.minimum(vals, best) if is_min
+                           else jnp.maximum(vals, best))
+        if track_parents:
+            parent_out[...] = jnp.where(improved, winner_acc[...],
+                                        parent_out[...])
+        frontier_out[...] = improved
+        iters_out[...] = iters_out[...] + 1
+
+
+def relax_multi_pallas(values, parent, frontier, src, dst, w, allowed, *,
+                       op: str, num_nodes: int, k: int,
+                       track_parents: bool = True, interpret: bool = True):
+    """Fused k-sweep relax over one padded edge stream.
+
+    values [N] f32, parent [N] i32, frontier [N] bool; src/dst [E] i32
+    (dst == N for padding), w [E] f32 with E a multiple of BLOCK_E;
+    ``allowed`` an int32 scalar dynamically capping executed sweeps at
+    ``min(k, allowed)``. Returns ``(values, parent, frontier, sweeps,
+    work)`` with the sentinel row dropped.
+    """
+    e = src.shape[0]
+    # A real error, not an assert: `python -O` strips asserts, and a
+    # misaligned edge stream would silently drop the trailing partial block.
+    if e == 0 or e % BLOCK_E != 0:
+        raise ValueError(
+            f"edge count {e} is not a positive multiple of the kernel block "
+            f"BLOCK_E={BLOCK_E}; pad the edge stream (sentinel dst == "
+            f"num_nodes) before calling relax_multi_pallas")
+    if k < 1:
+        raise ValueError(f"fused sweep count k={k} must be >= 1")
+    nb = e // BLOCK_E
+    anti = jnp.float32(anti_identity(op))
+    values_pad = jnp.concatenate([values, anti[None]])
+    parent_pad = jnp.concatenate([parent, jnp.zeros((1,), parent.dtype)])
+    frontier_pad = jnp.concatenate([frontier, jnp.zeros((1,), bool)])
+    resident = pl.BlockSpec((num_nodes + 1,), lambda s, i: (0,))
+    tiled = pl.BlockSpec((BLOCK_E,), lambda s, i: (i,))
+    scalar = pl.BlockSpec((1,), lambda s, i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, op=op, num_nodes=num_nodes,
+                          blocks_per_sweep=nb, track_parents=track_parents),
+        grid=(k, nb),
+        in_specs=[resident, resident, resident, tiled, tiled, tiled, scalar],
+        out_specs=[resident, resident, resident, scalar, scalar],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_nodes + 1,), values.dtype),
+            jax.ShapeDtypeStruct((num_nodes + 1,), parent.dtype),
+            jax.ShapeDtypeStruct((num_nodes + 1,), jnp.bool_),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((num_nodes + 1,), jnp.float32),   # best_acc
+            pltpu.VMEM((num_nodes + 1,), jnp.int32),     # winner_acc
+            pltpu.SMEM((1,), jnp.int32),                 # run_flag
+        ],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(values_pad, parent_pad, frontier_pad, src, dst, w,
+      jnp.asarray(allowed, jnp.int32).reshape((1,)))
+    vals, par, fro, sweeps, work = out
+    return (vals[:num_nodes], par[:num_nodes], fro[:num_nodes],
+            sweeps[0], work[0])

@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the fused k-sweep relax kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_relax_multi.edge_relax_multi import (
+    BLOCK_E, relax_multi_pallas)
+from repro.kernels.edge_relax_multi.ref import relax_multi_ref
+
+LAYOUTS = ("edge", "csr")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "op", "num_nodes", "k", "layout", "track_parents", "use_pallas",
+    "interpret"))
+def relax_multi(values, parent, frontier, src, dst, w, allowed=None, *,
+                op: str, num_nodes: int, k: int, layout: str = "edge",
+                track_parents: bool = True, use_pallas: bool = True,
+                interpret: bool = True):
+    """Fused k-sweep frontier-masked relax; pads edges to the kernel block.
+
+    ``allowed`` (traced int32 scalar, default ``k``) dynamically caps the
+    executed sweeps below the static grid bound ``k`` — the engine uses it
+    to stop a chunk at ``max_iters`` exactly. ``layout`` selects the edge
+    stream order fed to the kernel: ``"edge"`` keeps the caller's order,
+    ``"csr"`` pre-sorts by dst so the per-block scatter degenerates into
+    segment runs (benchmarks/roofline.py compares the two). Results are
+    bit-identical either way — every per-node reduction the kernel performs
+    (segment min/max, smallest winning src) is permutation-invariant.
+
+    Returns ``(values, parent, frontier, sweeps, work)``. On a real TPU
+    pass interpret=False; this container is CPU-only so interpret=True is
+    the default (validated in interpret mode, per the assignment).
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"unknown layout {layout!r}: expected one of "
+                         f"{LAYOUTS}")
+    if allowed is None:
+        allowed = jnp.int32(k)
+    if not use_pallas:
+        return relax_multi_ref(values, parent, frontier, src, dst, w,
+                               allowed, op=op, num_nodes=num_nodes, k=k,
+                               track_parents=track_parents)
+    e = src.shape[0]
+    pad = (-e) % BLOCK_E
+    if e + pad == 0:
+        pad = BLOCK_E  # keep at least one (all-padding) block in the grid
+    if pad:
+        src = jnp.concatenate([src, jnp.zeros((pad,), src.dtype)])
+        dst = jnp.concatenate([dst, jnp.full((pad,), num_nodes, dst.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    if layout == "csr":
+        perm = jnp.argsort(dst)  # padding (dst == num_nodes) sorts last
+        src, dst, w = src[perm], dst[perm], w[perm]
+    return relax_multi_pallas(values, parent, frontier, src, dst, w, allowed,
+                              op=op, num_nodes=num_nodes, k=k,
+                              track_parents=track_parents,
+                              interpret=interpret)

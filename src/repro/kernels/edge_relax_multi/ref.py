@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the fused k-sweep relax kernel.
+
+Mirrors ``engine.relax_sweep`` applied ``min(k, allowed)`` times over one
+(padded) edge stream with early exit on an empty frontier — the same
+contract the pallas kernel is differential-tested against. Self-contained
+on purpose: kernels must not import the engine (the engine imports the
+kernels), so the sweep semantics are restated here and the equivalence is
+enforced by tests/test_kernels_diff.py rather than by sharing code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_relax.edge_relax import ops_for
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _sweep(combine, is_min, ident, num_nodes, values, parent, frontier,
+           src, dst, w, track_parents):
+    """One frontier-masked sweep; returns (values, parent, improved, work)."""
+    active = frontier[src]
+    cand = jnp.where(active, combine(values[src], w), ident)
+    if is_min:
+        best = jax.ops.segment_min(cand, dst, num_nodes + 1)[:num_nodes]
+    else:
+        best = jax.ops.segment_max(cand, dst, num_nodes + 1)[:num_nodes]
+    work = jnp.sum(active & (dst < num_nodes), dtype=jnp.float32)
+    improved = (best < values) if is_min else (best > values)
+    new_values = (jnp.minimum(values, best) if is_min
+                  else jnp.maximum(values, best))
+    if not track_parents:
+        return new_values, parent, improved, work
+    best_pad = jnp.concatenate([best, jnp.float32([ident])])
+    is_win = active & (cand == best_pad[dst])
+    winner = jax.ops.segment_min(jnp.where(is_win, src, INT_MAX), dst,
+                                 num_nodes + 1)[:num_nodes]
+    new_parent = jnp.where(improved, winner, parent)
+    return new_values, new_parent, improved, work
+
+
+def relax_multi_ref(values, parent, frontier, src, dst, w, allowed=None, *,
+                    op: str, num_nodes: int, k: int,
+                    track_parents: bool = True):
+    """``min(k, allowed)`` sweeps with early exit — the kernel's oracle.
+
+    Returns ``(values, parent, frontier, sweeps, work)``.
+    """
+    combine, reduce_kind, ident_f = ops_for(op)
+    is_min = reduce_kind == "min"
+    ident = jnp.float32(ident_f)
+    cap = jnp.minimum(jnp.int32(k),
+                      jnp.int32(k) if allowed is None
+                      else jnp.asarray(allowed, jnp.int32))
+
+    def cond(state):
+        _, _, frontier, s, _ = state
+        return jnp.logical_and(s < cap, jnp.any(frontier))
+
+    def body(state):
+        vals, par, fro, s, wk = state
+        vals, par, improved, dw = _sweep(
+            combine, is_min, ident, num_nodes, vals, par, fro, src, dst, w,
+            track_parents)
+        return vals, par, improved, s + 1, wk + dw
+
+    init = (values, parent, frontier, jnp.int32(0), jnp.float32(0))
+    vals, par, fro, sweeps, work = jax.lax.while_loop(cond, body, init)
+    return vals, par, fro, sweeps, work

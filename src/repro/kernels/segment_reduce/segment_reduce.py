@@ -48,7 +48,13 @@ def segment_reduce_pallas(data, seg, *, num_segments: int, reduce: str = "sum",
                           interpret: bool = True):
     """data [E, D] f32; seg [E] i32 (== num_segments for padding)."""
     e, d = data.shape
-    assert e % BLOCK_E == 0, f"edge count {e} must be padded to {BLOCK_E}"
+    # A real error, not an assert: `python -O` strips asserts, and a
+    # misaligned message stream would silently drop the trailing block.
+    if e % BLOCK_E != 0:
+        raise ValueError(
+            f"edge count {e} is not a multiple of the kernel block "
+            f"BLOCK_E={BLOCK_E}; pad the message stream (sentinel segment == "
+            f"num_segments) before calling segment_reduce_pallas")
     d_pad = (-d) % LANE
     if d_pad:
         data = jnp.pad(data, ((0, 0), (0, d_pad)))

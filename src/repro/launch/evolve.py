@@ -28,6 +28,15 @@ dhb/wsb, windows for --window-batch) over a 1-D ``data`` mesh spanning all
 local devices (launch/mesh.py::make_snapshot_mesh) — on one CPU device it
 is a no-op, on a multi-chip host each launch's lanes split across chips.
 
+``--fused-k K`` runs every sliding-window/stream launch with the engine's
+fused-chunk option: up to K frontier-masked sweeps per fused kernel
+dispatch (kernels/edge_relax_multi), bit-identical results at any K.
+``--calibrate`` (with ``--stream``) fits a measured :class:`SweepCostModel`
+(core/costmodel.py) from timed sweeps at two edge scales, prints the fitted
+per-edge/per-sweep prices, and hands the model to the timed stream's
+Δ-volume planner — the ``campaign_width="auto"`` DP then minimizes modeled
+nanoseconds instead of discounted edge counts (docs/BENCHMARKS.md).
+
 ``--ingest`` builds the store by replaying the generated sequence as a
 seeded edge-event firehose instead of loading it precomputed: every
 snapshot is born from a ``Watermark.cut`` over an ``EdgeLog``
@@ -168,11 +177,25 @@ def main(argv=None):
                         "(default 4), or 'auto' to let the Δ-volume DP "
                         "(core/window.py optimal_campaigns) choose the "
                         "partition — see docs/STREAMING.md")
+    p.add_argument("--fused-k", type=int, default=1, metavar="K",
+                   help="fused-chunk size for the sliding-window/stream "
+                        "launches: up to K frontier-masked sweeps per fused "
+                        "kernel dispatch (kernels/edge_relax_multi; "
+                        "bit-identical results at any K, default 1)")
+    p.add_argument("--calibrate", action="store_true",
+                   help="with --stream: fit a measured SweepCostModel "
+                        "(core/costmodel.py) from timed sweeps, print it, "
+                        "and hand it to the timed stream's campaign planner "
+                        "(campaign-width 'auto' prices in modeled ns)")
     args = p.parse_args(argv)
     if args.window_batch and args.window is None:
         p.error("--window-batch requires --window W")
     if args.stream and args.window is None:
         p.error("--stream requires --window W")
+    if args.calibrate and not args.stream:
+        p.error("--calibrate requires --stream")
+    if args.fused_k < 1:
+        p.error(f"--fused-k must be >= 1, got {args.fused_k}")
     mesh = make_snapshot_mesh() if args.shard else None
 
     sr = ALL_SEMIRINGS[args.alg]
@@ -217,7 +240,7 @@ def main(argv=None):
         windows = slide_windows(args.snapshots, args.window,
                                 step=args.window_step)
         sl = run_window_slide(store, sr, args.source, args.window,
-                              step=args.window_step)
+                              step=args.window_step, fused_k=args.fused_k)
         print(f"[evolve] Window slide (seq):   {sl.wall_s:.2f}s  "
               f"({len(windows)} windows of width {args.window}, "
               f"anchor T{sl.anchor}, Δ-edges {sl.added_edges})")
@@ -225,7 +248,7 @@ def main(argv=None):
         if args.window_batch:
             slb = run_window_slide_batched(store, sr, args.source,
                                            args.window, step=args.window_step,
-                                           mesh=mesh)
+                                           mesh=mesh, fused_k=args.fused_k)
             print(f"[evolve] Window slide (batch): {slb.wall_s:.2f}s  "
                   f"speedup {sl.wall_s / slb.wall_s:.2f}x  "
                   f"(1 stacked launch vs {len(sl.hop_stats)} hops)")
@@ -242,21 +265,38 @@ def main(argv=None):
                                              args.window,
                                              step=args.window_step,
                                              campaign_width=args.campaign_width,
-                                             mesh=mesh)
+                                             mesh=mesh, fused_k=args.fused_k)
             store.release(("AS",))
+            cost_model = None
+            if args.calibrate:
+                # Fit measured per-edge/per-sweep prices on the exact store
+                # and launch options the timed run uses, folding in the
+                # warm-up's measured stable fraction as the hop discount.
+                from repro.core.costmodel import calibrate
+                cost_model = calibrate(store, sr, args.source,
+                                       stable_milli=warm.stable_milli,
+                                       fused_k=args.fused_k)
+                print(f"[evolve] calibrated sweep cost: "
+                      f"{cost_model.per_edge_nanos}ns/edge + "
+                      f"{cost_model.per_sweep_nanos}ns/sweep "
+                      f"(hops discounted {cost_model.stable_milli}‰ stable)")
             # the warm-up's measured stable fraction becomes the Δ-volume
             # DP's instability discount for the timed run (deterministic
-            # load: the warm-up saw the exact hops the plan will price)
+            # load: the warm-up saw the exact hops the plan will price);
+            # with --calibrate the fitted model replaces the raw-count
+            # objective outright
             stm = run_window_stream_batched(store, sr, args.source,
                                             args.window, step=args.window_step,
                                             campaign_width=args.campaign_width,
                                             stable_milli=warm.stable_milli,
-                                            mesh=mesh)
+                                            mesh=mesh, cost_model=cost_model,
+                                            fused_k=args.fused_k)
             # the cold baseline rebuilds its anchor per campaign: one
             # slide-batched call per campaign with the stream's own anchors
             t0 = time.perf_counter()
             cold = [run_window_slide_batched(store, sr, args.source,
-                                             windows=c, anchor=a, mesh=mesh)
+                                             windows=c, anchor=a, mesh=mesh,
+                                             fused_k=args.fused_k)
                     for c, a in zip(stm.campaigns, stm.anchors)]
             t_cold = time.perf_counter() - t0
             shape = (f"widths {[len(c) for c in stm.campaigns]}"
@@ -271,13 +311,17 @@ def main(argv=None):
                   f"{stm.anchor_delta_edges} edges; "
                   f"stable {stm.stable_milli}‰)")
             if stm.plan is not None:
+                unit = ("modeled ns" if stm.plan.cost_model is not None
+                        else "modeled Δ-edges")
+                pricing = ("calibrated SweepCostModel"
+                           if stm.plan.cost_model is not None
+                           else f"{stm.plan.stable_milli}‰ stable")
                 print(f"[evolve]   campaign plan (auto, lane_budget "
                       f"{stm.plan.lane_budget}): "
                       f"slide {stm.plan.slide_edges} + anchor "
                       f"{stm.plan.anchor_edges} + pad "
                       f"{stm.plan.padding_edges} = {stm.plan.total_edges} "
-                      f"modeled Δ-edges "
-                      f"(priced at {stm.plan.stable_milli}‰ stable)")
+                      f"{unit} (priced at {pricing})")
             if mesh is not None:
                 _shard_report(mesh, "stream", stm.lane_layout)
 

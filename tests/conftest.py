@@ -25,6 +25,24 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop jax's compiled-executable caches after every test module.
+
+    Every live XLA:CPU executable holds mmap'd code pages, and the kernel
+    caps mappings per process (``vm.max_map_count``, 65530 by default).
+    The suite compiles enough distinct programs that keeping them ALL
+    alive walks the process into the cap and the next compile segfaults
+    inside XLA — deterministically, hundreds of tests after the cause.
+    Clearing per module bounds the peak at the largest single module
+    while keeping intra-module cache reuse (where nearly all hits are).
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

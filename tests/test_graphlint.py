@@ -284,11 +284,17 @@ GOOD_G005 = """\
 from repro.graph.semiring import Semiring
 
 BFS = Semiring(name="bfs", reduce="min", identity=1.0,
-               source_value=0.0, combine="add")
+               source_value=0.0, combine="add_unit")
+SSSP = Semiring(name="sssp", reduce="min", identity=1.0,
+                source_value=0.0, combine="add")
 SSWP = Semiring(name="sswp", reduce="max", identity=0.0,
                 source_value=1.0, combine="min")
+SSNP = Semiring(name="ssnp", reduce="min", identity=1.0,
+                source_value=0.0, combine="max")
+VITERBI = Semiring(name="viterbi", reduce="max", identity=0.0,
+                   source_value=1.0, combine="mul")
 
-ALL_SEMIRINGS = {s.name: s for s in (BFS, SSWP)}
+ALL_SEMIRINGS = {s.name: s for s in (BFS, SSSP, SSWP, SSNP, VITERBI)}
 """
 
 
@@ -545,6 +551,92 @@ def test_g009_canonical_module_exempt_for_cache_writes(tmp_path):
                         rules=[get_rule("G009")]) == []
 
 
+# -- G010: fused-launch discipline --------------------------------------------
+
+BAD_G010 = """\
+from repro.graph.engine import relax_sweep_fused, run_to_fixpoint
+
+def hand_rolled_chunk(semiring, n, values, parent, frontier, blocks):
+    return relax_sweep_fused(semiring, n, values, parent, frontier, blocks,
+                             k=4)
+
+def hardcoded_knob(view, semiring, source):
+    return run_to_fixpoint(view, semiring, source, fused_k=8)
+"""
+
+GOOD_G010 = """\
+from repro.graph.engine import run_to_fixpoint
+
+def launch(view, semiring, source, options):
+    return run_to_fixpoint(view, semiring, source,
+                           fused_k=options.fused_k)
+
+def launch_threaded(view, semiring, source, fused_k):
+    return run_to_fixpoint(view, semiring, source, fused_k=fused_k)
+"""
+
+
+def test_g010_bad(tmp_path):
+    # a direct fused-chunk launch + a literal fused_k at a call site
+    findings = lint_snippet(tmp_path, BAD_G010,
+                            relpath="src/repro/core/executor.py")
+    assert_only_rule(findings, "G010", count=2)
+    messages = " | ".join(f.message for f in findings)
+    assert "launch option" in messages
+    assert "fused_k=8" in messages
+
+
+def test_g010_good(tmp_path):
+    assert lint_snippet(tmp_path, GOOD_G010,
+                        relpath="src/repro/core/executor.py") == []
+
+
+def test_g010_stability_module_may_call_fused(tmp_path):
+    # the seed sweep (k=1 fused chunk) is stability's sanctioned call —
+    # but k= is not the fused_k knob, so only the call-site grant matters
+    code = ("from repro.graph.engine import relax_sweep_fused\n"
+            "def seed_state(semiring, n, values, parent, frontier, blocks):\n"
+            "    return relax_sweep_fused(semiring, n, values, parent,\n"
+            "                             frontier, blocks, k=1)\n")
+    assert lint_snippet(tmp_path, code,
+                        relpath="src/repro/graph/stability.py",
+                        rules=[get_rule("G010")]) == []
+
+
+def test_g010_engine_fixpoint_exempt(tmp_path):
+    # _fixpoint's chunked body consumes fused chunks; a fused launch
+    # anywhere else in the engine module is still flagged.
+    code = ("def relax_sweep_fused(semiring, n, values, parent, frontier,\n"
+            "                      blocks, k=1):\n"
+            "    '''the fused chunk primitive itself'''\n"
+            "    return values\n"
+            "def _fixpoint(semiring, n, values, parent, frontier, blocks,\n"
+            "              fused_k=1):\n"
+            "    def chunk(carry):\n"
+            "        return relax_sweep_fused(semiring, n, *carry, blocks,\n"
+            "                                 k=fused_k)\n"
+            "    return chunk\n"
+            "def rogue(semiring, n, values, parent, frontier, blocks):\n"
+            "    return relax_sweep_fused(semiring, n, values, parent,\n"
+            "                             frontier, blocks, k=2)\n")
+    findings = lint_snippet(tmp_path, code,
+                            relpath="src/repro/graph/engine.py",
+                            rules=[get_rule("G010")])
+    assert_only_rule(findings, "G010", count=1)
+    assert findings[0].line > 10  # only the rogue launch, not _fixpoint's
+
+
+def test_g010_engine_module_may_default_the_knob(tmp_path):
+    # engine plumbing forwards fused_k between its own entry points; the
+    # literal-knob check applies outside the engine module only.
+    code = ("def run_to_fixpoint(view, semiring, source, fused_k=1):\n"
+            "    '''doc'''\n"
+            "    return _fixpoint_jit(view, semiring, source, fused_k=1)\n")
+    assert lint_snippet(tmp_path, code,
+                        relpath="src/repro/graph/engine.py",
+                        rules=[get_rule("G010")]) == []
+
+
 # -- suppressions, engine plumbing, CLI --------------------------------------
 
 def test_line_suppression(tmp_path):
@@ -570,7 +662,7 @@ def test_suppression_is_per_rule(tmp_path):
 def test_rule_registry_complete():
     assert [r.id for r in all_rules()] == \
         ["G001", "G002", "G003", "G004", "G005", "G006", "G007", "G008",
-         "G009"]
+         "G009", "G010"]
     for rule in all_rules():
         assert rule.title and rule.contract
     with pytest.raises(KeyError):

@@ -1,0 +1,370 @@
+"""Kernel differential-test harness: kernels vs jnp oracles, bit-exact.
+
+Every pallas kernel ships with a pure-jnp ``ref.py`` oracle; this suite is
+the differential gate that the kernels are BIT-IDENTICAL to their oracles —
+not merely close — across fuzzed edge sets (duplicate dsts, all-padding
+blocks, empty frontiers, single-node graphs, identity-valued weights) and
+all five registered semirings, in two execution modes:
+
+* ``interpret`` — the pallas interpret-mode kernel dispatched through the
+  normal jit path (how the engine runs it on this CPU-only container);
+* ``lowered`` — the same kernel explicitly AOT-lowered and compiled to a
+  CPU executable (``jitted.lower(...).compile()``) — the closest this
+  container gets to the real-device launch pipeline.
+
+``KERNEL_DIFF_MODE`` selects ``interpret`` / ``lowered`` / ``all``
+(default); CI runs one matrix leg per mode. The reusable comparator is
+:func:`assert_kernel_matches_ref`.
+
+The fused multi-sweep kernel additionally carries the engine contract:
+``relax_sweep_fused(k)`` (both the reference while-loop and the pallas
+path) must equal ``k`` sequential ``relax_sweep`` applications — values,
+parents, frontier, sweep count and edge work — including early exit when
+the frontier empties mid-chunk, and ``run_to_fixpoint`` must be invariant
+in ``fused_k``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.edgeset import EdgeView, make_block
+from repro.graph.engine import relax_sweep, relax_sweep_fused, run_to_fixpoint
+from repro.graph.semiring import ALL_SEMIRINGS
+from repro.kernels import edge_relax, relax_multi, segment_reduce
+from repro.kernels.edge_relax.edge_relax import (
+    BLOCK_E,
+    KERNEL_OP_FOR,
+    SEMIRING_OPS,
+    UnsupportedSemiring,
+    edge_relax_pallas,
+    ops_for,
+)
+from repro.kernels.edge_relax.ref import edge_relax_ref
+from repro.kernels.edge_relax_multi import relax_multi_ref
+from repro.kernels.edge_relax_multi.edge_relax_multi import relax_multi_pallas
+from repro.kernels.segment_reduce.segment_reduce import segment_reduce_pallas
+from repro.kernels.segment_reduce.ref import segment_reduce_ref
+
+_MODE = os.environ.get("KERNEL_DIFF_MODE", "all")
+MODES = ("interpret", "lowered") if _MODE == "all" else (_MODE,)
+SEMIRINGS = sorted(ALL_SEMIRINGS)
+FUSED_KS = (1, 2, 3, 7)
+
+
+def _call(kernel_fn, args, kwargs, mode: str):
+    """Dispatch a jitted kernel wrapper through the selected execution leg."""
+    if mode == "interpret":
+        return kernel_fn(*args, **kwargs)
+    if mode == "lowered":
+        compiled = kernel_fn.lower(*args, **kwargs).compile()
+        return compiled(*args)
+    raise ValueError(f"unknown KERNEL_DIFF_MODE leg {mode!r}")
+
+
+def assert_kernel_matches_ref(kernel_fn, ref_fn, args, kwargs=None, *,
+                              mode: str, ref_kwargs=None):
+    """Run kernel and oracle on identical inputs; assert bit-equality.
+
+    The kernel runs through the selected execution leg; the oracle runs
+    plain. Outputs are compared leaf-by-leaf with assert_array_equal — no
+    tolerance: min/max/scatter semiring reductions are order-invariant, so
+    any ULP of drift is a real kernel bug. Returns the kernel output.
+    """
+    kwargs = dict(kwargs or {})
+    got = _call(kernel_fn, args, kwargs, mode)
+    ref = ref_fn(*args, **(kwargs if ref_kwargs is None else ref_kwargs))
+    got_leaves = jax.tree_util.tree_leaves(got)
+    ref_leaves = jax.tree_util.tree_leaves(ref)
+    assert len(got_leaves) == len(ref_leaves), (got, ref)
+    for i, (g, r) in enumerate(zip(got_leaves, ref_leaves)):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(r),
+            err_msg=f"kernel/ref leaf {i} diverged (mode={mode})")
+    return got
+
+
+def _edges(n, e, seed, *, dup_heavy=False, unit_w=False):
+    """A fuzzed edge set; dup_heavy funnels dsts into few targets."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, max(1, n // 8) if dup_heavy else n, e).astype(
+        np.int32)
+    w = (np.ones(e, np.float32) if unit_w
+         else (rng.random(e) + 0.01).astype(np.float32))
+    return jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+
+
+def _mixed_values(sr, n, seed):
+    """Converged-looking values: a mix of reached vertices and identity."""
+    rng = np.random.default_rng(seed + 7)
+    vals = (rng.random(n) * 4 + 0.5).astype(np.float32)
+    vals[rng.random(n) < 0.3] = np.float32(sr.identity)
+    vals[0] = np.float32(sr.source_value)
+    return jnp.asarray(vals)
+
+
+def _state(sr, n, seed, *, frontier="mixed"):
+    """(values, parent, frontier) triple for the fused-kernel inputs."""
+    rng = np.random.default_rng(seed + 13)
+    values = _mixed_values(sr, n, seed)
+    parent = jnp.asarray(rng.integers(-1, n, n).astype(np.int32))
+    if frontier == "empty":
+        fro = jnp.zeros((n,), bool)
+    elif frontier == "source":
+        fro = jnp.zeros((n,), bool).at[0].set(True)
+    else:
+        fro = jnp.asarray(rng.random(n) < 0.4)
+    return values, parent, fro
+
+
+# -- registry completeness: the kernel semiring surface -----------------------
+
+
+def test_kernel_semiring_registry_complete():
+    """Every registered semiring has a kernel op; unknown ops fail loud."""
+    assert set(KERNEL_OP_FOR) == set(ALL_SEMIRINGS)
+    assert set(KERNEL_OP_FOR.values()) <= set(SEMIRING_OPS)
+    for op in SEMIRING_OPS:
+        combine, reduce, ident = ops_for(op)
+        assert callable(combine) and reduce in ("min", "max")
+    with pytest.raises(UnsupportedSemiring, match="softmin"):
+        ops_for("softmin")
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_kernel_ops_agree_with_semiring(name):
+    """The kernel-side (combine, reduce, identity) matches the Semiring."""
+    sr = ALL_SEMIRINGS[name]
+    combine, reduce, ident = ops_for(KERNEL_OP_FOR[name])
+    assert reduce == sr.reduce
+    assert float(ident) == float(sr.identity) or (
+        np.isinf(ident) and np.isinf(sr.identity)
+        and np.sign(ident) == np.sign(sr.identity))
+    v = jnp.float32(2.5)
+    w = jnp.float32(0.75)
+    np.testing.assert_array_equal(np.float32(combine(v, w)),
+                                  np.float32(sr.combine(v, w)))
+
+
+# -- negative tests: block misalignment fails loud, not silently --------------
+
+
+def test_edge_relax_pallas_rejects_misaligned_edge_count():
+    n, e = 8, 5
+    values = jnp.zeros((n,), jnp.float32)
+    src = jnp.zeros((e,), jnp.int32)
+    dst = jnp.full((e,), n, jnp.int32)
+    w = jnp.ones((e,), jnp.float32)
+    with pytest.raises(ValueError, match=rf"edge count {e}.*{BLOCK_E}"):
+        edge_relax_pallas(values, src, dst, w, op="min_plus", num_nodes=n)
+
+
+def test_segment_reduce_pallas_rejects_misaligned_message_count():
+    data = jnp.zeros((3, 4), jnp.float32)
+    seg = jnp.zeros((3,), jnp.int32)
+    with pytest.raises(ValueError, match=r"edge count 3.*BLOCK_E"):
+        segment_reduce_pallas(data, seg, num_segments=4, reduce="sum")
+
+
+def test_relax_multi_pallas_rejects_misaligned_and_bad_k():
+    n, e = 4, 7
+    values, parent, frontier = _state(ALL_SEMIRINGS["sssp"], n, 0)
+    src = jnp.zeros((e,), jnp.int32)
+    dst = jnp.full((e,), n, jnp.int32)
+    w = jnp.ones((e,), jnp.float32)
+    with pytest.raises(ValueError, match=rf"edge count {e}"):
+        relax_multi_pallas(values, parent, frontier, src, dst, w,
+                           jnp.int32(1), op="min_plus", num_nodes=n, k=1)
+    ok = jnp.zeros((BLOCK_E,), jnp.int32)
+    with pytest.raises(ValueError, match=r"k"):
+        relax_multi_pallas(values, parent, frontier, ok,
+                           jnp.full((BLOCK_E,), n, jnp.int32),
+                           jnp.ones((BLOCK_E,), jnp.float32),
+                           jnp.int32(0), op="min_plus", num_nodes=n, k=0)
+
+
+# -- single-hop kernels vs oracles, fuzzed ------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@given(n=st.integers(1, 200), e=st.integers(1, 1500), seed=st.integers(0, 99),
+       dup=st.booleans(), unit_w=st.booleans())
+@settings(max_examples=4, deadline=None)
+def test_edge_relax_matches_ref_fuzzed(mode, n, e, seed, dup, unit_w):
+    src, dst, w = _edges(n, e, seed, dup_heavy=dup, unit_w=unit_w)
+    for name in SEMIRINGS:
+        values = _mixed_values(ALL_SEMIRINGS[name], n, seed)
+        assert_kernel_matches_ref(
+            edge_relax, edge_relax_ref, (values, src, dst, w),
+            dict(op=KERNEL_OP_FOR[name], num_nodes=n), mode=mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@given(n=st.integers(1, 120), e=st.integers(1, 1200), d=st.integers(1, 24),
+       seed=st.integers(0, 99), red=st.sampled_from(["sum", "min", "max"]))
+@settings(max_examples=4, deadline=None)
+def test_segment_reduce_matches_ref_fuzzed(mode, n, e, d, seed, red):
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(rng.standard_normal((e, d)).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+    assert_kernel_matches_ref(
+        segment_reduce, segment_reduce_ref, (data, seg),
+        dict(num_segments=n, reduce=red), mode=mode)
+
+
+def test_edge_relax_all_padding_block(mode=MODES[0]):
+    """Sentinel dst == n must never contaminate real nodes (any semiring)."""
+    n = 16
+    src = jnp.zeros((BLOCK_E,), jnp.int32)
+    dst = jnp.full((BLOCK_E,), n, jnp.int32)
+    w = jnp.ones((BLOCK_E,), jnp.float32)
+    for name in SEMIRINGS:
+        sr = ALL_SEMIRINGS[name]
+        values = _mixed_values(sr, n, 3)
+        got = assert_kernel_matches_ref(
+            edge_relax, edge_relax_ref, (values, src, dst, w),
+            dict(op=KERNEL_OP_FOR[name], num_nodes=n), mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.full(n, np.float32(sr.identity)))
+
+
+# -- the fused multi-sweep kernel vs its oracle, fuzzed -----------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("name", SEMIRINGS)
+@given(n=st.integers(1, 150), e=st.integers(0, 1200), seed=st.integers(0, 99),
+       k=st.sampled_from(FUSED_KS), layout=st.sampled_from(["edge", "csr"]),
+       frontier=st.sampled_from(["mixed", "empty", "source"]),
+       dup=st.booleans(), unit_w=st.booleans())
+@settings(max_examples=3, deadline=None)
+def test_relax_multi_matches_ref_fuzzed(mode, name, n, e, seed, k, layout,
+                                        frontier, dup, unit_w):
+    sr = ALL_SEMIRINGS[name]
+    src, dst, w = _edges(n, e, seed, dup_heavy=dup, unit_w=unit_w)
+    values, parent, fro = _state(sr, n, seed, frontier=frontier)
+    assert_kernel_matches_ref(
+        relax_multi, relax_multi_ref,
+        (values, parent, fro, src, dst, w),
+        dict(op=KERNEL_OP_FOR[name], num_nodes=n, k=k), mode=mode,
+        ref_kwargs=dict(op=KERNEL_OP_FOR[name], num_nodes=n, k=k))
+    # layout is a pallas-side knob the oracle has no analogue for: csr
+    # (dst-sorted segment-reduce layout) must be bit-identical to edge.
+    if layout == "csr":
+        base = dict(op=KERNEL_OP_FOR[name], num_nodes=n, k=k)
+        by_edge = _call(relax_multi, (values, parent, fro, src, dst, w),
+                        base, mode)
+        by_csr = _call(relax_multi, (values, parent, fro, src, dst, w),
+                       dict(base, layout="csr"), mode)
+        for g, r in zip(by_edge, by_csr):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_relax_multi_all_padding_and_single_node(mode):
+    """e=0 pads to one all-padding block; n=1 graphs only self-loop."""
+    for name in SEMIRINGS:
+        sr = ALL_SEMIRINGS[name]
+        for n, e in ((9, 0), (1, 0), (1, 5)):
+            src, dst, w = _edges(n, e, seed=n + e)
+            values, parent, fro = _state(sr, n, seed=e)
+            assert_kernel_matches_ref(
+                relax_multi, relax_multi_ref,
+                (values, parent, fro, src, dst, w),
+                dict(op=KERNEL_OP_FOR[name], num_nodes=n, k=3), mode=mode)
+
+
+# -- engine contract: fused(k) == k sequential relax_sweep applications -------
+
+
+def _engine_fixture(sr, n=24, e=64, seed=5):
+    """A reachable graph + freshly-seeded engine state (source frontier)."""
+    rng = np.random.default_rng(seed)
+    src = np.concatenate([np.arange(n - 1), rng.integers(0, n, e)])
+    dst = np.concatenate([np.arange(1, n), rng.integers(0, n, e)])
+    w = (rng.random(src.size) + 0.01).astype(np.float32)
+    block = make_block(src.astype(np.int32), dst.astype(np.int32), w, n)
+    values = jnp.full((n,), jnp.float32(sr.identity)).at[0].set(
+        jnp.float32(sr.source_value))
+    parent = jnp.full((n,), -1, jnp.int32)
+    frontier = jnp.zeros((n,), bool).at[0].set(True)
+    return (block,), values, parent, frontier
+
+
+def _sequential_chunk(sr, n, values, parent, frontier, blocks, k):
+    """The oracle for one fused chunk: k relax_sweeps with early exit."""
+    sweeps, work = 0, np.float32(0.0)
+    for _ in range(k):
+        if not bool(np.any(np.asarray(frontier))):
+            break
+        values, parent, frontier, dw = relax_sweep(
+            sr, n, values, parent, frontier, blocks)
+        sweeps += 1
+        work = np.float32(work + np.float32(dw))
+    return values, parent, frontier, sweeps, work
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+@pytest.mark.parametrize("k", FUSED_KS)
+def test_fused_chunk_equals_k_sequential_sweeps(name, k):
+    """Both fused paths == k relax_sweeps, through convergence (early exit:
+    the path graph converges well before 7 chained chunks of k sweeps)."""
+    sr = ALL_SEMIRINGS[name]
+    n = 24
+    blocks, values, parent, frontier = _engine_fixture(sr, n=n)
+    for chunk in range(64):
+        expect = _sequential_chunk(sr, n, values, parent, frontier, blocks, k)
+        for use_pallas in (False, True):
+            got = relax_sweep_fused(sr, n, values, parent, frontier, blocks,
+                                    k=k, use_pallas=use_pallas)
+            for i, (g, r) in enumerate(zip(got, expect)):
+                np.testing.assert_array_equal(
+                    np.asarray(g), np.asarray(r),
+                    err_msg=f"fused(k={k}) leaf {i} != {k} sweeps "
+                            f"(semiring={name}, use_pallas={use_pallas})")
+        values, parent, frontier = expect[0], expect[1], expect[2]
+        if not bool(np.any(np.asarray(frontier))):
+            break
+    # ran to convergence: the final chunk observed the frontier empty
+    assert not bool(np.any(np.asarray(frontier))), "did not converge in 64"
+
+
+def test_fused_chunk_empty_frontier_is_noop():
+    """A chunk seeded with an empty frontier runs zero sweeps, zero work."""
+    sr = ALL_SEMIRINGS["sssp"]
+    n = 12
+    blocks, values, parent, _ = _engine_fixture(sr, n=n)
+    empty = jnp.zeros((n,), bool)
+    for use_pallas in (False, True):
+        vals, par, fro, sweeps, work = relax_sweep_fused(
+            sr, n, values, parent, empty, blocks, k=7,
+            use_pallas=use_pallas)
+        np.testing.assert_array_equal(np.asarray(vals), np.asarray(values))
+        np.testing.assert_array_equal(np.asarray(par), np.asarray(parent))
+        assert not bool(np.any(np.asarray(fro)))
+        assert int(sweeps) == 0 and float(work) == 0.0
+
+
+@pytest.mark.parametrize("name", SEMIRINGS)
+def test_run_to_fixpoint_invariant_in_fused_k(name):
+    """fused_k is a pure launch-shape knob: values, parents, iteration count
+    and edge work are bit-identical for every chunk size."""
+    sr = ALL_SEMIRINGS[name]
+    blocks, *_ = _engine_fixture(sr, n=32, e=90, seed=11)
+    view = EdgeView(blocks, 32)
+    base = run_to_fixpoint(view, sr, 0, track_parents=True)
+    for fk in FUSED_KS[1:]:
+        res = run_to_fixpoint(view, sr, 0, track_parents=True, fused_k=fk)
+        np.testing.assert_array_equal(np.asarray(res.values),
+                                      np.asarray(base.values))
+        np.testing.assert_array_equal(np.asarray(res.parent),
+                                      np.asarray(base.parent))
+        assert int(res.iterations) == int(base.iterations)
+        assert float(res.edge_work) == float(base.edge_work)
